@@ -1,0 +1,71 @@
+"""Fig. 9 reproduction: epochs to reach OptPerf from an even split, given a
+fixed total batch — Cannikin (2 learning epochs) vs LB-BSP (Δ=5/epoch)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, save_json, time_call
+from repro.core.baselines import EvenPartition, LBBSPPartition
+from repro.core.controller import CannikinController
+from repro.core.optperf import solve_optperf_algorithm1
+from repro.core.simulator import SimulatedCluster, cluster_A
+
+
+def _drive(policy, sim, total, epochs, steps=8):
+    times, last = [], None
+    for epoch in range(epochs):
+        if isinstance(policy, CannikinController):
+            plan = policy.plan_epoch()
+            batches = list(plan.batches)
+        else:
+            batches = policy.partition(total, epoch, last)
+        t, ms = sim.run_epoch(batches, steps)
+        last = ms[-1]
+        if isinstance(policy, CannikinController):
+            policy.observe_epoch(ms)
+        times.append(t / steps)
+    return times
+
+
+def run() -> List[Row]:
+    total = 128
+    epochs = 14
+    profiles, comm = cluster_A()
+    curves = {}
+    for name in ("cannikin", "lb-bsp", "even"):
+        sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
+        if name == "cannikin":
+            policy = CannikinController(
+                sim.n, batch_candidates=[total], ref_batch=total, adaptive=False
+            )
+        elif name == "lb-bsp":
+            policy = LBBSPPartition(sim.n, delta=5)
+        else:
+            policy = EvenPartition(sim.n)
+        curves[name] = _drive(policy, sim, total, epochs)
+    best = solve_optperf_algorithm1(
+        SimulatedCluster(profiles, comm, noise=0.0).true_model(), total
+    ).opt_perf
+
+    def epochs_to_optperf(curve, tol=0.05):
+        for i, t in enumerate(curve):
+            if t <= best * (1 + tol):
+                return i
+        return len(curve)
+
+    e_can = epochs_to_optperf(curves["cannikin"])
+    e_lb = epochs_to_optperf(curves["lb-bsp"])
+    save_json("adaptation_fig9", {"optperf_seconds": best, "curves": curves,
+                                  "epochs_to_optperf": {"cannikin": e_can, "lb-bsp": e_lb}})
+    rows = [
+        Row("fig9/epochs_to_optperf/cannikin", 0.0, f"epochs={e_can}"),
+        Row("fig9/epochs_to_optperf/lb-bsp", 0.0, f"epochs={e_lb}"),
+        Row(
+            "fig9/final_batch_time_ratio_even",
+            0.0,
+            f"{curves['even'][-1] / best:.3f}x_optperf",
+        ),
+    ]
+    return rows

@@ -1,0 +1,53 @@
+"""Table 5 reproduction: Cannikin controller overhead per epoch relative to
+the simulated epoch training time, per workload scale."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, save_json
+from repro.core.controller import CannikinController
+from repro.core.simulator import SimulatedCluster, cluster_B
+from benchmarks.bench_batchtime import WORKLOADS
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    payload = {}
+    for wl, (cscale, mscale) in WORKLOADS.items():
+        profiles, comm = cluster_B(
+            workload_scale=cscale, t_o=0.045 * mscale, t_u=0.009 * mscale
+        )
+        sim = SimulatedCluster(profiles, comm, noise=0.01, seed=0)
+        ctrl = CannikinController(
+            sim.n,
+            batch_candidates=[128, 256, 512, 1024, 2048, 4096],
+            ref_batch=128,
+        )
+        steps_per_epoch = 40
+        sim_total = 0.0
+        for _ in range(8):
+            plan = ctrl.plan_epoch()
+            t, ms = sim.run_epoch(list(plan.batches), steps_per_epoch)
+            sim_total += t
+            ctrl.observe_epoch(ms)
+            ctrl.observe_gradients([4.0] * sim.n, 3.0, list(plan.batches))
+        frac = ctrl.stats.overhead_fraction(sim_total)
+        payload[wl] = {
+            "controller_seconds": ctrl.stats.overhead_seconds,
+            "sim_train_seconds": sim_total,
+            "overhead_fraction": frac,
+            "full_sweeps": ctrl.stats.full_sweeps,
+            "incremental_updates": ctrl.stats.incremental_updates,
+        }
+        rows.append(
+            Row(
+                f"table5/{wl}",
+                ctrl.stats.overhead_seconds / 8 * 1e6,
+                f"overhead={frac:.2%}",
+            )
+        )
+    save_json("overhead_table5", payload)
+    return rows

@@ -1,0 +1,76 @@
+"""§5.3 reproduction: OptPerf prediction error with and without
+inverse-variance weighting of gamma, under heteroscedastic measurement noise
+(Fig. 6's per-GPU gamma noise)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, save_json
+from repro.core.optperf import solve_optperf_algorithm1
+from repro.core.perf_model import (
+    ClusterPerfModel,
+    CommModel,
+    GammaAggregator,
+    NodeObservation,
+    OnlineNodeFitter,
+)
+from repro.core.simulator import SimulatedCluster, cluster_A
+
+
+def learn(sim, epochs=6, steps=6, use_ivw=True, seed=0):
+    rng = np.random.default_rng(seed)
+    fitters = {i: OnlineNodeFitter() for i in range(sim.n)}
+    for _ in range(epochs):
+        batches = [int(rng.integers(8, 96)) for _ in range(sim.n)]
+        _, ms = sim.run_epoch(batches, steps)
+        for i in range(sim.n):
+            obs = [m.observations[i] for m in ms]
+            fitters[i].add(
+                NodeObservation(
+                    batch_size=batches[i],
+                    a_time=float(np.mean([o.a_time for o in obs])),
+                    backprop_time=float(np.mean([o.backprop_time for o in obs])),
+                    gamma=float(np.mean([o.gamma for o in obs])),
+                    comm_time=float(np.min([o.comm_time for o in obs])),
+                )
+            )
+    agg = GammaAggregator(fitters)
+    if use_ivw:
+        gamma = agg.gamma()
+    else:
+        gamma = float(np.mean([f.gamma_stats()[0] for f in fitters.values()]))
+    return ClusterPerfModel(
+        nodes=tuple(fitters[i].fit() for i in range(sim.n)),
+        comm=CommModel(t_o=sim.comm.t_o, t_u=sim.comm.t_u, gamma=gamma),
+    )
+
+
+def run() -> List[Row]:
+    profiles, comm = cluster_A()
+    errors = {"ivw": [], "plain": []}
+    for seed in range(8):
+        # Strongly heteroscedastic gamma noise across nodes (Fig. 6).
+        sim = SimulatedCluster(
+            profiles, comm, noise=0.03,
+            per_node_gamma_noise=[0.02, 0.25, 0.45], seed=seed,
+        )
+        truth = sim.true_model()
+        for use_ivw in (True, False):
+            model = learn(sim, use_ivw=use_ivw, seed=seed)
+            errs = []
+            for B in (64, 128, 256, 512):
+                pred = solve_optperf_algorithm1(model, B)
+                actual = truth.cluster_time(list(pred.batches))
+                errs.append(abs(pred.opt_perf - actual) / actual)
+            errors["ivw" if use_ivw else "plain"].append(max(errs))
+    max_ivw = float(np.max(errors["ivw"]))
+    max_plain = float(np.max(errors["plain"]))
+    save_json("prediction_error", {"max_error_ivw": max_ivw,
+                                   "max_error_plain": max_plain,
+                                   "per_seed": errors})
+    return [
+        Row("prediction/max_error_with_ivw", 0.0, f"{max_ivw:.1%}"),
+        Row("prediction/max_error_without_ivw", 0.0, f"{max_plain:.1%}"),
+    ]

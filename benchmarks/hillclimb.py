@@ -1,0 +1,217 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing harness: lower+compile one (arch x shape) pair under a
+named variant, record the roofline terms, and append to the iteration log.
+
+Run each variant in a FRESH process (device count is locked at jax init):
+
+  PYTHONPATH=src:. python -m benchmarks.hillclimb --arch deepseek-v2-236b \
+      --shape train_4k --variant ep_experts
+
+Variants are small, surgical configuration changes (sharding axis, chunk
+size, optimizer-state sharding, microbatch count) — the §Perf methodology's
+"candidate changes".  Results: artifacts/perf/<arch>__<shape>__<variant>.json
+"""
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.configs import SHAPES, get_api
+from repro.launch import dryrun as dr
+from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.sharding.context import sharding_context
+
+ARTDIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                      "artifacts", "perf")
+
+
+def apply_variant(name: str, api, rules, mesh_kind: str):
+    """Mutates api.cfg / rules / launch knobs per variant; returns notes.
+    Compound variants compose with "+": e.g. "ep_experts+kvchunk2048"."""
+    import dataclasses
+
+    if "+" in name:
+        notes = {}
+        for part in name.split("+"):
+            api, rules, n = apply_variant(part, api, rules, mesh_kind)
+            for k, v in n.items():
+                notes[k] = (notes.get(k, "") + " | " + str(v)) if k == "change" and k in notes else v
+        return api, rules, notes
+
+    notes = {}
+    if name == "baseline":
+        return api, rules, notes
+    if name == "kvchunk2048":
+        api = dataclasses.replace(api, cfg=dataclasses.replace(api.cfg, kv_chunk=2048))
+        notes["change"] = "attention kv-chunk 512 -> 2048 (4x fewer acc re-streams)"
+        return api, rules, notes
+    if name == "kvchunk4096":
+        api = dataclasses.replace(api, cfg=dataclasses.replace(api.cfg, kv_chunk=4096))
+        notes["change"] = "attention kv-chunk 512 -> 4096"
+        return api, rules, notes
+    if name == "zero1":
+        notes["change"] = "optimizer moments + f32 accum sharded over data (ZeRO-1)"
+        notes["opt_zero1"] = True
+        return api, rules, notes
+    if name == "ep_experts":
+        rules = dataclasses.replace(rules, experts_axis="model", fallbacks=[])
+        notes["change"] = (
+            "expert-parallel: experts sharded over model axis; expert weights "
+            "(E@model, d, ff); dispatch crosses model instead of re-sharding "
+            "capacity over data"
+        )
+        return api, rules, notes
+    if name == "mb8":
+        notes["change"] = "microbatches 16 -> 8"
+        notes["microbatches"] = 8
+        return api, rules, notes
+    if name == "mb32":
+        notes["change"] = "microbatches 16 -> 32"
+        notes["microbatches"] = 32
+        return api, rules, notes
+    if name == "cap1.0":
+        import repro.models.deepseek  # noqa
+        api = dataclasses.replace(
+            api, cfg=dataclasses.replace(api.cfg, capacity_factor=1.0)
+        )
+        notes["change"] = "MoE capacity factor 1.25 -> 1.0"
+        return api, rules, notes
+    if name in ("ssmchunk32", "ssmchunk128"):
+        import dataclasses as dc
+        c = int(name.replace("ssmchunk", ""))
+        api = dc.replace(api, cfg=dc.replace(api.cfg, ssm_chunk=c))
+        notes["change"] = f"selective-scan chunk 64 -> {c}"
+        return api, rules, notes
+    if name == "wkvchunk64":
+        import dataclasses as dc
+        api = dc.replace(api, cfg=dc.replace(api.cfg, wkv_chunk=64))
+        notes["change"] = "WKV chunk 32 -> 64"
+        return api, rules, notes
+    if name == "no_moe_constrain":
+        from repro.models import moe as _m
+        _m.CONSTRAIN_DISPATCH = False
+        notes["change"] = "drop expert-buffer sharding constraints (GSPMD chooses)"
+        return api, rules, notes
+    if name == "gqa_repeat":
+        from repro.models import common as _c
+        _c.GQA_REPEAT = True
+        notes["change"] = "repeat KV to full heads before scores (keeps head sharding)"
+        return api, rules, notes
+    if name == "fsdp":
+        import dataclasses as dc
+        rules = dc.replace(rules, fsdp_axis="data", fallbacks=[])
+        notes["change"] = "FSDP: d_model dim of large params sharded over data"
+        return api, rules, notes
+    if name == "mb4":
+        notes["change"] = "microbatches -> 4"
+        notes["microbatches"] = 4
+        return api, rules, notes
+    if name == "mb2":
+        notes["change"] = "microbatches -> 2"
+        notes["microbatches"] = 2
+        return api, rules, notes
+    if name == "cache_model_only":
+        rules = dataclasses.replace(rules, cache_seq_axes=("model",), fallbacks=[])
+        notes["change"] = "decode cache seq sharded over model only (not data)"
+        return api, rules, notes
+    if name == "cache_data_only":
+        rules = dataclasses.replace(rules, cache_seq_axes=("data",), fallbacks=[])
+        notes["change"] = "decode cache seq sharded over data only"
+        return api, rules, notes
+    raise ValueError(f"unknown variant {name!r}")
+
+
+def run_pair(arch: str, shape_name: str, variant: str, mesh_kind: str = "single") -> Dict:
+    shape = SHAPES[shape_name]
+    api = get_api(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = make_rules(mesh, arch, kind=shape.kind, global_batch=shape.global_batch)
+    api, rules, notes = apply_variant(variant, api, rules, mesh_kind)
+
+    # Optional launch-knob overrides.
+    if "microbatches" in notes:
+        dr_mb = dr.train_microbatches
+        dr.train_microbatches = lambda a: notes["microbatches"]  # type: ignore
+    if notes.get("opt_zero1"):
+        orig_opt_specs = dr._opt_specs
+
+        def zero1_specs(opt_sds, pspecs):
+            from jax.sharding import PartitionSpec as P
+
+            base = orig_opt_specs(opt_sds, pspecs)
+
+            def shard_over_data(spec, sds):
+                if not hasattr(sds, "shape") or sds.shape == ():
+                    return spec
+                parts = list(spec) + [None] * (len(sds.shape) - len(spec))
+                for i, (p, dim) in enumerate(zip(parts, sds.shape)):
+                    if p is None and dim % rules.mesh_axes["data"] == 0:
+                        parts[i] = "data"
+                        break
+                return P(*parts)
+
+            return jax.tree_util.tree_map(
+                shard_over_data, base, opt_sds,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+
+        dr._opt_specs = zero1_specs  # type: ignore
+
+    t0 = time.time()
+    fn, args, in_sh, out_sh = dr.build_dryrun(api, shape, mesh, rules)
+    with jax.set_mesh(mesh), sharding_context(mesh, rules):
+        compiled = (
+            jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            .lower(*args)
+            .compile()
+        )
+    stats = analyze_hlo(compiled.as_text())
+    mem = dr._memory_analysis_dict(compiled)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "notes": notes,
+        "compile_seconds": round(time.time() - t0, 1),
+        "hlo": stats.as_dict(),
+        "memory": mem,
+        "terms": {
+            "compute_s": stats.flops / PEAK_FLOPS,
+            "memory_s": stats.bytes_accessed / HBM_BW,
+            "collective_s": stats.collective_bytes / ICI_BW,
+        },
+    }
+    os.makedirs(ARTDIR, exist_ok=True)
+    out = os.path.join(ARTDIR, f"{arch}__{shape_name}__{variant}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    t = rec["terms"]
+    print(
+        f"[{variant:16s}] {arch} {shape_name}: compute={t['compute_s']:.3e}s "
+        f"memory={t['memory_s']:.3e}s collective={t['collective_s']:.3e}s "
+        f"(compile {rec['compile_seconds']}s)",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    run_pair(args.arch, args.shape, args.variant, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

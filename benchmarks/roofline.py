@@ -1,0 +1,166 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+For every (arch x shape) on the single-pod mesh (256 x TPU v5e):
+
+  compute term    = per-device matmul+vector FLOPs / 197 TFLOP/s (bf16)
+  memory term     = per-device HBM bytes accessed / 819 GB/s
+  collective term = per-device collective bytes / 50 GB/s (per-link ICI)
+
+All per-device numbers are trip-count-corrected from the optimized HLO
+(launch/hlo_stats.py) — XLA's cost_analysis counts while bodies once, which
+undercounts scan-over-layers programs by ~L x microbatches (documented in
+EXPERIMENTS.md).  MODEL_FLOPS uses 6*N_active*D for training (2x fwd + 4x
+bwd), 2*N_active*D for prefill/decode forward-only, giving the
+useful-compute ratio (remat + attention + dispatch overhead show up here).
+
+Output: a markdown + json table and, per pair, the dominant bottleneck and a
+one-line "what would move it" note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import ARTIFACTS, Row, save_json
+
+PEAK_FLOPS = 197e12     # TPU v5e bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+_ACTIVE_CACHE: Dict[str, int] = {}
+
+
+def _active_params(arch: str) -> int:
+    if arch not in _ACTIVE_CACHE:
+        from repro.configs import get_api
+
+        _ACTIVE_CACHE[arch] = get_api(arch).active_param_count()
+    return _ACTIVE_CACHE[arch]
+
+
+def model_flops(arch: str, shape_name: str, kind: str, seq: int, batch: int) -> float:
+    n = _active_params(arch)
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * batch
+
+
+SHAPE_META = {
+    "train_4k": ("train", 4096, 256),
+    "prefill_32k": ("prefill", 32768, 32),
+    "decode_32k": ("decode", 32768, 128),
+    "long_500k": ("decode", 524288, 1),
+}
+
+
+def _advice(dominant: str, rec: Dict) -> str:
+    kind = rec["kind"]
+    by_kind = rec["hlo"].get("collective_by_kind", {})
+    biggest_coll = max(by_kind, key=by_kind.get) if by_kind else "none"
+    if dominant == "collective":
+        return (
+            f"dominated by {biggest_coll}; reduce TP activation traffic "
+            "(reduce-scatter/sequence-sharding instead of all-reduce, or a "
+            "narrower model axis for this size)"
+        )
+    if dominant == "memory":
+        if kind == "decode":
+            return "HBM-bound on KV/state streaming: shrink cache dtype or shard cache wider"
+        return "HBM-bound: increase arithmetic intensity (larger microbatch, fuse optimizer)"
+    return "compute-bound: already MXU-limited; gains only from removing redundant FLOPs (remat policy, causal-skip attention)"
+
+
+def analyze(record: Dict) -> Optional[Dict]:
+    if record.get("status") != "ok":
+        return None
+    hlo = record["hlo"]
+    kind, seq, batch = SHAPE_META[record["shape"]]
+    chips = record["n_devices"]
+    compute_t = hlo["flops"] / PEAK_FLOPS
+    memory_t = hlo["bytes_accessed"] / HBM_BW
+    collective_t = hlo["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": collective_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(record["arch"], record["shape"], kind, seq, batch)
+    hlo_flops_global = hlo["matmul_flops"] * chips
+    useful = mf / hlo_flops_global if hlo_flops_global else 0.0
+    bound = max(terms.values())
+    return {
+        "arch": record["arch"],
+        "shape": record["shape"],
+        "mesh": record["mesh"],
+        "kind": kind,
+        "chips": chips,
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": useful,
+        "advice": _advice(dominant, record),
+        "collective_by_kind": hlo.get("collective_by_kind", {}),
+        "fallbacks": record.get("fallbacks", ""),
+    }
+
+
+def load_all(dryrun_dir: Optional[str] = None) -> List[Dict]:
+    dryrun_dir = dryrun_dir or os.path.join(ARTIFACTS, "dryrun")
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze(rec)
+        if row:
+            out.append(row)
+    return out
+
+
+def markdown_table(rows: List[Dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful (6ND/HLO) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> List[Row]:
+    rows = load_all()
+    if not rows:
+        return [Row("roofline/missing", 0.0, "run launch/dryrun first")]
+    save_json("roofline", rows)
+    md = markdown_table(rows, "single")
+    with open(os.path.join(ARTIFACTS, "roofline_single_pod.md"), "w") as f:
+        f.write(md + "\n")
+    out: List[Row] = []
+    singles = [r for r in rows if r["mesh"] == "single"]
+    by_dom = {}
+    for r in singles:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    for dom, group in sorted(by_dom.items()):
+        out.append(Row(f"roofline/dominant/{dom}", 0.0, f"count={len(group)}"))
+    worst = min(singles, key=lambda r: r["useful_ratio"])
+    out.append(
+        Row(
+            "roofline/worst_useful_ratio",
+            0.0,
+            f"{worst['arch']}/{worst['shape']}={worst['useful_ratio']:.3f}",
+        )
+    )
+    return out

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes JSON payloads under
+artifacts/bench/.
+
+  bench_solver       — Algorithm 1 / water-fill micro-bench (O((n+1)^3) claim)
+  bench_adaptation   — Fig. 9: epochs to reach OptPerf (Cannikin vs LB-BSP)
+  bench_batchtime    — Fig. 10: batch time vs total batch size, 5 workloads
+  bench_convergence  — Fig. 7/8 + Fig. 5: normalized convergence time
+  bench_prediction   — §5.3: OptPerf prediction error, IVW vs plain gamma
+  bench_overhead     — Table 5: controller overhead per epoch
+  bench_kernels      — Pallas kernels (interpret-mode timing + allclose)
+  roofline           — §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_adaptation,
+        bench_batchtime,
+        bench_convergence,
+        bench_kernels,
+        bench_overhead,
+        bench_prediction,
+        bench_solver,
+        roofline,
+    )
+
+    modules = [
+        ("solver", bench_solver),
+        ("adaptation", bench_adaptation),
+        ("batchtime", bench_batchtime),
+        ("convergence", bench_convergence),
+        ("prediction", bench_prediction),
+        ("overhead", bench_overhead),
+        ("kernels", bench_kernels),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

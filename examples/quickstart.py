@@ -1,0 +1,64 @@
+"""Quickstart: train a reduced llama3-family model on synthetic data.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Uses the public API end to end: config -> ModelApi -> train step -> loss
+curve -> checkpoint save/restore -> greedy decode with the KV cache.
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_api
+from repro.data import SyntheticLM
+from repro.optim import adamw, cosine_schedule
+from repro.train import restore, save
+from repro.train.step import build_train_step
+
+
+def main():
+    api = get_api("llama3-8b", reduced=True)
+    print(f"arch={api.arch_id} (reduced) params={api.param_count():,}")
+
+    opt = adamw(cosine_schedule(3e-3, warmup_steps=5, total_steps=60))
+    step = jax.jit(build_train_step(api, opt))
+    params = api.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    data = SyntheticLM(vocab=api.cfg.vocab, seq_len=32, seed=0)
+
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i, 16).items()}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if i % 10 == 0:
+            print(f"step {i:3d} loss={float(metrics['loss']):.4f} "
+                  f"grad_norm={float(metrics['grad_norm']):.3f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save(path, params)
+        params = restore(path, params)
+        print(f"checkpoint round-trip OK ({os.path.getsize(path)/1e6:.1f} MB)")
+
+    # Greedy decode 16 tokens from the trained model.
+    decode = jax.jit(api.decode_step)
+    cache = api.init_cache(batch=1, seq_len=32)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    out = []
+    for pos in range(16):
+        logits, cache = decode(params, cache, tok, jnp.int32(pos))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("greedy decode:", out)
+    # The synthetic rule is next = rule[prev]; a trained model should follow
+    # it for at least a few steps.
+    hits = sum(out[i + 1] == int(data.rule[out[i]]) for i in range(len(out) - 1))
+    print(f"rule-following transitions: {hits}/{len(out)-1}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""whisper-large-v3 [audio] — 32L (encoder + decoder) d_model=1280 20H (MHA)
+d_ff=5120 vocab=51866 — enc-dec, conv frontend STUB [arXiv:2212.04356].
+
+`input_specs` supplies post-conv frame embeddings (B, S_enc, d_model); the
+decoder consumes text tokens of length S_enc/4.  20 heads and vocab 51866
+are not 16-divisible — replicated dims recorded by MeshRules.fallbacks.
+long_500k is SKIPPED for this arch (DESIGN.md §5).
+"""
+from repro.models.whisper import WhisperConfig
+
+ARCH_ID = "whisper-large-v3"
+
+
+def config() -> WhisperConfig:
+    return WhisperConfig(
+        name=ARCH_ID,
+        n_enc_layers=32,
+        n_dec_layers=32,
+        d_model=1280,
+        n_heads=20,
+        d_ff=5120,
+        vocab=51866,
+        head_dim=64,
+        enc_frames=1500,
+    )
+
+
+def reduced() -> WhisperConfig:
+    return WhisperConfig(
+        name=ARCH_ID + "-reduced",
+        n_enc_layers=2,
+        n_dec_layers=2,
+        d_model=128,
+        n_heads=4,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        enc_frames=64,
+        remat=False,
+    )

@@ -1,0 +1,76 @@
+"""Cannikin core: the paper's contribution as a composable library.
+
+Modules:
+  perf_model   — §3.2 per-node linear compute model + comm/overlap model,
+                 online fitting, gamma inverse-variance weighting (Eq. 12)
+  optperf      — §3.3/§4.2 OptPerf solvers (Algorithm 1 + water-fill oracle)
+  gns          — §4.4 heterogeneous gradient-noise-scale (Theorem 4.1)
+  aggregation  — §4.3 weighted gradient aggregation (Eq. 9)
+  goodput      — Pollux-style goodput + batch-size selection with caching
+  simulator    — §3.2-exact heterogeneous cluster timing simulator
+  controller   — §4.1/§4.5 Cannikin epoch controller
+  baselines    — DDP-even / AdaptDL-even / LB-BSP comparison policies
+"""
+from repro.core.aggregation import ratios, sample_weights, weighted_aggregate
+from repro.core.controller import CannikinController, EpochPlan
+from repro.core.gns import GNSState, estimate_gns, gns_update, gns_weights
+from repro.core.goodput import BatchSizeSelector, goodput, statistical_efficiency
+from repro.core.optperf import (
+    OptPerfSolution,
+    round_batches,
+    solve_optperf,
+    solve_optperf_algorithm1,
+    solve_optperf_waterfill,
+)
+from repro.core.perf_model import (
+    ClusterPerfModel,
+    CommModel,
+    NodeObservation,
+    NodePerfModel,
+    OnlineNodeFitter,
+    bootstrap_partition,
+    inverse_variance_weight,
+)
+from repro.core.simulator import (
+    GPU_CATALOG,
+    NodeProfile,
+    SimulatedCluster,
+    cluster_A,
+    cluster_B,
+    cluster_C,
+    make_cluster,
+)
+
+__all__ = [
+    "CannikinController",
+    "EpochPlan",
+    "ClusterPerfModel",
+    "CommModel",
+    "NodePerfModel",
+    "NodeObservation",
+    "OnlineNodeFitter",
+    "OptPerfSolution",
+    "GNSState",
+    "BatchSizeSelector",
+    "SimulatedCluster",
+    "NodeProfile",
+    "GPU_CATALOG",
+    "solve_optperf",
+    "solve_optperf_algorithm1",
+    "solve_optperf_waterfill",
+    "round_batches",
+    "estimate_gns",
+    "gns_update",
+    "gns_weights",
+    "goodput",
+    "statistical_efficiency",
+    "ratios",
+    "sample_weights",
+    "weighted_aggregate",
+    "bootstrap_partition",
+    "inverse_variance_weight",
+    "cluster_A",
+    "cluster_B",
+    "cluster_C",
+    "make_cluster",
+]

@@ -1,0 +1,84 @@
+"""Weighted gradient aggregation for unequal local batch sizes (§4.3, Eq. 9).
+
+With heterogeneous local batches, averaging local gradients over-weights
+samples on small-batch nodes.  The unbiased aggregate is
+
+    g = sum_i r_i g_i,     r_i = b_i / B,
+
+which gives every sample identical weight — exactly the gradient a single
+worker would compute over the union batch.
+
+Two executable forms are provided:
+
+1. :func:`weighted_aggregate` — explicit pytree combination (controller /
+   simulator / per-node shard_map view).
+2. :func:`sample_weights` — the per-sample weight vector that makes a single
+   pjit'd *weighted-mean loss* over the padded global batch reproduce Eq. (9)
+   bit-for-bit.  This is the GSPMD-native realization: pad every node's shard
+   to ``b_max``, weight pads 0 and real samples 1/B, and let XLA's psum do the
+   ring all-reduce.  tests/test_aggregation.py asserts the equivalence.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ratios",
+    "weighted_aggregate",
+    "sample_weights",
+    "padded_batch_layout",
+]
+
+
+def ratios(batches: Sequence[int]) -> np.ndarray:
+    """r_i = b_i / B."""
+    b = np.asarray(batches, dtype=np.float64)
+    if np.any(b < 0) or b.sum() <= 0:
+        raise ValueError("invalid batch vector")
+    return b / b.sum()
+
+
+def weighted_aggregate(local_grads: Sequence, batches: Sequence[int]):
+    """Eq. (9): g = sum_i r_i g_i over arbitrary gradient pytrees."""
+    r = ratios(batches)
+    if len(local_grads) != len(r):
+        raise ValueError("gradient/batch count mismatch")
+
+    def combine(*leaves):
+        out = leaves[0] * r[0]
+        for w, leaf in zip(r[1:], leaves[1:]):
+            out = out + w * leaf
+        return out
+
+    return jax.tree_util.tree_map(combine, *local_grads)
+
+
+def padded_batch_layout(batches: Sequence[int]) -> Tuple[int, np.ndarray]:
+    """Given per-node batches, return (b_max, mask) where mask has shape
+    (n, b_max) with 1 for real samples and 0 for pads."""
+    b = np.asarray(batches, dtype=np.int64)
+    b_max = int(b.max())
+    n = b.size
+    mask = (np.arange(b_max)[None, :] < b[:, None]).astype(np.float32)
+    return b_max, mask
+
+
+def sample_weights(batches: Sequence[int]) -> np.ndarray:
+    """Per-sample weights over the padded (n, b_max) layout such that a
+    weighted-SUM loss  L = sum_j w_j * l_j  has gradient identical to Eq. (9)
+    where each l_j is the per-sample loss.
+
+    Each real sample gets 1/B; pads get 0.  Then
+        grad = sum_i sum_{j in node i} (1/B) grad_j
+             = sum_i (b_i/B) * (1/b_i) sum_j grad_j = sum_i r_i g_i.
+    """
+    b = np.asarray(batches, dtype=np.int64)
+    total = int(b.sum())
+    if total <= 0:
+        raise ValueError("empty batch")
+    _, mask = padded_batch_layout(batches)
+    return mask / float(total)

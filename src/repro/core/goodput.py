@@ -1,0 +1,130 @@
+"""Goodput model and total-batch-size selection (§2.2, §4.1, Pollux-style).
+
+goodput(B) = throughput(B) * efficiency(B)
+
+  * throughput(B) = B / OptPerf(B)   — samples/sec at the *optimal* hetero
+    partition for B (this is where Cannikin differs from Pollux: Pollux's
+    throughput model assumes even shards).
+  * efficiency(B) = (B_noise + B0) / (B_noise + B) — statistical efficiency
+    relative to the user's reference batch size B0 (McCandlish/Pollux).
+
+Also provides the AdaScale learning-rate gain used by the SGD workloads and
+the square-root scaling rule used by Adam-family workloads (Table 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.optperf import OptPerfSolution, solve_optperf
+from repro.core.perf_model import ClusterPerfModel
+
+__all__ = [
+    "statistical_efficiency",
+    "goodput",
+    "adascale_gain",
+    "sqrt_lr_scale",
+    "BatchSizeSelector",
+]
+
+
+def statistical_efficiency(b_noise: float, batch: float, ref_batch: float) -> float:
+    """E(B) = (B_noise + B0) / (B_noise + B); E(B0) = 1, decreasing in B."""
+    if batch <= 0 or ref_batch <= 0:
+        raise ValueError("batch sizes must be positive")
+    if not np.isfinite(b_noise):
+        return 1.0
+    b_noise = max(b_noise, 0.0)
+    return (b_noise + ref_batch) / (b_noise + batch)
+
+
+def goodput(
+    model: ClusterPerfModel,
+    batch: float,
+    b_noise: float,
+    ref_batch: float,
+    *,
+    solver: str = "algorithm1",
+    boundary_hint: Optional[int] = None,
+) -> Tuple[float, OptPerfSolution]:
+    """goodput(B) and the OptPerf partition that realizes it."""
+    sol = solve_optperf(model, batch, method=solver, boundary_hint=boundary_hint)
+    thr = batch / sol.opt_perf
+    eff = statistical_efficiency(b_noise, batch, ref_batch)
+    return thr * eff, sol
+
+
+def adascale_gain(b_noise: float, batch: float, ref_batch: float) -> float:
+    """AdaScale gain r(B): the effective number of reference-size steps one
+    big-batch step is worth;  r = (B_noise/B0 + 1) / (B_noise/B + 1) in the
+    variance-dominated regime.  Clipped to [1, B/B0]."""
+    if not np.isfinite(b_noise) or b_noise <= 0:
+        return batch / ref_batch
+    r = (b_noise / ref_batch + 1.0) / (b_noise / batch + 1.0)
+    return float(np.clip(r, 1.0, batch / ref_batch))
+
+
+def sqrt_lr_scale(batch: float, ref_batch: float) -> float:
+    """Square-root LR scaling for Adam-family optimizers (Table 4)."""
+    return float(np.sqrt(batch / ref_batch))
+
+
+@dataclasses.dataclass
+class BatchSizeSelector:
+    """Enumerates total-batch-size candidates and picks argmax goodput.
+
+    Implements the §4.5 "Total batch size selection" optimization: OptPerf is
+    batch-size-dependent but *training-progress-independent*, so after the
+    initial sweep the per-candidate OptPerf values (and their overlap
+    states) are cached; subsequent epochs only recompute the candidate that
+    wins under the updated GNS, unless its overlap state changed — then the
+    full sweep re-runs.
+    """
+
+    candidates: Tuple[int, ...]
+    ref_batch: int
+    solver: str = "algorithm1"
+    # epoch -> cache
+    _optperf_cache: Dict[int, OptPerfSolution] = dataclasses.field(default_factory=dict)
+    _state_cache: Dict[int, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
+    full_sweeps: int = 0
+    incremental_updates: int = 0
+
+    def _sweep(self, model: ClusterPerfModel) -> None:
+        self.full_sweeps += 1
+        hint: Optional[int] = None
+        for b in sorted(self.candidates):
+            sol = solve_optperf(model, b, method=self.solver, boundary_hint=hint)
+            self._optperf_cache[b] = sol
+            self._state_cache[b] = sol.bottleneck
+            # §4.5 "Overlap state searching": warm-start the next (larger)
+            # candidate from this one's boundary (count of compute nodes).
+            hint = sum(1 for s in sol.bottleneck if s == "compute")
+
+    def select(
+        self, model: ClusterPerfModel, b_noise: float
+    ) -> Tuple[int, OptPerfSolution, float]:
+        """Return (best total batch, its OptPerf solution, its goodput)."""
+        if not self._optperf_cache:
+            self._sweep(model)
+
+        def cached_goodput(b: int) -> float:
+            sol = self._optperf_cache[b]
+            eff = statistical_efficiency(b_noise, b, self.ref_batch)
+            return (b / sol.opt_perf) * eff
+
+        best = max(self.candidates, key=cached_goodput)
+        # Re-solve only the winner with fresh performance models.
+        fresh = solve_optperf(model, best, method=self.solver)
+        if fresh.bottleneck != self._state_cache.get(best):
+            # Overlap pattern changed -> cached landscape is stale: resweep.
+            self._sweep(model)
+            best = max(self.candidates, key=cached_goodput)
+            fresh = self._optperf_cache[best]
+        else:
+            self.incremental_updates += 1
+            self._optperf_cache[best] = fresh
+        eff = statistical_efficiency(b_noise, best, self.ref_batch)
+        return best, fresh, (best / fresh.opt_perf) * eff

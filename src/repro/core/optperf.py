@@ -1,0 +1,408 @@
+"""OptPerf: the optimal batch-partition / batch-time solver (§3.3, §4.2, App. A).
+
+Two solvers are provided:
+
+``solve_optperf_algorithm1``
+    Paper-faithful Algorithm 1: closed-form Check 1 (all compute-bottleneck),
+    Check 2 (all communication-bottleneck), then a binary search over the
+    bottleneck boundary for the mixed case.  O(n) per candidate boundary
+    (the "linear system" of the paper is diagonal once the partition is
+    fixed, so we solve it directly rather than with a generic O(n^3) solve).
+
+``solve_optperf_waterfill``
+    Beyond-paper oracle: the node batch time
+        T_i(b) = max(t_compute_i(b) + T_u, syncStart_i(b) + T_comm)
+    is strictly increasing in b, so for a target cluster time T each node has
+    a maximal feasible batch
+        b_i(T) = min((T - T_u - c_i)/alpha_i, (T - T_comm - d_i)/beta_i)
+    and Sum_i max(b_i(T), 0) is continuous and nondecreasing in T.  Bisection
+    on T yields the exact optimum including b_i >= 0 clamping that
+    Algorithm 1's linear solves ignore.  Used as the property-test oracle and
+    as the production solver when clamping binds.
+
+Both return an :class:`OptPerfSolution`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.perf_model import ClusterPerfModel
+
+__all__ = [
+    "OptPerfSolution",
+    "solve_optperf_algorithm1",
+    "solve_optperf_waterfill",
+    "solve_optperf",
+    "round_batches",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptPerfSolution:
+    """Solution of the OptPerf problem for one total batch size."""
+
+    total_batch: float
+    opt_perf: float                    # minimized cluster batch time (seconds)
+    batches: Tuple[float, ...]         # optimal (real-valued) local batches
+    bottleneck: Tuple[str, ...]        # per node: "compute" | "comm"
+    method: str                        # solver that produced this
+
+    @property
+    def ratios(self) -> Tuple[float, ...]:
+        return tuple(b / self.total_batch for b in self.batches)
+
+    def summary(self) -> str:
+        parts = ", ".join(
+            f"b{i}={b:.1f}({s[:4]})" for i, (b, s) in enumerate(zip(self.batches, self.bottleneck))
+        )
+        return f"OptPerf={self.opt_perf * 1e3:.3f}ms B={self.total_batch:g} [{parts}]"
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _node_time(model: ClusterPerfModel, i: int, b: float) -> float:
+    return model.node_time(i, b)
+
+
+def _bottleneck_labels(model: ClusterPerfModel, batches: Sequence[float]) -> Tuple[str, ...]:
+    return tuple(
+        "compute" if model.is_compute_bottleneck(i, b) else "comm"
+        for i, b in enumerate(batches)
+    )
+
+
+def _solve_equal_compute(model: ClusterPerfModel, total_batch: float) -> Tuple[float, List[float]]:
+    """Check 1: equalize t_compute across all nodes.  mu is the common
+    t_compute; b_i = (mu - c_i)/alpha_i."""
+    alphas = np.array([n.alpha for n in model.nodes])
+    cs = np.array([n.c for n in model.nodes])
+    inv = 1.0 / alphas
+    mu = (total_batch + (cs * inv).sum()) / inv.sum()
+    batches = (mu - cs) * inv
+    return float(mu), [float(b) for b in batches]
+
+
+def _solve_equal_syncstart(model: ClusterPerfModel, total_batch: float) -> Tuple[float, List[float]]:
+    """Check 2: equalize syncStart across all nodes."""
+    gamma = model.comm.gamma
+    betas = np.array([n.beta(gamma) for n in model.nodes])
+    ds = np.array([n.d(gamma) for n in model.nodes])
+    inv = 1.0 / betas
+    mu = (total_batch + (ds * inv).sum()) / inv.sum()
+    batches = (mu - ds) * inv
+    return float(mu), [float(b) for b in batches]
+
+
+def _solve_mixed(
+    model: ClusterPerfModel,
+    total_batch: float,
+    compute_set: Sequence[int],
+    comm_set: Sequence[int],
+) -> Tuple[float, List[float]]:
+    """Mixed case (App. A.3): compute nodes satisfy t_compute_i = mu,
+    comm nodes satisfy syncStart_i + T_o = mu; Sum b = B."""
+    gamma = model.comm.gamma
+    t_o = model.comm.t_o
+    num = total_batch
+    den = 0.0
+    for i in compute_set:
+        node = model.nodes[i]
+        num += node.c / node.alpha
+        den += 1.0 / node.alpha
+    for i in comm_set:
+        node = model.nodes[i]
+        num += (t_o + node.d(gamma)) / node.beta(gamma)
+        den += 1.0 / node.beta(gamma)
+    mu = num / den
+    batches = [0.0] * model.n
+    for i in compute_set:
+        node = model.nodes[i]
+        batches[i] = (mu - node.c) / node.alpha
+    for i in comm_set:
+        node = model.nodes[i]
+        batches[i] = (mu - t_o - node.d(gamma)) / node.beta(gamma)
+    return float(mu), batches
+
+
+def _partition_valid(
+    model: ClusterPerfModel,
+    batches: Sequence[float],
+    compute_set: Sequence[int],
+    comm_set: Sequence[int],
+) -> bool:
+    """The hypothesized overlap state must match the realized one, and all
+    batches must be physically valid (>= 0)."""
+    if min(batches) < 0:
+        return False
+    for i in compute_set:
+        if not model.is_compute_bottleneck(i, batches[i]):
+            return False
+    for i in comm_set:
+        if model.is_compute_bottleneck(i, batches[i]):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — paper-faithful
+# ---------------------------------------------------------------------------
+
+
+def solve_optperf_algorithm1(
+    model: ClusterPerfModel,
+    total_batch: float,
+    *,
+    boundary_hint: Optional[int] = None,
+) -> OptPerfSolution:
+    """Paper Algorithm 1: overlap-state determination + OptPerf configuration.
+
+    ``boundary_hint`` seeds the mixed-case search with the boundary found for a
+    neighbouring total batch size (§4.5 "Overlap state searching"): candidates
+    are probed outward from the hint, which makes the epoch-over-epoch resolve
+    O(1) boundary probes in the common case.
+    """
+    if total_batch <= 0:
+        raise ValueError("total batch must be positive")
+    model.validate()
+    n = model.n
+    gamma = model.comm.gamma
+    t_o, t_u = model.comm.t_o, model.comm.t_u
+
+    # ---- Check 1: all nodes compute-bottleneck --------------------------
+    # The paper's linear solves do not enforce b_i >= 0; with small total
+    # batches a hopeless straggler can be assigned a negative batch.  Any
+    # negative assignment invalidates the closed form and we fall through
+    # to the clamped water-fill oracle (beyond-paper robustness; recorded
+    # in EXPERIMENTS.md).
+    mu_c, batches_c = _solve_equal_compute(model, total_batch)
+    if min(batches_c) >= 0 and all(
+        (1.0 - gamma) * model.nodes[i].backprop(batches_c[i]) >= t_o for i in range(n)
+    ):
+        return OptPerfSolution(
+            total_batch=total_batch,
+            opt_perf=mu_c + t_u,
+            batches=tuple(batches_c),
+            bottleneck=("compute",) * n,
+            method="algorithm1/check1",
+        )
+
+    # ---- Check 2: all nodes communication-bottleneck --------------------
+    mu_s, batches_s = _solve_equal_syncstart(model, total_batch)
+    if min(batches_s) >= 0 and all(
+        (1.0 - gamma) * model.nodes[i].backprop(batches_s[i]) < t_o for i in range(n)
+    ):
+        return OptPerfSolution(
+            total_batch=total_batch,
+            opt_perf=mu_s + model.comm.t_comm,
+            batches=tuple(batches_s),
+            bottleneck=("comm",) * n,
+            method="algorithm1/check2",
+        )
+
+    # ---- Mixed bottleneck ------------------------------------------------
+    # Nodes that are compute-bound under BOTH checks are certainly compute-
+    # bound at the optimum; likewise for comm-bound.  The remaining
+    # "outliers" are ordered and a boundary is binary-searched (§4.2).
+    compute_certain: List[int] = []
+    comm_certain: List[int] = []
+    outliers: List[int] = []
+    for i in range(n):
+        cb1 = (1.0 - gamma) * model.nodes[i].backprop(batches_c[i]) >= t_o
+        cb2 = (1.0 - gamma) * model.nodes[i].backprop(batches_s[i]) >= t_o
+        if cb1 and cb2:
+            compute_certain.append(i)
+        elif not cb1 and not cb2:
+            comm_certain.append(i)
+        else:
+            outliers.append(i)
+
+    # Rank outliers by fixed processing time (the batch-independent part of
+    # the node time); larger fixed time => more likely comm-bottleneck.
+    def fixed_time(i: int) -> float:
+        node = model.nodes[i]
+        return node.d(gamma) + model.comm.t_comm
+
+    outliers.sort(key=fixed_time)
+
+    def try_boundary(split: int) -> Optional[Tuple[float, List[float], List[int], List[int]]]:
+        compute_set = compute_certain + outliers[:split]
+        comm_set = comm_certain + outliers[split:]
+        if not compute_set and not comm_set:
+            return None
+        mu, batches = _solve_mixed(model, total_batch, compute_set, comm_set)
+        if _partition_valid(model, batches, compute_set, comm_set):
+            return mu, batches, compute_set, comm_set
+        return None
+
+    # Probe order: hint (if any) first, then binary search, then exhaustive
+    # fallback (robustness beyond the paper; n is small so this is cheap).
+    candidates: List[int] = []
+    if boundary_hint is not None:
+        candidates.append(max(0, min(len(outliers), boundary_hint)))
+    lo, hi = 0, len(outliers)
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        candidates.append(mid)
+        # Direction: if solving with `mid` makes some hypothesized comm node
+        # actually compute-bound, we put too few nodes on the compute side.
+        compute_set = compute_certain + outliers[:mid]
+        comm_set = comm_certain + outliers[mid:]
+        mu, batches = _solve_mixed(model, total_batch, compute_set, comm_set)
+        too_few_compute = any(model.is_compute_bottleneck(i, batches[i]) for i in comm_set)
+        if too_few_compute:
+            lo = mid + 1
+        else:
+            hi = mid - 1
+    candidates.extend(range(len(outliers) + 1))
+
+    seen = set()
+    for split in candidates:
+        if split in seen:
+            continue
+        seen.add(split)
+        result = try_boundary(split)
+        if result is None:
+            continue
+        mu, batches, compute_set, comm_set = result
+        bottleneck = ["comm"] * n
+        for i in compute_set:
+            bottleneck[i] = "compute"
+        return OptPerfSolution(
+            total_batch=total_batch,
+            opt_perf=mu + t_u,
+            batches=tuple(batches),
+            bottleneck=tuple(bottleneck),
+            method=f"algorithm1/mixed(split={split})",
+        )
+
+    # No consistent partition (can happen when the unconstrained solve drives
+    # some b_i < 0): fall back to the clamped water-fill oracle.
+    return solve_optperf_waterfill(model, total_batch)
+
+
+# ---------------------------------------------------------------------------
+# Water-fill bisection — beyond-paper exact oracle
+# ---------------------------------------------------------------------------
+
+
+def _max_batch_at_time(model: ClusterPerfModel, i: int, t: float) -> float:
+    """Largest b such that node i's batch time <= t (may be negative)."""
+    node = model.nodes[i]
+    comm = model.comm
+    b_compute = (t - comm.t_u - node.c) / node.alpha
+    beta = node.beta(comm.gamma)
+    if beta <= 0.0:
+        # syncStart does not grow with b (q=0, gamma=0): the comm path never
+        # constrains the batch once t clears the fixed comm time.
+        slack = t - comm.t_comm - node.d(comm.gamma)
+        b_comm = math.inf if slack >= 0 else -math.inf
+    else:
+        b_comm = (t - comm.t_comm - node.d(comm.gamma)) / beta
+    return min(b_compute, b_comm)
+
+
+def solve_optperf_waterfill(
+    model: ClusterPerfModel,
+    total_batch: float,
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+) -> OptPerfSolution:
+    """Exact OptPerf via bisection on the cluster batch time T.
+
+    Monotonicity: each node's feasible batch b_i(T) is affine increasing in T,
+    so g(T) = Sum_i max(b_i(T), 0) is continuous, nondecreasing, and
+    unbounded; bisection on g(T) = B converges geometrically.
+    """
+    if total_batch <= 0:
+        raise ValueError("total batch must be positive")
+    model.validate()
+    n = model.n
+
+    def assigned(t: float) -> float:
+        return sum(max(_max_batch_at_time(model, i, t), 0.0) for i in range(n))
+
+    # Bracket the optimum.
+    lo = min(
+        min(node.c + model.comm.t_u for node in model.nodes),
+        min(node.d(model.comm.gamma) + model.comm.t_comm for node in model.nodes),
+    )
+    hi = lo + 1.0
+    while assigned(hi) < total_batch:
+        hi = lo + (hi - lo) * 2.0
+        if hi - lo > 1e15:
+            raise RuntimeError("water-fill failed to bracket optimum")
+
+    for _ in range(max_iter):
+        mid = 0.5 * (lo + hi)
+        if assigned(mid) >= total_batch:
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo <= tol * max(1.0, abs(hi)):
+            break
+    t_star = hi
+
+    raw = np.array([_max_batch_at_time(model, i, t_star) for i in range(n)])
+    batches = np.maximum(raw, 0.0)
+    # Remove bisection residue: rescale the positive batches to hit B exactly.
+    pos = batches > 0
+    if batches[pos].sum() > 0:
+        batches[pos] *= total_batch / batches[pos].sum()
+    return OptPerfSolution(
+        total_batch=total_batch,
+        opt_perf=float(model.cluster_time(list(batches))),
+        batches=tuple(float(b) for b in batches),
+        bottleneck=_bottleneck_labels(model, batches),
+        method="waterfill",
+    )
+
+
+def solve_optperf(
+    model: ClusterPerfModel,
+    total_batch: float,
+    *,
+    method: str = "algorithm1",
+    boundary_hint: Optional[int] = None,
+) -> OptPerfSolution:
+    """Dispatch helper. ``method`` in {"algorithm1", "waterfill"}."""
+    if method == "algorithm1":
+        return solve_optperf_algorithm1(model, total_batch, boundary_hint=boundary_hint)
+    if method == "waterfill":
+        return solve_optperf_waterfill(model, total_batch)
+    raise ValueError(f"unknown method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# Integer rounding (§4.5 "Integer batch sizes")
+# ---------------------------------------------------------------------------
+
+
+def round_batches(batches: Sequence[float], total_batch: int) -> List[int]:
+    """Round real batches to integers summing exactly to ``total_batch``.
+
+    The paper rounds and accepts the (insignificant) error; we use
+    largest-remainder rounding so the sum constraint holds exactly and the
+    rounding error per node is < 1 sample.
+    """
+    if total_batch != int(total_batch):
+        raise ValueError("total batch must be an integer")
+    floors = [int(math.floor(b)) for b in batches]
+    remainder = int(total_batch) - sum(floors)
+    if remainder < 0:
+        raise ValueError("batches sum above total")
+    # Assign leftover samples to the largest fractional parts.
+    fracs = sorted(
+        range(len(batches)), key=lambda i: batches[i] - floors[i], reverse=True
+    )
+    out = list(floors)
+    for i in fracs[:remainder]:
+        out[i] += 1
+    return out

@@ -1,0 +1,136 @@
+"""Heterogeneity-aware multi-job scheduler (beyond-paper; the paper's §6
+"Adapt to schedulers for heterogeneous clusters" future-work item).
+
+Existing schedulers (Pollux, Optimus) allocate homogeneous slices per job;
+Sia is heterogeneity-aware across jobs but keeps each job's allocation
+homogeneous.  With Cannikin, a job runs *optimally on any heterogeneous
+subset* — its goodput for an arbitrary node set is computable from the
+per-node performance models.  That turns scheduling into: partition the
+cluster's (heterogeneous) nodes among jobs to maximize aggregate
+goodput-fraction.
+
+`allocate` uses greedy marginal-gain assignment (submodular-style):
+repeatedly give the next node to the job whose *relative* goodput gains the
+most from it.  Each job's goodput for a candidate node set comes from the
+OptPerf solver over that subset — the same machinery the controller uses,
+so scheduler decisions and runtime behaviour cannot diverge.
+
+This is intentionally a library (allocation policy + simulation harness),
+not a daemon: launch integration would wrap `allocate` in a reconcile loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.goodput import statistical_efficiency
+from repro.core.optperf import solve_optperf_waterfill
+from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
+
+__all__ = ["JobSpec", "Allocation", "allocate", "aggregate_goodput"]
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """A job's statistical state + per-node performance models.
+
+    ``node_models[i]`` is THIS job's fitted model for cluster node i (compute
+    coefficients are job-dependent; §4.2).  ``comm`` is the job's fitted
+    communication model.
+    """
+
+    name: str
+    node_models: Tuple[NodePerfModel, ...]   # indexed by cluster node id
+    comm: CommModel
+    total_batch: int
+    b_noise: float
+    ref_batch: int
+    min_nodes: int = 1
+
+    def goodput(self, node_ids: Sequence[int]) -> float:
+        if len(node_ids) < self.min_nodes:
+            return 0.0
+        model = ClusterPerfModel(
+            nodes=tuple(self.node_models[i] for i in node_ids), comm=self.comm
+        )
+        try:
+            sol = solve_optperf_waterfill(model, self.total_batch)
+        except (ValueError, RuntimeError):
+            return 0.0
+        thr = self.total_batch / sol.opt_perf
+        return thr * statistical_efficiency(self.b_noise, self.total_batch, self.ref_batch)
+
+    def solo_goodput(self) -> float:
+        """Goodput with the whole cluster — the normalizer for fairness."""
+        return self.goodput(tuple(range(len(self.node_models))))
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    assignment: Dict[str, Tuple[int, ...]]   # job -> node ids
+    goodputs: Dict[str, float]
+    fractions: Dict[str, float]              # goodput / solo goodput
+
+    @property
+    def aggregate_fraction(self) -> float:
+        return float(sum(self.fractions.values()))
+
+
+def allocate(jobs: Sequence[JobSpec], n_nodes: int) -> Allocation:
+    """Greedy marginal-gain node assignment.
+
+    Seeds every job with its single best node (by marginal goodput), then
+    assigns remaining nodes to the job with the largest *normalized*
+    marginal gain (gain / solo goodput) — normalization prevents one large
+    job from starving small ones (the same normalization Pollux's fair
+    goodput objective uses).
+    """
+    if not jobs:
+        return Allocation({}, {}, {})
+    remaining = set(range(n_nodes))
+    assign: Dict[str, List[int]] = {j.name: [] for j in jobs}
+    solo = {j.name: max(j.solo_goodput(), 1e-12) for j in jobs}
+    current = {j.name: 0.0 for j in jobs}
+
+    def gain(job: JobSpec, node: int) -> float:
+        g = job.goodput(tuple(assign[job.name] + [node]))
+        return (g - current[job.name]) / solo[job.name]
+
+    # Seed round: each job (in order of scarcity) takes its best node.
+    for job in sorted(jobs, key=lambda j: -j.min_nodes):
+        if not remaining:
+            break
+        best = max(remaining, key=lambda nid: gain(job, nid))
+        assign[job.name].append(best)
+        current[job.name] = job.goodput(tuple(assign[job.name]))
+        remaining.discard(best)
+
+    # Greedy rounds.
+    while remaining:
+        best_pair: Optional[Tuple[float, str, int]] = None
+        for job in jobs:
+            for nid in remaining:
+                g = gain(job, nid)
+                if best_pair is None or g > best_pair[0]:
+                    best_pair = (g, job.name, nid)
+        g, jname, nid = best_pair
+        if g <= 0:
+            break  # nobody benefits (comm-bound saturation)
+        assign[jname].append(nid)
+        job = next(j for j in jobs if j.name == jname)
+        current[jname] = job.goodput(tuple(assign[jname]))
+        remaining.discard(nid)
+
+    goodputs = {name: current[name] for name in assign}
+    fractions = {name: goodputs[name] / solo[name] for name in assign}
+    return Allocation(
+        assignment={k: tuple(sorted(v)) for k, v in assign.items()},
+        goodputs=goodputs,
+        fractions=fractions,
+    )
+
+
+def aggregate_goodput(jobs: Sequence[JobSpec], allocation: Allocation) -> float:
+    return float(sum(allocation.goodputs.values()))

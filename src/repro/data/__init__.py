@@ -1,0 +1,3 @@
+from repro.data.pipeline import HeteroBatchPartitioner, NodeBatch, SyntheticLM
+
+__all__ = ["SyntheticLM", "HeteroBatchPartitioner", "NodeBatch"]

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the compute hot spots of the model zoo.
+
+Each kernel ships: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit-ready public wrapper), ref.py (pure-jnp oracle).  Validated in
+interpret=True mode on CPU; identical kernel bodies target the TPU MXU/VPU.
+
+The paper's own contribution (Cannikin) is a scheduling/estimation layer —
+it has no kernel; these cover the substrate it trains (DESIGN.md §6).
+"""
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.rwkv6_wkv import wkv, wkv_ref
+from repro.kernels.ssm_scan import ssm_ref, ssm_scan
+
+__all__ = [
+    "flash_attention",
+    "attention_ref",
+    "wkv",
+    "wkv_ref",
+    "ssm_scan",
+    "ssm_ref",
+]

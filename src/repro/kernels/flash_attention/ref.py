@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (BH, S, D)
+    k: jax.Array,  # (BH, T, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    bh, s, d = q.shape
+    t = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    scores = jnp.einsum(
+        "bsd,btd->bst", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    scores = jnp.where(mask[None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    return jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.rwkv6_wkv.ops import wkv
+from repro.kernels.rwkv6_wkv.ref import wkv_ref
+
+__all__ = ["wkv", "wkv_ref"]

@@ -1,0 +1,18 @@
+"""Oracle for the WKV kernel: the step-by-step scan from models/rwkv6.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv_scan_ref
+
+
+def wkv_ref(r, k, v, log_w, u):
+    """r/k/v/log_w: (BH, T, K); u: (BH, K).  Returns (out, final_state)."""
+    bh, t, kk = r.shape
+    # wkv_scan_ref expects (B, T, H, K) with u (H, K); use B=1, H=BH and a
+    # per-"head" u (valid because heads are independent).
+    resh = lambda x: x.transpose(1, 0, 2)[None]  # (1, T, BH, K)
+    lw = jnp.clip(log_w.astype(jnp.float32), -4.6, 0.0)
+    out, s = wkv_scan_ref(resh(r), resh(k), resh(v), resh(lw), u)
+    return out[0].transpose(1, 0, 2), s[0]

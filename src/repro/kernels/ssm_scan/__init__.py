@@ -1,0 +1,4 @@
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_ref
+
+__all__ = ["ssm_scan", "ssm_ref"]

@@ -1,0 +1,7 @@
+"""Oracle: the step-by-step selective scan from models/hymba.py."""
+from repro.models.hymba import selective_scan_ref
+
+
+def ssm_ref(u, dt, b_t, c_t, log_a):
+    """u/dt: (B,T,D); b_t/c_t: (B,T,N); log_a: (D,N) -> (y, h_final)."""
+    return selective_scan_ref(u, dt, log_a, b_t, c_t)

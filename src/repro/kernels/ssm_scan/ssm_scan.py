@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the Mamba-style selective scan (Hymba's SSM heads).
+
+Recurrence per channel d and state n (d_state = 16):
+    h_t[d, n] = exp(dt_t[d] * A[d, n]) * h_{t-1}[d, n] + dt_t[d] u_t[d] B_t[n]
+    y_t[d]    = sum_n C_t[n] h_t[d, n]
+
+TPU adaptation (vs. the CUDA selective-scan kernel, which maps channels to
+threads and relies on warp shuffles): the grid is
+(batch, d_inner blocks, time chunks) with time innermost; the (d_block, n)
+state is VMEM scratch carried across chunk iterations; within a chunk a
+`fori_loop` advances the recurrence on (d_block, n) vector tiles — the VPU
+executes each step across the whole channel block at once, so there is no
+per-channel serialization like on SMs.  d_state=16 rides in the minormost
+dim (padded lane tile); d_block=512 channels x 16 states x 4 B = 32 KiB of
+state per program.
+
+VMEM per program (C=64, d_block=512, n=16):
+  u/dt (64x512x4) x2 + b/c (64x16x4) x2 + y (64x512x4) + state 32 KiB
+  ~ 420 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _ssm_kernel(u_ref, dt_ref, b_ref, c_ref, loga_ref, y_ref, h_final_ref, h_ref,
+                *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = -jnp.exp(loga_ref[...].astype(jnp.float32))       # (D, N)
+    u = u_ref[0].astype(jnp.float32)                      # (C, D)
+    dt = dt_ref[0].astype(jnp.float32)                    # (C, D)
+    b = b_ref[0].astype(jnp.float32)                      # (C, N)
+    c = c_ref[0].astype(jnp.float32)                      # (C, N)
+
+    def step(t, carry):
+        h, y = carry
+        decay = jnp.exp(dt[t][:, None] * a)               # (D, N)
+        h = decay * h + (dt[t] * u[t])[:, None] * b[t][None, :]
+        y = y.at[t].set(jnp.sum(h * c[t][None, :], axis=1))
+        return h, y
+
+    h0 = h_ref[...]
+    y0 = jnp.zeros((chunk, u.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_ref[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def finalize():
+        h_final_ref[0] = h_ref[...].astype(h_final_ref.dtype)
+
+
+def ssm_scan_kernel(
+    u: jax.Array,      # (B, T, D)
+    dt: jax.Array,     # (B, T, D)
+    b_t: jax.Array,    # (B, T, N)
+    c_t: jax.Array,    # (B, T, N)
+    log_a: jax.Array,  # (D, N)
+    *,
+    chunk: int = 64,
+    d_block: int = 512,
+    interpret: bool = True,
+):
+    """Returns (y (B, T, D), h_final (B, D, N))."""
+    bsz, t, d = u.shape
+    n = b_t.shape[-1]
+    if t % chunk:
+        raise ValueError(f"T={t} must be a multiple of chunk={chunk}")
+    d_block = min(d_block, d)
+    if d % d_block:
+        raise ValueError(f"D={d} must be a multiple of d_block={d_block}")
+    n_chunks = t // chunk
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, d // d_block, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, chunk, d_block), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, chunk, n), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, id_, ic: (ib, ic, 0)),
+            pl.BlockSpec((d_block, n), lambda ib, id_, ic: (id_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda ib, id_, ic: (ib, ic, id_)),
+            pl.BlockSpec((1, d_block, n), lambda ib, id_, ic: (ib, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, t, d), u.dtype),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, b_t, c_t, log_a)

@@ -1,0 +1,9 @@
+"""Launchers: production mesh builders, multi-pod dry-run, training CLI.
+
+NOTE: import `repro.launch.dryrun` only as a __main__ entry point — its
+first two lines set XLA_FLAGS to fake 512 host devices, which must happen
+before jax initializes.  `mesh` and `hlo_stats` are import-safe.
+"""
+from repro.launch.mesh import make_production_mesh, make_rules
+
+__all__ = ["make_production_mesh", "make_rules"]

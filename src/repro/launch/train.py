@@ -1,0 +1,158 @@
+"""Training driver CLI.
+
+Two modes:
+
+* ``hetero`` (default) — the paper's end-to-end scenario: real JAX training
+  of a reduced-config model on this host, with per-node timing supplied by
+  the calibrated heterogeneous-cluster simulator; the chosen policy
+  (cannikin / even / lb-bsp / adaptdl) controls the batch partition and,
+  for the adaptive policies, the total batch size.
+
+* ``spmd`` — single-process pjit training of a reduced config on the local
+  device(s): the quickstart path (examples/quickstart.py wraps it).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --policy cannikin \
+      --cluster B --epochs 12 --steps-per-epoch 8
+  PYTHONPATH=src python -m repro.launch.train --mode spmd --arch rwkv6-7b --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+
+def make_policy(name: str, n_nodes: int, *, candidates, ref_batch: int, adaptive: bool):
+    from repro.core.baselines import EvenPartition, LBBSPPartition
+    from repro.core.controller import CannikinController
+
+    if name == "cannikin":
+        return CannikinController(
+            n_nodes,
+            batch_candidates=candidates,
+            ref_batch=ref_batch,
+            adaptive=adaptive,
+        )
+    if name in ("even", "ddp", "adaptdl"):
+        # AdaptDL's per-node split in heterogeneous clusters equals DDP's
+        # (§5.2.2); its total-batch adaptivity is modeled by pairing this
+        # partition with the Cannikin GNS engine in benchmarks/convergence.
+        return EvenPartition(n_nodes)
+    if name == "lb-bsp":
+        return LBBSPPartition(n_nodes, delta=5)
+    raise ValueError(f"unknown policy {name!r}")
+
+
+def run_hetero(args) -> int:
+    import jax
+
+    from repro.configs import get_api
+    from repro.core.simulator import SimulatedCluster, cluster_A, cluster_B, cluster_C
+    from repro.data import SyntheticLM
+    from repro.optim import constant_schedule, sgd
+    from repro.train import HeteroTrainer
+
+    api = get_api(args.arch, reduced=True)
+    cluster_fn = {"A": cluster_A, "B": cluster_B, "C": cluster_C}[args.cluster]
+    profiles, comm = cluster_fn()
+    sim = SimulatedCluster(profiles, comm, noise=args.noise, seed=args.seed)
+    data = SyntheticLM(vocab=api.cfg.vocab, seq_len=args.seq_len, seed=args.seed)
+    candidates = [args.ref_batch * m for m in (1, 2, 4, 8)]
+    policy = make_policy(
+        args.policy,
+        sim.n,
+        candidates=candidates,
+        ref_batch=args.ref_batch,
+        adaptive=not args.fixed_batch,
+    )
+    trainer = HeteroTrainer(
+        api,
+        sgd(constant_schedule(args.lr)),
+        sim,
+        policy,
+        data,
+        steps_per_epoch=args.steps_per_epoch,
+        seed=args.seed,
+    )
+    trainer.set_fixed_total(args.ref_batch)
+    print(f"# arch={args.arch} policy={args.policy} cluster={args.cluster} "
+          f"nodes={sim.n}")
+    for _ in range(args.epochs):
+        r = trainer.run_epoch()
+        pred = "-" if r.predicted_batch_time is None else f"{r.predicted_batch_time*1e3:.1f}ms"
+        print(
+            f"epoch {r.epoch:3d} [{r.phase:9s}] B={r.total_batch:4d} "
+            f"split={list(r.batches)} loss={r.mean_loss:.4f} "
+            f"batch_time={r.measured_batch_time*1e3:.1f}ms pred={pred} "
+            f"sim_total={trainer.sim_time:.2f}s",
+            flush=True,
+        )
+        if args.target_loss and r.mean_loss <= args.target_loss:
+            print(f"# reached target loss {args.target_loss} at sim time "
+                  f"{trainer.sim_time:.2f}s")
+            break
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(
+                [r.__dict__ for r in trainer.history], f, indent=1, default=str
+            )
+    return 0
+
+
+def run_spmd(args) -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_api
+    from repro.data import SyntheticLM
+    from repro.optim import adamw, constant_schedule
+    from repro.train.step import build_train_step
+
+    api = get_api(args.arch, reduced=True)
+    opt = adamw(constant_schedule(args.lr))
+    step = jax.jit(build_train_step(api, opt, microbatches=args.microbatches))
+    params = api.init(jax.random.PRNGKey(args.seed))
+    opt_state = opt.init(params)
+    data = SyntheticLM(vocab=api.cfg.vocab, seq_len=args.seq_len, seed=args.seed)
+    for i in range(args.steps):
+        raw = data.batch(i, args.ref_batch)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        print(f"step {i:4d} loss={loss:.4f} "
+              f"({(time.perf_counter()-t0)*1e3:.0f}ms)", flush=True)
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", default="hetero", choices=["hetero", "spmd"])
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--policy", default="cannikin",
+                    choices=["cannikin", "even", "ddp", "adaptdl", "lb-bsp"])
+    ap.add_argument("--cluster", default="B", choices=["A", "B", "C"])
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--steps-per-epoch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--ref-batch", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--noise", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fixed-batch", action="store_true")
+    ap.add_argument("--target-loss", type=float, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.mode == "hetero":
+        return run_hetero(args)
+    return run_spmd(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,4 @@
+"""Model zoo: six architecture families, pure JAX."""
+from repro.models.registry import ModelApi, build_api
+
+__all__ = ["ModelApi", "build_api"]

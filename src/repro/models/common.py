@@ -1,0 +1,467 @@
+"""Shared building blocks for the model zoo (pure JAX, no flax).
+
+Conventions:
+  * Parameters live in nested dicts; their *structure* is declared once as a
+    schema (`Param` leaves) from which both initialization and PartitionSpecs
+    derive — a single source of truth for shapes and sharding.
+  * All per-layer parameters are stacked along a leading L dim and the layer
+    stack runs under `jax.lax.scan` (+ optional remat), so HLO size is
+    depth-independent.
+  * Attention uses a chunked online-softmax formulation (flash-style in plain
+    jnp) for full-sequence passes — O(S·chunk) score memory — and a masked
+    dot for single-token decode.  Sliding-window attention uses exact
+    block-local attention (2-block keys), giving window-linear FLOPs.
+  * Mixed precision: parameters are stored in ``param_dtype`` and cast to
+    ``compute_dtype`` on use; softmax/norm statistics in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.context import constrain
+from repro.sharding.rules import MeshRules
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declares one parameter: shape, logical sharding axes, initializer."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # overrides fan-in scaling
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape/axes rank mismatch: {self.shape} vs {self.axes}")
+
+
+def _init_leaf(rng: jax.Array, p: Param, dtype: jnp.dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "embed":
+        scale = p.scale if p.scale is not None else 0.02
+        return (jax.random.normal(rng, p.shape) * scale).astype(dtype)
+    if p.init == "normal":
+        # Fan-in scaled: last axis is output for our (in..., out) or the
+        # contraction structure declared by the model; use 1/sqrt(prod(all
+        # but last)) which matches truncated-lecun for 2-3D weights.
+        fan_in = int(np.prod(p.shape[:-1])) if len(p.shape) > 1 else p.shape[0]
+        scale = p.scale if p.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(rng, p.shape) * scale).astype(dtype)
+    raise ValueError(f"unknown init {p.init!r}")
+
+
+def init_from_schema(rng: jax.Array, schema: PyTree, dtype: jnp.dtype) -> PyTree:
+    """Initialize a parameter pytree from a schema pytree of Param leaves."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        schema, is_leaf=lambda x: isinstance(x, Param)
+    )
+    rngs = jax.random.split(rng, len(leaves))
+    arrays = [_init_leaf(r, p, dtype) for r, p in zip(rngs, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+def specs_from_schema(schema: PyTree, rules: MeshRules) -> PyTree:
+    """PartitionSpec pytree matching the schema structure."""
+
+    def leaf_spec(path, p: Param):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        return rules.spec(p.axes, p.shape, path=name)
+
+    return jax.tree_util.tree_map_with_path(
+        leaf_spec, schema, is_leaf=lambda x: isinstance(x, Param)
+    )
+
+
+def stacked(schema: PyTree, n_layers: int) -> PyTree:
+    """Prepend a stacked-layer dim (replicated) to every Param in a schema."""
+
+    def wrap(p: Param) -> Param:
+        return Param(
+            shape=(n_layers,) + p.shape,
+            axes=(None,) + p.axes,
+            init=p.init,
+            scale=p.scale,
+        )
+
+    return jax.tree_util.tree_map(wrap, schema, is_leaf=lambda x: isinstance(x, Param))
+
+
+def param_count(schema: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(schema, is_leaf=lambda x: isinstance(x, Param))
+    return int(sum(np.prod(p.shape) for p in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def layer_norm(
+    x: jax.Array,
+    weight: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """LayerNorm; with weight=bias=None this is OLMo's non-parametric LN."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim//2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """Rotate pairs: x (..., S, H, D), positions broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+# When True, GQA attention physically repeats K/V to the full head count
+# before the score einsum.  The grouped (KV, R) reshape hides the head
+# sharding from GSPMD whenever KV is not divisible by the model axis
+# (llama3: KV=8 on a 16-way axis); repeating costs R x K/V bytes but keeps
+# the score computation sharded over heads.  §Perf variant "gqa_repeat".
+GQA_REPEAT = True
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,S,KV,R,D) x k (B,T,KV,D) -> scores (B,KV,R,S,T), float32."""
+    return jnp.einsum(
+        "bskrd,btkd->bkrst", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def _gqa_combine(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs (B,KV,R,S,T) x v (B,T,KV,D) -> (B,S,KV,R,D)."""
+    return jnp.einsum("bkrst,btkd->bskrd", probs.astype(v.dtype), v)
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: Union[int, jax.Array] = 0,
+    kv_chunk: int = 512,
+    softmax_scale: Optional[float] = None,
+    bidirectional: bool = False,
+) -> jax.Array:
+    """Chunked online-softmax attention.
+
+    q: (B, S, H, D); k, v: (B, T, KV, D) with H = KV * R.
+    Scans over KV chunks carrying (max, denom, acc); O(S * kv_chunk) score
+    memory instead of O(S*T).  Causal mask uses absolute positions
+    ``q_offset + arange(S)`` vs ``arange(T)``.
+    """
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # value head dim may differ from qk dim (MLA)
+    if h % kv != 0:
+        raise ValueError(f"heads {h} not multiple of kv heads {kv}")
+    # Pin the batch/head sharding of the attention operands: GSPMD loses it
+    # across the kv-chunk scan (observed 16x replicated attention FLOPs).
+    q = constrain(q, ("batch", None, "heads", None))
+    if GQA_REPEAT and kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+        kv = h
+        k = constrain(k, ("batch", None, "heads", None))
+        v = constrain(v, ("batch", None, "heads", None))
+    else:
+        k = constrain(k, ("batch", None, "kv_heads", None))
+        v = constrain(v, ("batch", None, "kv_heads", None))
+    r = h // kv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    qg = (q * scale).reshape(b, s, kv, r, d)
+
+    chunk = min(kv_chunk, t)
+    if t % chunk != 0:
+        # Pad T to a chunk multiple with masked-out keys.
+        pad = chunk - t % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t_pad = t + pad
+    else:
+        t_pad = t
+    n_chunks = t_pad // chunk
+
+    q_pos = jnp.arange(s) + q_offset  # (S,)
+
+    def body(carry, idx):
+        m_prev, l_prev, acc_prev = carry
+        start = idx * chunk
+        k_c = jax.lax.dynamic_slice_in_dim(k, start, chunk, axis=1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, start, chunk, axis=1)
+        scores = _gqa_scores(qg, k_c)  # (B,KV,R,S,chunk) f32
+        kv_pos = start + jnp.arange(chunk)
+        mask = kv_pos[None, :] < t  # padding mask (S broadcast later)
+        if causal and not bidirectional:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+        # Guard fully-masked rows (m = -inf): exp(-inf - -inf) -> nan.
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, -jnp.inf))
+        p = jnp.exp(scores - m_safe[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_new = acc_prev * alpha[..., None].astype(acc_prev.dtype) + _gqa_combine(
+            p, v_c
+        ).transpose(0, 2, 3, 1, 4)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, r, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, r, s), jnp.float32)
+    a0 = jnp.zeros((b, kv, r, s, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B,KV,R,S,Dv) -> (B,S,KV,R,Dv) -> (B,S,H,Dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dv)
+    return out.astype(q.dtype)
+
+
+def local_window_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Exact causal sliding-window attention via 2-block-local attention.
+
+    Blocks of size ``window``; query block i attends to key blocks {i-1, i}
+    with the exact causal+window mask, so FLOPs are O(S * 2W) not O(S^2).
+    Requires q and k from the same sequence (self-attention, q_offset 0).
+    """
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    if s != t:
+        raise ValueError("local attention expects self-attention (S == T)")
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    r = h // kv
+    w = window
+    pad = (-s) % w
+    s_pad = s + pad
+    nb = s_pad // w
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+
+    def blockify(x):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.reshape(b, nb, w, x.shape[2], d)
+
+    qb = blockify(q * scale).reshape(b, nb, w, kv, r, d)
+    kb = blockify(k)
+    vb = blockify(v)
+    # Previous block (zeros for block 0).
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B,nb,2W,KV,D)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+
+    scores = jnp.einsum(
+        "bnskrd,bntkd->bnkrst", qb, k2, preferred_element_type=jnp.float32
+    )  # (B,nb,KV,R,W,2W)
+    # Mask: global positions. q position inside block = i*w + a; key position
+    # = (i-1)*w + t for t<w else i*w + (t-w).  Causality: key <= query;
+    # window: key > query - w.
+    a_idx = jnp.arange(w)[:, None]           # query offset in block
+    t_idx = jnp.arange(2 * w)[None, :] - w   # key offset relative to block start
+    rel = a_idx - t_idx                      # query_pos - key_pos
+    mask = (rel >= 0) & (rel < w)
+    # Block 0 has no previous block; also mask padded tail positions.
+    block_ids = jnp.arange(nb)
+    first_block = block_ids[:, None, None] == 0
+    prev_key = t_idx < 0
+    mask_b = mask[None] & ~(first_block & prev_key[None])  # (nb,W,2W)
+    q_global = block_ids[:, None] * w + jnp.arange(w)[None]  # (nb,W)
+    valid_q = q_global < s
+    k_global = block_ids[:, None] * w + t_idx  # (nb, 2W)
+    valid_k = (k_global >= 0) & (k_global < s)
+    mask_b = mask_b & valid_k[:, None, :] & valid_q[..., None]
+    scores = jnp.where(mask_b[None, :, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bnkrst,bntkd->bnskrd", probs.astype(v2.dtype), v2)
+    out = out.reshape(b, s_pad, h, d)[:, :s]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    pos: jax.Array,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, D); caches: (B, T, KV, D); ``pos`` — current position
+    (scalar int32): cache entries at indices <= pos are valid.  ``window``
+    masks entries older than pos - window + 1 (ring-buffer caches pass the
+    physical layout; masking is on logical positions stored alongside).
+    """
+    b, _, h, d = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    q = constrain(q, ("batch", None, "heads", None))
+    k_cache = constrain(k_cache, ("batch", "cache_seq", "kv_heads", None))
+    v_cache = constrain(v_cache, ("batch", "cache_seq", "kv_heads", None))
+    r = h // kv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    qg = (q * scale).reshape(b, 1, kv, r, d)
+    scores = _gqa_scores(qg, k_cache)[..., 0, :]  # (B,KV,R,T)
+    kv_pos = jnp.arange(t)
+    mask = kv_pos <= pos
+    if window is not None:
+        mask = mask & (kv_pos > pos - window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrt,btkd->bkrd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward activations
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def relu2(x: jax.Array) -> jax.Array:
+    """Squared ReLU (Minitron/Nemotron)."""
+    y = jax.nn.relu(x)
+    return y * y
+
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "relu2": relu2,
+    "silu": jax.nn.silu,
+}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def weighted_cross_entropy(
+    logits: jax.Array, labels: jax.Array, weights: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-level CE.  ``weights`` (same shape as labels) realizes Eq. (9)
+    weighted gradient aggregation: pass per-sample weights broadcast over the
+    sequence dim; pads get 0.  Returns (scalar weighted-SUM loss, total
+    weight) — divide outside if a mean is wanted.
+    """
+    logits_f = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits_f, axis=-1)
+    gold = jnp.take_along_axis(logits_f, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if weights is None:
+        weights = jnp.ones_like(nll)
+    return (nll * weights).sum(), weights.sum()
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+def make_kv_cache(
+    n_layers: int,
+    batch: int,
+    length: int,
+    kv_heads: int,
+    head_dim: int,
+    dtype: jnp.dtype = jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    """Stacked-over-layers KV cache + scalar position."""
+    shape = (n_layers, batch, length, kv_heads, head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_update(
+    cache_layer_k: jax.Array,
+    cache_layer_v: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    pos: jax.Array,
+    *,
+    ring: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Insert one token's K/V at position ``pos`` (mod length if ring)."""
+    length = cache_layer_k.shape[1]
+    idx = jnp.where(ring, pos % length, pos) if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache_layer_k, k_new, idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache_layer_v, v_new, idx, axis=1)
+    return k, v

@@ -1,0 +1,312 @@
+"""DeepSeek-V2 (236B): Multi-head Latent Attention + fine-grained MoE.
+
+MLA (arXiv:2405.04434): queries go through a low-rank bottleneck
+(q_lora_rank); keys/values are reconstructed from a shared compressed latent
+c_kv (kv_lora_rank = 512) plus a single shared 64-dim RoPE key.  The decode
+path uses the *absorbed* formulation — attention runs directly against the
+latent cache (576 floats/token), which is what qualifies this arch for the
+long_500k decode shape: per-step cost is O(T * kv_lora), cache is
+O(T * 576), no per-head K/V ever materialized.
+
+MoE: layer 0 is a dense SwiGLU FFN (paper's warm layer); layers 1..L-1 use
+2 shared experts + 160 routed experts with top-6 routing (moe.moe_apply).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, moe
+from repro.models.common import Param
+from repro.sharding.context import constrain
+
+__all__ = [
+    "DeepSeekConfig",
+    "schema",
+    "init",
+    "forward",
+    "init_cache",
+    "decode_step",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepSeekConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff_expert: int            # routed-expert hidden (1536)
+    d_ff_dense: int             # layer-0 dense hidden
+    vocab: int
+    n_experts: int = 160
+    top_k: int = 6
+    n_shared_experts: int = 2
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    capacity_factor: float = 1.25
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    kv_chunk: int = 2048
+
+    @property
+    def family(self) -> str:
+        return "moe"
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    @property
+    def moe(self) -> moe.MoEConfig:
+        return moe.MoEConfig(
+            n_experts=self.n_experts,
+            top_k=self.top_k,
+            d_model=self.d_model,
+            d_ff=self.d_ff_expert,
+            capacity_factor=self.capacity_factor,
+            n_shared_experts=self.n_shared_experts,
+            d_ff_shared=self.n_shared_experts * self.d_ff_expert,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+
+def mla_schema(cfg: DeepSeekConfig) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": Param((d, qr), ("embed", None)),
+        "q_norm": Param((qr,), (None,), init="ones"),
+        "w_uq": Param((qr, h, dn + dr), (None, "heads", None)),
+        "w_dkv": Param((d, kr), ("embed", None)),
+        "kv_norm": Param((kr,), (None,), init="ones"),
+        "w_kr": Param((d, dr), ("embed", None)),
+        "w_uk": Param((kr, h, dn), (None, "heads", None)),
+        "w_uv": Param((kr, h, dv), (None, "heads", None)),
+        "wo": Param((h, dv, d), ("heads", None, "embed")),
+    }
+
+
+def layer_schema(cfg: DeepSeekConfig, *, dense: bool) -> Dict[str, Any]:
+    d = cfg.d_model
+    s: Dict[str, Any] = {
+        "attn": mla_schema(cfg),
+        "attn_norm": Param((d,), (None,), init="ones"),
+        "mlp_norm": Param((d,), (None,), init="ones"),
+    }
+    if dense:
+        s["mlp"] = {
+            "w_gate": Param((d, cfg.d_ff_dense), ("embed", "ff")),
+            "w_up": Param((d, cfg.d_ff_dense), ("embed", "ff")),
+            "w_down": Param((cfg.d_ff_dense, d), ("ff", "embed")),
+        }
+    else:
+        s["moe"] = moe.moe_layer_schema(cfg.moe)
+    return s
+
+
+def schema(cfg: DeepSeekConfig) -> Dict[str, Any]:
+    return {
+        "embed": Param((cfg.vocab, cfg.d_model), ("vocab", None), init="embed"),
+        "dense_layer": layer_schema(cfg, dense=True),
+        "layers": common.stacked(layer_schema(cfg, dense=False), cfg.n_layers - 1),
+        "final_norm": Param((cfg.d_model,), (None,), init="ones"),
+        "lm_head": Param((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def init(rng: jax.Array, cfg: DeepSeekConfig):
+    return common.init_from_schema(rng, schema(cfg), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv_full(ap: Dict[str, Any], x: jax.Array, positions: jax.Array, cfg: DeepSeekConfig):
+    """Full-sequence MLA: materialize per-head K/V from the latent."""
+    q_lat = common.rms_norm(jnp.einsum("bsd,dq->bsq", x, ap["w_dq"]), ap["q_norm"])
+    q = jnp.einsum("bsq,qhk->bshk", q_lat, ap["w_uq"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = common.rms_norm(jnp.einsum("bsd,dc->bsc", x, ap["w_dkv"]), ap["kv_norm"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, ap["w_kr"])[:, :, None, :]  # (B,S,1,dr)
+    k_rope = common.apply_rope(k_rope, positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsc,chk->bshk", c_kv, ap["w_uk"])
+    v = jnp.einsum("bsc,chk->bshk", c_kv, ap["w_uv"])
+
+    h = cfg.n_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_rope.shape[:2] + (h, cfg.qk_rope_dim))],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q_full, k, v, c_kv, k_rope
+
+
+def _mla_attention_full(ap, x, positions, cfg: DeepSeekConfig):
+    q, k, v, _, _ = _mla_qkv_full(ap, x, positions, cfg)
+    scale = 1.0 / math.sqrt(cfg.qk_dim)
+    attn = common.full_attention(
+        q, k, v, causal=True, kv_chunk=cfg.kv_chunk, softmax_scale=scale
+    )
+    return jnp.einsum("bshk,hkd->bsd", attn, ap["wo"])
+
+
+def _mla_attention_absorbed(
+    ap: Dict[str, Any],
+    x: jax.Array,
+    c_cache: jax.Array,
+    kr_cache: jax.Array,
+    pos: jax.Array,
+    cfg: DeepSeekConfig,
+):
+    """Absorbed decode: score and combine directly in latent space.
+
+    c_cache: (B, T, kv_lora); kr_cache: (B, T, rope_dim); x: (B, 1, d).
+    Returns (attn_out (B,1,d), updated caches).
+    """
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_lat = common.rms_norm(jnp.einsum("bsd,dq->bsq", x, ap["w_dq"]), ap["q_norm"])
+    q = jnp.einsum("bsq,qhk->bshk", q_lat, ap["w_uq"])  # (B,1,H,dn+dr)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_new = common.rms_norm(jnp.einsum("bsd,dc->bsc", x, ap["w_dkv"]), ap["kv_norm"])
+    kr_new = common.apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, ap["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new, pos, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(kr_cache, kr_new, pos, axis=1)
+    # Keep the latent cache sequence-sharded through the scan (otherwise the
+    # absorbed-attention einsums run against a replicated 500k-token cache).
+    c_cache = constrain(c_cache, ("batch", "cache_seq", None))
+    kr_cache = constrain(kr_cache, ("batch", "cache_seq", None))
+
+    # Absorb W_uk into the query: q_eff (B,H,kv_lora).
+    q_eff = jnp.einsum("bshk,chk->bhc", q_nope, ap["w_uk"])
+    scores = jnp.einsum(
+        "bhc,btc->bht", q_eff, c_cache, preferred_element_type=jnp.float32
+    )
+    scores = scores + jnp.einsum(
+        "bshr,btr->bht", q_rope, kr_cache, preferred_element_type=jnp.float32
+    )
+    scores = scores / math.sqrt(cfg.qk_dim)
+    t = c_cache.shape[1]
+    mask = jnp.arange(t) <= pos
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bht,btc->bhc", probs.astype(c_cache.dtype), c_cache)
+    out = jnp.einsum("bhc,chk->bhk", out_lat, ap["w_uv"])  # (B,H,v_dim)
+    attn = jnp.einsum("bhk,hkd->bd", out, ap["wo"])[:, None, :]
+    return attn, c_cache, kr_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _dense_mlp(lp, x):
+    g = jnp.einsum("bsd,df->bsf", x, lp["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, lp["w_up"])
+    return jnp.einsum("bsf,fd->bsd", common.swiglu(g, u), lp["w_down"])
+
+
+def forward(
+    params: Dict[str, Any], cfg: DeepSeekConfig, tokens: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = common.constrain(x, ("batch", None, None))
+    positions = jnp.arange(s)
+
+    # Layer 0: dense FFN.
+    lp0 = params["dense_layer"]
+    h = common.rms_norm(x, lp0["attn_norm"])
+    x = x + _mla_attention_full(lp0["attn"], h, positions, cfg)
+    h = common.rms_norm(x, lp0["mlp_norm"])
+    x = x + _dense_mlp(lp0["mlp"], h)
+
+    def body(x, lp):
+        h = common.rms_norm(x, lp["attn_norm"])
+        x = x + _mla_attention_full(lp["attn"], h, positions, cfg)
+        h = common.rms_norm(x, lp["mlp_norm"])
+        out, stats = moe.moe_apply(lp["moe"], h, cfg.moe)
+        return x + out, stats
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, stats = jax.lax.scan(body_fn, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(cfg.compute_dtype)
+    ).astype(jnp.float32)
+    return logits, {k: v.mean() for k, v in stats.items()}
+
+
+def init_cache(cfg: DeepSeekConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Latent cache: 512 + 64 floats per token per layer."""
+    return {
+        "c": jnp.zeros((cfg.n_layers, batch, seq_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((cfg.n_layers, batch, seq_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cfg: DeepSeekConfig,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+
+    # Layer 0 (dense) — its cache slice is index 0.
+    lp0 = params["dense_layer"]
+    h = common.rms_norm(x, lp0["attn_norm"])
+    attn, c0, kr0 = _mla_attention_absorbed(
+        lp0["attn"], h, cache["c"][0], cache["kr"][0], pos, cfg
+    )
+    x = x + attn
+    h = common.rms_norm(x, lp0["mlp_norm"])
+    x = x + _dense_mlp(lp0["mlp"], h)
+
+    def body(x, layer):
+        lp, c_l, kr_l = layer
+        h = common.rms_norm(x, lp["attn_norm"])
+        attn, c_l, kr_l = _mla_attention_absorbed(lp["attn"], h, c_l, kr_l, pos, cfg)
+        x = x + attn
+        h = common.rms_norm(x, lp["mlp_norm"])
+        out, _ = moe.moe_apply(lp["moe"], h, cfg.moe)
+        return x + out, (c_l, kr_l)
+
+    x, (c_rest, kr_rest) = jax.lax.scan(
+        body, x, (params["layers"], cache["c"][1:], cache["kr"][1:])
+    )
+    x = common.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(cfg.compute_dtype)
+    ).astype(jnp.float32)
+    new_cache = {
+        "c": jnp.concatenate([c0[None], c_rest], axis=0),
+        "kr": jnp.concatenate([kr0[None], kr_rest], axis=0),
+        "pos": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,350 @@
+"""Mixture-of-Experts layer + Mixtral-8x7B model.
+
+Dispatch is capacity-based (GShard-style, token-dropping) but realized with
+*scatter/gather* instead of one-hot einsums so the compiled FLOPs reflect
+activated compute (the einsum formulation costs T*E*C*d which dwarfs the
+expert FFNs for large E — DeepSeek's 160 experts would be 10x overcounted).
+
+Sharding: experts are kept on every device but each expert's matrices are
+2D-sharded — d_model over the fsdp axis, d_ff over the model axis.  Tokens
+stay batch-sharded; no all_to_all is required and the combine reduces over
+the model axis like any TP FFN.  (An expert-parallel all_to_all layout is a
+§Perf candidate; see EXPERIMENTS.md.)
+
+Aux losses: switch-style load-balance loss and router z-loss, returned via
+a stats dict so the train step can add them with configurable weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Param
+from repro.sharding.context import active_rules, constrain
+
+__all__ = [
+    "MoEConfig",
+    "moe_layer_schema",
+    "moe_apply",
+    "MixtralConfig",
+    "schema",
+    "init",
+    "forward",
+    "init_cache",
+    "decode_step",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                     # per-expert hidden
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0     # DeepSeek-style always-on experts
+    d_ff_shared: int = 0          # hidden of the fused shared expert
+    router_dtype: Any = jnp.float32
+
+
+def moe_layer_schema(cfg: MoEConfig) -> Dict[str, Any]:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s: Dict[str, Any] = {
+        "router": Param((d, e), (None, None), scale=0.02),
+        "w_gate": Param((e, d, f), ("experts", "embed", "ff")),
+        "w_up": Param((e, d, f), ("experts", "embed", "ff")),
+        "w_down": Param((e, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff_shared or cfg.d_ff * cfg.n_shared_experts
+        s["shared"] = {
+            "w_gate": Param((d, fs), ("embed", "ff")),
+            "w_up": Param((d, fs), ("embed", "ff")),
+            "w_down": Param((fs, d), ("ff", "embed")),
+        }
+    return s
+
+
+# §Perf variant hook: when False, skip the expert-buffer sharding
+# constraints and let GSPMD choose (better for small E where the capacity
+# re-shard dominates).
+CONSTRAIN_DISPATCH = True
+
+# Tokens*top_k at or below this use the gather-based decode fast path:
+# only the selected experts' weights are read from HBM (vs streaming all E)
+# — the dominant memory term of MoE decode at tiny batch (§Perf pair 3).
+DECODE_GATHER_MAX = 16
+
+
+def capacity(cfg: MoEConfig, n_tokens: int) -> int:
+    c = math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    c = max(int(c), 4)
+    if c >= 32:
+        c = -(-c // 32) * 32  # round up: keeps the capacity dim shardable
+    return c
+
+
+def moe_apply(
+    lp: Dict[str, Any], x: jax.Array, cfg: MoEConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B, S, d) -> (out (B, S, d), stats).
+
+    Token-dropping capacity router: tokens beyond an expert's capacity are
+    dropped (contribute zero from that expert), matching GShard/Switch
+    semantics.  Gates are renormalized over the chosen top-k.
+    """
+    b, s, d = x.shape
+    t = b * s
+    cap = capacity(cfg, t)
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum(
+        "td,de->te", xf.astype(cfg.router_dtype), lp["router"].astype(cfg.router_dtype)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if t * cfg.top_k <= DECODE_GATHER_MAX:
+        # Tiny-batch (decode) fast path: gather only the selected experts'
+        # weights instead of streaming all E of them.  For long_500k
+        # (B=1, top-6 of 160) this cuts per-layer HBM weight traffic ~20x.
+        w_g = jnp.take(lp["w_gate"], expert_idx, axis=0)   # (T,k,d,f)
+        w_u = jnp.take(lp["w_up"], expert_idx, axis=0)
+        w_d = jnp.take(lp["w_down"], expert_idx, axis=0)   # (T,k,f,d)
+        hg = jnp.einsum("td,tkdf->tkf", xf, w_g)
+        hu = jnp.einsum("td,tkdf->tkf", xf, w_u)
+        hh = common.swiglu(hg, hu)
+        routed = jnp.einsum("tkf,tkfd->tkd", hh, w_d)
+        combined = (routed * gate_vals[..., None].astype(routed.dtype)).sum(axis=1)
+        out = combined
+        if "shared" in lp:
+            sp = lp["shared"]
+            g = jnp.einsum("td,df->tf", xf, sp["w_gate"])
+            u = jnp.einsum("td,df->tf", xf, sp["w_up"])
+            out = out + jnp.einsum("tf,fd->td", common.swiglu(g, u), sp["w_down"])
+        stats = {
+            "lb_loss": jnp.float32(0.0),
+            "z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2).astype(
+                jnp.float32
+            ),
+            "drop_frac": jnp.float32(0.0),
+        }
+        return out.reshape(b, s, d), stats
+
+    # Position of each (token, k) routing within its expert queue.
+    flat_e = expert_idx.reshape(-1)                     # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, cfg.n_experts, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)
+    pos_in_e = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, flat_e * cap + pos_in_e, cfg.n_experts * cap)  # drop slot
+
+    # Scatter tokens into (E*cap+1, d) buffers (last row = dropped).
+    src = jnp.repeat(xf, cfg.top_k, axis=0)            # (T*k, d)
+    buf = jnp.zeros((cfg.n_experts * cap + 1, d), xf.dtype).at[dest].set(src)
+    expert_in = buf[: cfg.n_experts * cap].reshape(cfg.n_experts, cap, d)
+    # Capacity slots sharded over the data axis: each DP shard computes its
+    # slice of every expert with TP-sharded expert weights (DESIGN.md §4).
+    rules = active_rules()
+    if CONSTRAIN_DISPATCH and rules is not None and rules.experts_axis:
+        # Only pin the dispatch layout under expert parallelism; for small
+        # E (< model axis) GSPMD's own choice is ~3x cheaper (§Perf log).
+        expert_in = constrain(expert_in, ("experts", "batch", None))
+
+    # Expert FFNs (SwiGLU), batched over experts.
+    h_gate = jnp.einsum("ecd,edf->ecf", expert_in, lp["w_gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", expert_in, lp["w_up"])
+    h = common.swiglu(h_gate, h_up)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, lp["w_down"])
+    if CONSTRAIN_DISPATCH and rules is not None and rules.experts_axis:
+        expert_out = constrain(expert_out, ("experts", "batch", None))
+
+    # Gather back and combine with gates.
+    out_flat = expert_out.reshape(cfg.n_experts * cap, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, d), out_flat.dtype)], axis=0)
+    routed = out_flat[dest]                             # (T*k, d)
+    gates = (gate_vals.reshape(-1) * keep).astype(routed.dtype)
+    combined = (routed * gates[:, None]).reshape(t, cfg.top_k, d).sum(axis=1)
+
+    # Aux losses: load-balance (Switch) and router z-loss.
+    me = probs.mean(axis=0)                             # (E,)
+    ce = jnp.zeros(cfg.n_experts, probs.dtype).at[flat_e].add(
+        jnp.ones_like(flat_e, probs.dtype)
+    ) / (t * cfg.top_k)
+    lb_loss = cfg.n_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    drop_frac = 1.0 - keep.mean()
+
+    out = combined
+    if "shared" in lp:
+        sp = lp["shared"]
+        g = jnp.einsum("td,df->tf", xf, sp["w_gate"])
+        u = jnp.einsum("td,df->tf", xf, sp["w_up"])
+        out = out + jnp.einsum("tf,fd->td", common.swiglu(g, u), sp["w_down"])
+
+    stats = {
+        "lb_loss": lb_loss.astype(jnp.float32),
+        "z_loss": z_loss.astype(jnp.float32),
+        "drop_frac": drop_frac.astype(jnp.float32),
+    }
+    return out.reshape(b, s, d), stats
+
+
+# ---------------------------------------------------------------------------
+# Mixtral-8x7B
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MixtralConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                  # per-expert hidden
+    vocab: int
+    n_experts: int = 8
+    top_k: int = 2
+    head_dim: int = 128
+    rope_theta: float = 1e6
+    window: Optional[int] = 4096   # Mixtral SWA
+    decode_window: Optional[int] = 4096
+    capacity_factor: float = 1.25
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    kv_chunk: int = 2048
+
+    @property
+    def family(self) -> str:
+        return "moe"
+
+    @property
+    def moe(self) -> MoEConfig:
+        return MoEConfig(
+            n_experts=self.n_experts,
+            top_k=self.top_k,
+            d_model=self.d_model,
+            d_ff=self.d_ff,
+            capacity_factor=self.capacity_factor,
+        )
+
+
+def layer_schema(cfg: MixtralConfig) -> Dict[str, Any]:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "attn": {
+            "wq": Param((d, h, dh), ("embed", "heads", None)),
+            "wk": Param((d, kv, dh), ("embed", "kv_heads", None)),
+            "wv": Param((d, kv, dh), ("embed", "kv_heads", None)),
+            "wo": Param((h, dh, d), ("heads", None, "embed")),
+        },
+        "attn_norm": Param((d,), (None,), init="ones"),
+        "mlp_norm": Param((d,), (None,), init="ones"),
+        "moe": moe_layer_schema(cfg.moe),
+    }
+
+
+def schema(cfg: MixtralConfig) -> Dict[str, Any]:
+    return {
+        "embed": Param((cfg.vocab, cfg.d_model), ("vocab", None), init="embed"),
+        "layers": common.stacked(layer_schema(cfg), cfg.n_layers),
+        "final_norm": Param((cfg.d_model,), (None,), init="ones"),
+        "lm_head": Param((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def init(rng: jax.Array, cfg: MixtralConfig):
+    return common.init_from_schema(rng, schema(cfg), cfg.param_dtype)
+
+
+def _attention(lp, x, positions, cfg: MixtralConfig, *, window_path: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    if window_path and cfg.window is not None:
+        return common.local_window_attention(q, k, v, window=cfg.window)
+    return common.full_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk)
+
+
+def forward(
+    params: Dict[str, Any], cfg: MixtralConfig, tokens: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (logits, moe_stats averaged over layers)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = common.constrain(x, ("batch", None, None))
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        h = common.rms_norm(x, lp["attn_norm"])
+        attn = _attention(lp["attn"], h, positions, cfg, window_path=True)
+        x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["attn"]["wo"])
+        h = common.rms_norm(x, lp["mlp_norm"])
+        out, stats = moe_apply(lp["moe"], h, cfg.moe)
+        return x + out, stats
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, stats = jax.lax.scan(body_fn, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(cfg.compute_dtype)
+    ).astype(jnp.float32)
+    mean_stats = {k: v.mean() for k, v in stats.items()}
+    return logits, mean_stats
+
+
+def init_cache(cfg: MixtralConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    length = min(cfg.decode_window or seq_len, seq_len)
+    return common.make_kv_cache(
+        cfg.n_layers, batch, length, cfg.n_kv_heads, cfg.head_dim, dtype
+    )
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cfg: MixtralConfig,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    length = cache["k"].shape[2]
+    ring = cfg.decode_window is not None and length == cfg.decode_window
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(x, layer):
+        lp, k_cache, v_cache = layer
+        h = common.rms_norm(x, lp["attn_norm"])
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+        idx = pos % length if ring else pos
+        k_cache, v_cache = common.cache_update(k_cache, v_cache, k, v, idx)
+        attn = common.decode_attention(
+            q, k_cache, v_cache, pos=pos, window=None if ring else cfg.window
+        )
+        x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["attn"]["wo"])
+        h = common.rms_norm(x, lp["mlp_norm"])
+        out, _ = moe_apply(lp["moe"], h, cfg.moe)
+        return x + out, (k_cache, v_cache)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = common.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(cfg.compute_dtype)
+    ).astype(jnp.float32)
+    return logits, {"k": new_k, "v": new_v, "pos": pos + 1}

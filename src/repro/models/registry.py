@@ -1,0 +1,221 @@
+"""Uniform model API over the six architecture families.
+
+Every family module exposes slightly different signatures (whisper takes
+(audio, tokens); MoE forwards return router stats).  `ModelApi` normalizes:
+
+  api.init(rng)                          -> params
+  api.loss(params, batch)                -> (scalar loss, aux dict)
+  api.logits(params, batch)              -> logits
+  api.init_cache(batch_size, seq_len)    -> cache pytree
+  api.decode_step(params, cache, tok, pos) -> (logits, cache)
+  api.schema() / api.specs(rules)        -> param schema / PartitionSpecs
+  api.train_batch_specs(batch, seq)      -> {name: ShapeDtypeStruct}
+  api.batch_sharding(rules, batch_keys)  -> {name: PartitionSpec}
+
+`batch` is a dict with integer token arrays plus an optional per-sample
+weight vector "weights" (B,) — the Eq. (9) heterogeneous aggregation hook:
+a weighted-SUM cross-entropy normalized by total weight reproduces
+g = sum_i r_i g_i exactly (see core/aggregation.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, deepseek, dense, hymba, moe, rwkv6, whisper
+from repro.sharding.rules import MeshRules
+
+__all__ = ["ModelApi", "build_api"]
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+
+
+def _token_loss(logits, labels, weights, denom=None):
+    """Per-token CE.  ``denom`` overrides the normalizer — used by gradient
+    accumulation so microbatch gradients sum to the exact global-batch
+    gradient even with non-uniform per-sample weights (Eq. 9)."""
+    if weights is not None:
+        w = jnp.broadcast_to(weights[:, None], labels.shape).astype(jnp.float32)
+    else:
+        w = None
+    loss_sum, w_sum = common.weighted_cross_entropy(logits, labels, w)
+    if denom is None:
+        denom = (
+            w_sum * labels.shape[-1] if weights is not None else jnp.float32(labels.size)
+        )
+        denom = jnp.maximum(w_sum if weights is not None else denom, 1e-9)
+    return loss_sum / denom
+
+
+@dataclasses.dataclass
+class ModelApi:
+    arch_id: str
+    cfg: Any
+    family: str
+    _module: Any
+    is_encoder_decoder: bool = False
+    has_moe_stats: bool = False
+
+    # -- params ---------------------------------------------------------
+    def schema(self):
+        return self._module.schema(self.cfg)
+
+    def init(self, rng: jax.Array):
+        return self._module.init(rng, self.cfg)
+
+    def specs(self, rules: MeshRules):
+        return common.specs_from_schema(self.schema(), rules)
+
+    def param_count(self) -> int:
+        return common.param_count(self.schema())
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: shared + top-k routed experts
+        only) — the N in MODEL_FLOPS = 6*N*D (§Roofline)."""
+        total = self.param_count()
+        cfg = self.cfg
+        if isinstance(cfg, moe.MixtralConfig):
+            expert = 3 * cfg.d_model * cfg.d_ff  # swiglu expert
+            inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert
+            return total - inactive
+        if isinstance(cfg, deepseek.DeepSeekConfig):
+            expert = 3 * cfg.d_model * cfg.d_ff_expert
+            inactive = (cfg.n_layers - 1) * (cfg.n_experts - cfg.top_k) * expert
+            return total - inactive
+        return total
+
+    # -- forward/loss ---------------------------------------------------
+    def logits(self, params, batch: Dict[str, jax.Array]):
+        if self.is_encoder_decoder:
+            out = self._module.forward(
+                params, self.cfg, batch["audio_embed"], batch["tokens"]
+            )
+        else:
+            out = self._module.forward(params, self.cfg, batch["tokens"])
+        if self.has_moe_stats:
+            return out[0]
+        return out
+
+    def loss(
+        self, params, batch: Dict[str, jax.Array], *, denom=None
+    ) -> Tuple[jax.Array, Dict]:
+        weights = batch.get("weights")
+        aux: Dict[str, jax.Array] = {}
+        if self.is_encoder_decoder:
+            logits = self._module.forward(
+                params, self.cfg, batch["audio_embed"], batch["tokens"]
+            )
+        elif self.has_moe_stats:
+            logits, stats = self._module.forward(params, self.cfg, batch["tokens"])
+            aux.update(stats)
+        else:
+            logits = self._module.forward(params, self.cfg, batch["tokens"])
+        loss = _token_loss(logits, batch["labels"], weights, denom)
+        if self.has_moe_stats:
+            loss = loss + MOE_LB_WEIGHT * aux["lb_loss"] + MOE_Z_WEIGHT * aux["z_loss"]
+        aux["ce_loss"] = loss
+        return loss, aux
+
+    # -- serving --------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        return self._module.init_cache(self.cfg, batch, seq_len, dtype)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return self._module.decode_step(params, self.cfg, cache, tokens, pos)
+
+    def supports_long_context(self) -> bool:
+        """True if decode over 500k positions is sub-quadratic / bounded-cache."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.arch_id.startswith("whisper"):
+            return False
+        cfg = self.cfg
+        if getattr(cfg, "decode_window", None) is not None:
+            return True
+        if isinstance(cfg, deepseek.DeepSeekConfig):
+            return True  # MLA latent cache: 576 floats/token
+        return False
+
+    def cache_logical_axes(self) -> Dict[str, Tuple]:
+        """Logical axes per cache leaf name (leading dim = stacked layers)."""
+        if self.arch_id.startswith("whisper"):
+            kv = (None, "batch", "cache_seq", "heads", None)
+            return {"k": kv, "v": kv, "cross_k": kv, "cross_v": kv, "pos": ()}
+        if self.family == "ssm":  # rwkv6
+            return {
+                "wkv": (None, "batch", "heads", None, None),
+                "time_shift": (None, "batch", None),
+                "chan_shift": (None, "batch", None),
+                "pos": (),
+            }
+        if self.family == "hybrid":  # hymba
+            kv = (None, "batch", "cache_seq", "kv_heads", None)
+            return {
+                "k": kv,
+                "v": kv,
+                "ssm": (None, "batch", "ssm_inner", None),
+                "conv": (None, "batch", None, "ssm_inner"),
+                "pos": (),
+            }
+        if isinstance(self.cfg, deepseek.DeepSeekConfig):
+            return {
+                "c": (None, "batch", "cache_seq", None),
+                "kr": (None, "batch", "cache_seq", None),
+                "pos": (),
+            }
+        kv = (None, "batch", "cache_seq", "kv_heads", None)
+        return {"k": kv, "v": kv, "pos": ()}
+
+    def cache_specs(self, rules: MeshRules, batch: int, seq_len: int):
+        """PartitionSpec pytree for the decode cache (divisibility-checked)."""
+        shapes = jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+        axes = self.cache_logical_axes()
+        return {
+            name: rules.spec(axes[name], sds.shape, path=f"cache/{name}")
+            for name, sds in shapes.items()
+        }
+
+    # -- dry-run input specs --------------------------------------------
+    def train_batch_specs(self, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        if self.is_encoder_decoder:
+            st = max(seq // 4, 8)
+            return {
+                "audio_embed": jax.ShapeDtypeStruct(
+                    (batch, seq, self.cfg.d_model), jnp.bfloat16
+                ),
+                "tokens": jax.ShapeDtypeStruct((batch, st), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, st), jnp.int32),
+                "weights": jax.ShapeDtypeStruct((batch,), jnp.float32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "weights": jax.ShapeDtypeStruct((batch,), jnp.float32),
+        }
+
+    def batch_sharding(self, rules: MeshRules, specs: Dict[str, Any]) -> Dict[str, Any]:
+        out = {}
+        for name, sds in specs.items():
+            extra = len(sds.shape) - 1
+            out[name] = rules.batch_spec(extra_dims=extra)
+        return out
+
+
+def build_api(arch_id: str, cfg: Any) -> ModelApi:
+    if isinstance(cfg, dense.DenseConfig):
+        return ModelApi(arch_id, cfg, cfg.family, dense)
+    if isinstance(cfg, moe.MixtralConfig):
+        return ModelApi(arch_id, cfg, cfg.family, moe, has_moe_stats=True)
+    if isinstance(cfg, deepseek.DeepSeekConfig):
+        return ModelApi(arch_id, cfg, cfg.family, deepseek, has_moe_stats=True)
+    if isinstance(cfg, rwkv6.RWKV6Config):
+        return ModelApi(arch_id, cfg, cfg.family, rwkv6)
+    if isinstance(cfg, hymba.HymbaConfig):
+        return ModelApi(arch_id, cfg, cfg.family, hymba)
+    if isinstance(cfg, whisper.WhisperConfig):
+        return ModelApi(arch_id, cfg, cfg.family, whisper, is_encoder_decoder=True)
+    raise TypeError(f"unknown config type {type(cfg)}")

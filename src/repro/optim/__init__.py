@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    global_norm,
+    sgd,
+)
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "cosine_schedule",
+    "constant_schedule",
+    "global_norm",
+    "clip_by_global_norm",
+]

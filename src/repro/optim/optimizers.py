@@ -1,0 +1,159 @@
+"""Optimizers (pure pytree implementations — no optax in this environment).
+
+SGD+momentum and AdamW, plus LR schedules and the AdaScale/sqrt LR-scaling
+hooks the paper's Table 4 workloads use.  All states are pytrees compatible
+with pjit sharding (moments inherit the parameter PartitionSpecs; a ZeRO-1
+wrapper for sharding moments over the data axis lives in launch/steps).
+
+Mixed precision: parameters may be bf16; moments and the update math run in
+float32; the update is cast back to the parameter dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "adamw",
+    "cosine_schedule",
+    "constant_schedule",
+    "global_norm",
+    "clip_by_global_norm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """(init, update) pair.  update(grads, state, params, lr_scale) ->
+    (new_params, new_state).  ``lr_scale`` is the Cannikin/AdaScale
+    per-epoch multiplier."""
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], Tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def constant_schedule(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(
+    lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def fn(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr) * jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+    step: jax.Array
+
+
+def sgd(
+    schedule: Callable[[jax.Array], jax.Array],
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    def init(params: PyTree) -> SGDState:
+        mom = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return SGDState(momentum=mom, step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: SGDState, params, lr_scale=1.0):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(state.step) * lr_scale
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g32
+            p_new = p.astype(jnp.float32) - lr * m_new
+            return p_new.astype(p.dtype), m_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state.momentum, params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mom = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, SGDState(momentum=new_mom, step=state.step + 1)
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+class AdamWState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: jax.Array
+
+
+def adamw(
+    schedule: Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    def init(params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state: AdamWState, params, lr_scale=1.0):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr = schedule(state.step) * lr_scale
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * g32 * g32
+            mh = m_new / bc1
+            vh = v_new / bc2
+            p32 = p.astype(jnp.float32)
+            p_new = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+            return p_new.astype(p.dtype), m_new, v_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+        take = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return take(0), AdamWState(m=take(1), v=take(2), step=step)
+
+    return Optimizer(init=init, update=update, name="adamw")

@@ -1,0 +1,4 @@
+"""Sharding: logical-axis rules and mesh helpers."""
+from repro.sharding.rules import Fallback, MeshRules
+
+__all__ = ["MeshRules", "Fallback"]

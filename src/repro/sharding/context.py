@@ -1,0 +1,54 @@
+"""Activation-sharding constraint hook.
+
+Model code is mesh-agnostic; inside pjit, GSPMD occasionally loses the batch
+or head sharding of activations across scan boundaries (observed: MLA
+attention replicated over the 16-way model axis inside the kv-chunk scan —
+a 16x FLOP bloat; MoE expert buffers replicated over data).  Models call
+``constrain(x, logical_axes)`` at those points; it is a no-op unless a
+`sharding_context(mesh, rules)` is active (the launcher activates it), so
+single-device tests and the hetero trainer are unaffected.
+
+Divisibility/duplicate-axis fallbacks come from MeshRules.spec, so a
+constraint never produces an invalid spec (e.g. batch=1 stays replicated).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding.rules import MeshRules
+
+__all__ = ["sharding_context", "constrain", "active_rules"]
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules: MeshRules):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def active_rules():
+    """The MeshRules of the active sharding context, or None."""
+    ctx = getattr(_state, "ctx", None)
+    return ctx[1] if ctx else None
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"axes rank {len(logical_axes)} != tensor rank {x.ndim}")
+    spec = rules.spec(logical_axes, x.shape, path="activation")
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

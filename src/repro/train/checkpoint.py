@@ -1,0 +1,77 @@
+"""Checkpointing: pytree <-> .npz with keypath-string keys.
+
+No orbax in this environment; .npz keeps things dependency-free and is
+adequate for host-side checkpoints.  Arrays are gathered to host (works for
+sharded arrays via np.asarray on addressable data in single-process runs).
+bfloat16 has no numpy dtype — such leaves round-trip via a float32 view with
+a dtype tag.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save", "restore"]
+
+_DTYPE_TAG = "__dtypes__"
+
+
+def _key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: PyTree) -> None:
+    flat = {}
+    dtypes = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        k = _key(kp)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            dtypes[k] = "bfloat16"
+            arr = arr.astype(np.float32)
+        flat[k] = arr
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        np.savez(f, **flat, **{_DTYPE_TAG: np.frombuffer(
+            json.dumps(dtypes).encode(), dtype=np.uint8
+        )})
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes validated)."""
+    with np.load(path) as data:
+        dtypes: Dict[str, str] = {}
+        if _DTYPE_TAG in data:
+            dtypes = json.loads(bytes(data[_DTYPE_TAG]).decode())
+        leaves = []
+        for kp, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+            k = _key(kp)
+            if k not in data:
+                raise KeyError(f"checkpoint missing leaf {k!r}")
+            arr = data[k]
+            want_shape = tuple(np.shape(leaf))
+            if tuple(arr.shape) != want_shape:
+                raise ValueError(
+                    f"shape mismatch for {k}: checkpoint {arr.shape} vs model {want_shape}"
+                )
+            if dtypes.get(k) == "bfloat16":
+                arr = jnp.asarray(arr, jnp.bfloat16)
+            leaves.append(jnp.asarray(arr))
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,127 @@
+"""Train / serve step builders.
+
+`build_train_step` produces the function the launcher pjit-compiles:
+forward + backward (+ optional gradient accumulation over microbatches) +
+optimizer update.  Per-sample weights flow through the loss so a single
+SPMD step over the padded-uneven global batch realizes the paper's Eq. (9)
+weighted gradient aggregation exactly (see core/aggregation.py).
+
+Gradient accumulation normalizes every microbatch by the *global* weight
+sum, so the accumulated gradient equals the unaccumulated one bit-for-bit
+in exact arithmetic (tests/test_train_step.py checks this numerically).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelApi
+from repro.optim.optimizers import Optimizer, global_norm
+
+PyTree = Any
+
+__all__ = ["build_train_step", "build_serve_step", "build_prefill_step"]
+
+
+def _global_denom(batch: Dict[str, jax.Array]) -> jax.Array:
+    labels = batch["labels"]
+    if "weights" in batch and batch["weights"] is not None:
+        return jnp.maximum(batch["weights"].sum().astype(jnp.float32), 1e-9)
+    return jnp.float32(labels.size / labels.shape[-1])
+
+
+def build_train_step(
+    api: ModelApi,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+    with_metrics: bool = True,
+    microbatch_shardings: Optional[Dict[str, Any]] = None,
+) -> Callable:
+    """Returns step(params, opt_state, batch, lr_scale) ->
+    (params, opt_state, metrics).
+
+    ``microbatch_shardings``: {input name: NamedSharding} applied to every
+    microbatch inside the accumulation scan.  Without it GSPMD loses the
+    batch-axis sharding through the (B,) -> (M, B/M) reshape and re-shards
+    activations onto far fewer devices (observed: 8x FLOPs/device on the
+    dry-run) — see EXPERIMENTS.md §Perf iteration 0.
+    """
+
+    def loss_fn(params, mb, denom):
+        loss, aux = api.loss(params, mb, denom=denom)
+        return loss, aux
+
+    def step(params, opt_state, batch, lr_scale=jnp.float32(1.0)):
+        seq = batch["labels"].shape[-1]
+        denom = _global_denom(batch) * seq
+
+        if microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, denom
+            )
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                if b % microbatches:
+                    raise ValueError(
+                        f"batch {b} not divisible by microbatches {microbatches}"
+                    )
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mbs = {k: reshape(v) for k, v in batch.items()}
+            zero_grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                if microbatch_shardings is not None:
+                    mb = {
+                        k: (
+                            jax.lax.with_sharding_constraint(v, microbatch_shardings[k])
+                            if k in microbatch_shardings
+                            else v
+                        )
+                        for k, v in mb.items()
+                    }
+                (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb, denom
+                )
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + loss), aux
+
+            (grads, loss), auxs = jax.lax.scan(accum, (zero_grads, 0.0), mbs)
+            aux = {k: v.mean() for k, v in auxs.items()}
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr_scale)
+        metrics = {"loss": loss}
+        if with_metrics:
+            metrics["grad_norm"] = global_norm(grads)
+            metrics.update({f"aux/{k}": v for k, v in aux.items()})
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def build_serve_step(api: ModelApi) -> Callable:
+    """One-token decode: step(params, cache, tokens, pos) -> (logits, cache)."""
+
+    def step(params, cache, tokens, pos):
+        return api.decode_step(params, cache, tokens, pos)
+
+    return step
+
+
+def build_prefill_step(api: ModelApi) -> Callable:
+    """Full-sequence forward (no loss): step(params, batch) -> logits."""
+
+    def step(params, batch):
+        return api.logits(params, batch)
+
+    return step

@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS here — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py fakes 512 devices (in a
+# separate process).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

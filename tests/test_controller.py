@@ -1,0 +1,118 @@
+"""Cannikin controller end-to-end over the simulator: bootstrap -> learned
+models -> OptPerf plans; baseline policies; convergence-speed ordering
+(Fig. 9 analogue: Cannikin reaches near-OptPerf by epoch 3, LB-BSP needs
+many epochs)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import EvenPartition, LBBSPPartition
+from repro.core.controller import CannikinController
+from repro.core.optperf import solve_optperf_algorithm1
+from repro.core.simulator import SimulatedCluster, cluster_A, cluster_B
+
+
+def drive(policy, sim, total_batch, epochs, steps=5):
+    """Run a partition policy against the simulator; returns per-epoch batch
+    times."""
+    times = []
+    last = None
+    for epoch in range(epochs):
+        if isinstance(policy, CannikinController):
+            plan = policy.plan_epoch()
+            batches = list(plan.batches)
+        else:
+            batches = policy.partition(total_batch, epoch, last)
+        t, ms = sim.run_epoch(batches, steps)
+        last = ms[-1]
+        if isinstance(policy, CannikinController):
+            policy.observe_epoch(ms)
+        times.append(t / steps)
+    return times
+
+
+def test_cannikin_reaches_optperf_by_epoch_3():
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
+    ctrl = CannikinController(
+        sim.n, batch_candidates=[128], ref_batch=128, adaptive=False
+    )
+    times = drive(ctrl, sim, 128, epochs=6)
+    best = solve_optperf_algorithm1(sim.true_model(), 128).opt_perf
+    # Paper Fig. 9: OptPerf reached at the 3rd epoch (two learning epochs).
+    assert times[2] <= best * 1.08
+    assert times[-1] <= best * 1.05
+
+
+def test_cannikin_beats_even_and_lbbsp_early():
+    profiles, comm = cluster_B()
+    for seed in (0, 1):
+        sims = [
+            SimulatedCluster(profiles, comm, noise=0.01, seed=seed) for _ in range(3)
+        ]
+        ctrl = CannikinController(
+            sims[0].n, batch_candidates=[512], ref_batch=512, adaptive=False
+        )
+        t_cannikin = drive(ctrl, sims[0], 512, epochs=6)
+        t_even = drive(EvenPartition(sims[1].n), sims[1], 512, epochs=6)
+        t_lbbsp = drive(LBBSPPartition(sims[2].n, delta=5), sims[2], 512, epochs=6)
+        # After learning, Cannikin is much faster than even split and faster
+        # than LB-BSP at epoch 6 (LB-BSP moves only delta samples/epoch).
+        assert t_cannikin[-1] < 0.8 * t_even[-1]
+        assert t_cannikin[-1] < t_lbbsp[-1]
+
+
+def test_lbbsp_restarts_on_batch_change():
+    lb = LBBSPPartition(4, delta=5)
+    b1 = lb.partition(64, 0, None)
+    assert b1 == [16, 16, 16, 16]
+    lb._batches = [10, 20, 20, 14]
+    b2 = lb.partition(128, 1, None)  # total changed -> even restart
+    assert b2 == [32, 32, 32, 32]
+
+
+def test_adaptive_total_batch_increases_with_low_noise():
+    """With B_noise large, goodput favors bigger batches; the controller
+    should move above the reference batch once models are learned."""
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
+    ctrl = CannikinController(
+        sim.n, batch_candidates=[64, 128, 256, 512], ref_batch=64
+    )
+    for _ in range(4):
+        plan = ctrl.plan_epoch()
+        _, ms = sim.run_epoch(list(plan.batches), 4)
+        ctrl.observe_epoch(ms)
+        # Feed a large, constant gradient-noise observation.
+        ctrl.observe_gradients([10.0] * sim.n, 2.0, list(plan.batches))
+    final = ctrl.last_plan
+    assert final.phase == "optperf"
+    assert final.total_batch > 64
+
+
+def test_plan_respects_local_bounds():
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    ctrl = CannikinController(
+        sim.n, batch_candidates=[90], ref_batch=90, adaptive=False,
+        min_local=10, max_local=50,
+    )
+    for _ in range(4):
+        plan = ctrl.plan_epoch()
+        assert sum(plan.batches) == plan.total_batch
+        assert all(10 <= b <= 50 for b in plan.batches)
+        _, ms = sim.run_epoch(list(plan.batches), 3)
+        ctrl.observe_epoch(ms)
+
+
+def test_controller_overhead_tracked():
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    ctrl = CannikinController(sim.n, batch_candidates=[64, 128], ref_batch=64)
+    for _ in range(3):
+        plan = ctrl.plan_epoch()
+        _, ms = sim.run_epoch(list(plan.batches), 3)
+        ctrl.observe_epoch(ms)
+    assert ctrl.stats.epochs_planned == 3
+    assert ctrl.stats.overhead_seconds > 0
+    # Overhead must be insignificant relative to even 1s of training.
+    assert ctrl.stats.overhead_fraction(1.0) < 0.5

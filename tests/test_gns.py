@@ -1,0 +1,158 @@
+"""Heterogeneous GNS tests: unbiasedness of the Eq. (10) estimators, the
+Theorem 4.1 weights (paper and corrected), and the minimum-variance claim.
+
+The Monte-Carlo setup follows the paper's regime of validity (delta method:
+|G|^2 >> tr(Sigma)/b_i).  These tests document the reproduction finding that
+the paper's printed covariance entries do NOT minimize variance (the Lemma
+B.5 proof drops the g_j . g_l cross terms of |g|^2); the corrected entries
+do.  See EXPERIMENTS.md §Reproduction-notes.
+"""
+import numpy as np
+import pytest
+
+from repro.core.gns import (
+    GNSState,
+    _a_g_matrix_corrected,
+    _a_s_matrix_corrected,
+    estimate_gns,
+    gns_update,
+    gns_weights,
+    homogeneous_gns,
+)
+
+
+def simulate(rng, batches, n_trials, d=3000, g_norm=10.0, sigma=0.05):
+    """Draw local/global gradient square-norms with known ground truth."""
+    G = rng.normal(size=d)
+    G *= g_norm / np.linalg.norm(G)
+    B = float(sum(batches))
+    out = []
+    for _ in range(n_trials):
+        gi = [G + rng.normal(size=d) * sigma / np.sqrt(b) for b in batches]
+        g = sum((b / B) * x for b, x in zip(batches, gi))
+        out.append(([float(x @ x) for x in gi], float(g @ g)))
+    true_g2 = g_norm**2
+    true_tr = d * sigma**2
+    return out, true_g2, true_tr
+
+
+BATCHES = [7, 13, 29, 51]
+
+
+@pytest.fixture(scope="module")
+def mc(rng):
+    return simulate(rng, BATCHES, n_trials=1500)
+
+
+def _estimates(mc_samples, weights):
+    return np.array(
+        [estimate_gns(sq, gsq, BATCHES, weights=weights)[1:] for sq, gsq in mc_samples]
+    )
+
+
+def test_weights_sum_to_one():
+    for corrected in (True, False):
+        w_g, w_s = gns_weights(BATCHES, sum(BATCHES), corrected=corrected)
+        assert w_g.sum() == pytest.approx(1.0, abs=1e-9)
+        assert w_s.sum() == pytest.approx(1.0, abs=1e-9)
+
+
+def test_estimators_unbiased(mc):
+    samples, true_g2, true_tr = mc
+    w = gns_weights(BATCHES, sum(BATCHES), corrected=True)
+    est = _estimates(samples, w)
+    # Unbiasedness within Monte-Carlo error (3 sigma of the mean).
+    se_g = est[:, 0].std() / np.sqrt(len(est))
+    se_s = est[:, 1].std() / np.sqrt(len(est))
+    assert abs(est[:, 0].mean() - true_g2) < 4 * se_g + 1e-3 * true_g2
+    assert abs(est[:, 1].mean() - true_tr) < 4 * se_s + 1e-3 * true_tr
+
+
+def test_corrected_weights_beat_plain_average(mc):
+    """The minimum-variance property Theorem 4.1 claims — realized by the
+    cross-term-corrected covariances."""
+    samples, _, _ = mc
+    w_corr = gns_weights(BATCHES, sum(BATCHES), corrected=True)
+    est_corr = _estimates(samples, w_corr)
+    est_hom = np.array(
+        [homogeneous_gns(sq, gsq, BATCHES)[1:] for sq, gsq in samples]
+    )
+    assert est_corr[:, 1].var() < est_hom[:, 1].var() * 0.5  # S: large win
+    assert est_corr[:, 0].var() < est_hom[:, 0].var() * 1.05  # G: no worse
+
+
+def test_paper_weights_do_not_minimize_variance(mc):
+    """Reproduction finding: the paper's printed A_S entries give HIGHER
+    variance than plain averaging in the isotropic-noise Monte Carlo."""
+    samples, _, _ = mc
+    w_paper = gns_weights(BATCHES, sum(BATCHES), corrected=False)
+    est_paper = _estimates(samples, w_paper)
+    est_hom = np.array(
+        [homogeneous_gns(sq, gsq, BATCHES)[1:] for sq, gsq in samples]
+    )
+    assert est_paper[:, 1].var() > est_hom[:, 1].var()
+
+
+def test_corrected_covariance_matches_empirical(rng):
+    """The corrected A_S/A_G entries match the empirical covariance of the
+    local estimators (up to the common 4|G|^2 tr(Sigma) factor and the 1/d
+    isotropy factor)."""
+    d, g_norm, sigma = 4000, 10.0, 0.05
+    batches = np.array(BATCHES, float)
+    B = batches.sum()
+    samples, _, _ = simulate(rng, BATCHES, n_trials=4000, d=d, g_norm=g_norm, sigma=sigma)
+    gs, ss_ = [], []
+    for sq, gsq in samples:
+        sq = np.asarray(sq)
+        gs.append((B * gsq - batches * sq) / (B - batches))
+        ss_.append(batches * B / (B - batches) * (sq - gsq))
+    unit = 4 * g_norm**2 * sigma**2  # = 4|G|^2 tr(Sigma)/d
+    cov_s = np.cov(np.array(ss_).T) / unit
+    a_s = _a_s_matrix_corrected(batches, B)
+    # Diagonal within 15%, off-diagonal sign and magnitude.
+    assert np.allclose(np.diag(cov_s), np.diag(a_s), rtol=0.15)
+    off = ~np.eye(len(batches), dtype=bool)
+    assert np.all(a_s[off] < 0)
+    assert np.allclose(cov_s[off], a_s[off], rtol=0.5, atol=0.05 * np.abs(a_s[off]).max())
+
+
+def test_corrected_weights_closed_form():
+    """v_i = B - b_i is an exact null vector of the corrected A_S and maps
+    to (n-1)*ones under the corrected A_G — so the optimal weights have the
+    closed form w_i = (B-b_i)/((n-1)B) for both estimators."""
+    b = np.array(BATCHES, float)
+    B = b.sum()
+    n = b.size
+    v = B - b
+    a_s = _a_s_matrix_corrected(b, B)
+    a_g = _a_g_matrix_corrected(b, B)
+    np.testing.assert_allclose(a_s @ v, 0.0, atol=1e-9)
+    np.testing.assert_allclose(a_g @ v, (n - 1) * np.ones(n), rtol=1e-12)
+    w_g, w_s = gns_weights(BATCHES, B, corrected=True)
+    np.testing.assert_allclose(w_g, v / ((n - 1) * B))
+    np.testing.assert_allclose(w_s, v / ((n - 1) * B))
+
+
+def test_homogeneous_reduces_to_average():
+    """Equal batches -> optimal weights are the plain average (paper §4.4)."""
+    w_g, w_s = gns_weights([32, 32, 32, 32], 128, corrected=True)
+    assert np.allclose(w_g, 0.25, atol=1e-9)
+    assert np.allclose(w_s, 0.25, atol=1e-9)
+
+
+def test_gns_state_ema_and_efficiency():
+    state = GNSState()
+    for _ in range(50):
+        state = gns_update(state, g=4.0, s=400.0, decay=0.9)
+    assert state.b_noise == pytest.approx(100.0, rel=1e-6)
+    # efficiency decreasing in batch, 1 at B -> inf... relative form:
+    e_small = state.efficiency(10)
+    e_big = state.efficiency(1000)
+    assert 0 < e_small < e_big <= 1.0
+
+
+def test_gns_weights_validation():
+    with pytest.raises(ValueError):
+        gns_weights([0, 4], 4)
+    with pytest.raises(ValueError):
+        gns_weights([4, 4], 4)

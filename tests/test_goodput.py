@@ -1,0 +1,71 @@
+"""Goodput / batch-size selection tests (§2.2, §4.5)."""
+import numpy as np
+import pytest
+
+from repro.core.goodput import (
+    BatchSizeSelector,
+    adascale_gain,
+    goodput,
+    sqrt_lr_scale,
+    statistical_efficiency,
+)
+from repro.core.simulator import cluster_A
+from repro.core.perf_model import ClusterPerfModel
+
+
+def _model():
+    profiles, comm = cluster_A()
+    return ClusterPerfModel(nodes=tuple(p.model() for p in profiles), comm=comm)
+
+
+def test_efficiency_monotone_decreasing_in_batch():
+    effs = [statistical_efficiency(100.0, b, 32) for b in (32, 64, 128, 512)]
+    assert effs[0] == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(effs, effs[1:]))
+
+
+def test_efficiency_high_noise_tolerates_big_batches():
+    lo = statistical_efficiency(10.0, 512, 32)
+    hi = statistical_efficiency(10000.0, 512, 32)
+    assert hi > lo
+
+
+def test_goodput_interior_optimum():
+    """Throughput rises sublinearly with B while efficiency falls — goodput
+    has an interior optimum over a wide candidate range."""
+    model = _model()
+    b_noise = 500.0
+    gps = {b: goodput(model, b, b_noise, 32)[0] for b in (8, 32, 128, 512, 4096)}
+    best = max(gps, key=gps.get)
+    assert best not in (8, 4096)
+    # Higher noise shifts the optimum to larger batches (never smaller).
+    gps_hi = {b: goodput(model, b, 5000.0, 32)[0] for b in (8, 32, 128, 512, 4096)}
+    assert max(gps_hi, key=gps_hi.get) >= best
+
+
+def test_adascale_gain_bounds():
+    assert adascale_gain(1e9, 256, 32) == pytest.approx(8.0, rel=1e-3)
+    assert adascale_gain(1e-9, 256, 32) == pytest.approx(1.0, abs=1e-6)
+    g = adascale_gain(100.0, 256, 32)
+    assert 1.0 < g < 8.0
+    assert sqrt_lr_scale(256, 64) == pytest.approx(2.0)
+
+
+def test_selector_caches_and_invalidates():
+    model = _model()
+    sel = BatchSizeSelector(candidates=(64, 128, 256, 512), ref_batch=64)
+    b1, sol1, _ = sel.select(model, b_noise=150.0)
+    assert sel.full_sweeps == 1
+    b2, _, _ = sel.select(model, b_noise=150.0)
+    assert b2 == b1
+    # Second select with unchanged models reuses the cache (no resweep).
+    assert sel.full_sweeps == 1
+    assert sel.incremental_updates >= 1
+
+
+def test_selector_tracks_noise():
+    model = _model()
+    sel = BatchSizeSelector(candidates=(64, 128, 256, 512, 1024), ref_batch=64)
+    b_low, _, _ = sel.select(model, b_noise=5.0)
+    b_high, _, _ = sel.select(model, b_noise=5000.0)
+    assert b_high >= b_low

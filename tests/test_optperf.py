@@ -1,0 +1,152 @@
+"""OptPerf solver tests: Algorithm 1 vs the water-fill oracle, optimality
+properties, special cases (App. A), and integer rounding."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.optperf import (
+    round_batches,
+    solve_optperf_algorithm1,
+    solve_optperf_waterfill,
+)
+from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
+
+
+def make_model(qs, ss, ks, ms, t_o, t_u, gamma):
+    nodes = tuple(
+        NodePerfModel(q=q, s=s, k=k, m=m) for q, s, k, m in zip(qs, ss, ks, ms)
+    )
+    return ClusterPerfModel(nodes=nodes, comm=CommModel(t_o=t_o, t_u=t_u, gamma=gamma))
+
+
+coeff = st.floats(1e-4, 8e-3)
+intercept = st.floats(0.0, 0.02)
+
+
+@st.composite
+def cluster_strategy(draw):
+    n = draw(st.integers(2, 8))
+    qs = [draw(coeff) for _ in range(n)]
+    ks = [draw(coeff) for _ in range(n)]
+    ss = [draw(intercept) for _ in range(n)]
+    ms = [draw(intercept) for _ in range(n)]
+    t_o = draw(st.floats(0.0, 0.08))
+    t_u = draw(st.floats(0.0, 0.02))
+    gamma = draw(st.floats(0.02, 0.6))
+    return make_model(qs, ss, ks, ms, t_o, t_u, gamma)
+
+
+@hypothesis.given(cluster_strategy(), st.floats(16, 4096))
+@hypothesis.settings(max_examples=150, deadline=None)
+def test_algorithm1_matches_waterfill_oracle(model, total_batch):
+    """Paper Algorithm 1 and the exact bisection oracle agree."""
+    s1 = solve_optperf_algorithm1(model, total_batch)
+    s2 = solve_optperf_waterfill(model, total_batch)
+    assert s1.opt_perf == pytest.approx(s2.opt_perf, rel=1e-5, abs=1e-9)
+    assert sum(s1.batches) == pytest.approx(total_batch, rel=1e-6)
+
+
+@hypothesis.given(cluster_strategy(), st.floats(32, 2048), st.integers(0, 100))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_perturbation_cannot_improve(model, total_batch, seed):
+    """Moving batch mass between nodes never beats the OptPerf solution."""
+    sol = solve_optperf_algorithm1(model, total_batch)
+    rng = np.random.default_rng(seed)
+    b = np.asarray(sol.batches)
+    positive = np.where(b > 1e-6)[0]
+    if len(positive) < 2:
+        return
+    i, j = rng.choice(positive, 2, replace=False)
+    delta = min(b[i], 0.25 * total_batch) * rng.uniform(0.05, 1.0)
+    b2 = b.copy()
+    b2[i] -= delta
+    b2[j] += delta
+    assert model.cluster_time(list(b2)) >= sol.opt_perf * (1 - 1e-9)
+
+
+def test_all_compute_bottleneck_equalizes_t_compute():
+    """App A.1: when comm is negligible, OptPerf equalizes compute times."""
+    model = make_model(
+        qs=[1e-3, 2e-3, 4e-3], ss=[0.01, 0.01, 0.02],
+        ks=[2e-3, 3e-3, 6e-3], ms=[0.005, 0.01, 0.01],
+        t_o=1e-6, t_u=1e-6, gamma=0.1,
+    )
+    sol = solve_optperf_algorithm1(model, 512)
+    assert set(sol.bottleneck) == {"compute"}
+    times = [model.nodes[i].t_compute(b) for i, b in enumerate(sol.batches)]
+    assert max(times) - min(times) < 1e-8
+
+
+def test_all_comm_bottleneck_equalizes_syncstart():
+    """App A.2: with huge T_o every node is comm-bottleneck and syncStarts
+    equalize."""
+    model = make_model(
+        qs=[1e-3, 2e-3], ss=[0.001, 0.002],
+        ks=[1e-3, 2e-3], ms=[0.001, 0.002],
+        t_o=10.0, t_u=0.01, gamma=0.1,
+    )
+    sol = solve_optperf_algorithm1(model, 64)
+    assert set(sol.bottleneck) == {"comm"}
+    gamma = model.comm.gamma
+    starts = [model.nodes[i].sync_start(b, gamma) for i, b in enumerate(sol.batches)]
+    assert max(starts) - min(starts) < 1e-8
+
+
+def test_mixed_bottleneck_consistency():
+    """A cluster engineered to straddle the boundary: the returned partition
+    must be self-consistent with the overlap-state criterion."""
+    model = make_model(
+        qs=[5e-4, 5e-3], ss=[0.001, 0.001],
+        ks=[5e-4, 8e-3], ms=[0.001, 0.02],
+        t_o=0.03, t_u=0.005, gamma=0.2,
+    )
+    sol = solve_optperf_algorithm1(model, 256)
+    for i, (b, kind) in enumerate(zip(sol.batches, sol.bottleneck)):
+        assert model.is_compute_bottleneck(i, b) == (kind == "compute")
+
+
+def test_faster_node_gets_larger_batch():
+    model = make_model(
+        qs=[1e-3, 3e-3], ss=[0.01, 0.01], ks=[1.5e-3, 4.5e-3], ms=[0.008, 0.008],
+        t_o=0.02, t_u=0.005, gamma=0.15,
+    )
+    sol = solve_optperf_algorithm1(model, 300)
+    assert sol.batches[0] > sol.batches[1]
+
+
+def test_boundary_hint_matches_unhinted():
+    model = make_model(
+        qs=[5e-4, 1e-3, 5e-3], ss=[0.001, 0.002, 0.001],
+        ks=[5e-4, 2e-3, 8e-3], ms=[0.001, 0.01, 0.02],
+        t_o=0.03, t_u=0.005, gamma=0.2,
+    )
+    base = solve_optperf_algorithm1(model, 200)
+    for hint in range(4):
+        hinted = solve_optperf_algorithm1(model, 200, boundary_hint=hint)
+        assert hinted.opt_perf == pytest.approx(base.opt_perf, rel=1e-9)
+
+
+@hypothesis.given(
+    st.lists(st.floats(0.0, 200.0), min_size=2, max_size=10),
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_round_batches_sums_exactly(batches):
+    total = int(round(sum(batches)))
+    if total < sum(int(np.floor(b)) for b in batches) or total <= 0:
+        return
+    rounded = round_batches(batches, total)
+    assert sum(rounded) == total
+    assert all(abs(r - b) <= 1.0 + 1e-9 for r, b in zip(rounded, batches))
+
+
+def test_waterfill_handles_clamping():
+    """A hopeless straggler gets zero batch (Algorithm 1's linear solve would
+    go negative; the oracle clamps)."""
+    model = make_model(
+        qs=[1e-4, 1.0], ss=[0.0, 10.0], ks=[1e-4, 1.0], ms=[0.0, 10.0],
+        t_o=0.001, t_u=0.001, gamma=0.1,
+    )
+    sol = solve_optperf_waterfill(model, 64)
+    assert sol.batches[1] == 0.0
+    assert sol.batches[0] == pytest.approx(64.0)

@@ -1,0 +1,126 @@
+"""Performance-model learning: OLS fits, inverse-variance gamma weighting,
+T_comm min-aggregation, Eq. (8) bootstrap, and end-to-end model recovery
+from noisy simulated measurements (§4.5 / §5.3)."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.perf_model import (
+    GammaAggregator,
+    NodeObservation,
+    OnlineNodeFitter,
+    bootstrap_partition,
+    fit_linear,
+    inverse_variance_weight,
+)
+from repro.core.optperf import solve_optperf_algorithm1
+from repro.core.simulator import SimulatedCluster, cluster_A, cluster_B
+
+
+def test_fit_linear_exact():
+    slope, intercept = fit_linear([1, 2, 3, 4], [3, 5, 7, 9])
+    assert slope == pytest.approx(2.0)
+    assert intercept == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        fit_linear([2, 2], [1, 2])
+
+
+@hypothesis.given(
+    st.lists(st.floats(-5, 5), min_size=2, max_size=6),
+    st.lists(st.floats(0.01, 10.0), min_size=2, max_size=6),
+)
+@hypothesis.settings(max_examples=80, deadline=None)
+def test_ivw_bounds_and_optimality(means, variances):
+    n = min(len(means), len(variances))
+    means, variances = means[:n], variances[:n]
+    est = inverse_variance_weight(means, variances)
+    assert min(means) - 1e-9 <= est <= max(means) + 1e-9
+    # IVW leans toward the lowest-variance observation.
+    best = int(np.argmin(variances))
+    naive = float(np.mean(means))
+    if variances[best] * 10 < min(v for i, v in enumerate(variances) if i != best):
+        assert abs(est - means[best]) <= abs(naive - means[best]) + 1e-9
+
+
+def test_ivw_infinite_variance_ignored():
+    est = inverse_variance_weight([1.0, 100.0], [0.1, float("inf")])
+    assert est == pytest.approx(1.0)
+    # all-infinite falls back to the mean
+    est = inverse_variance_weight([1.0, 3.0], [float("inf"), float("inf")])
+    assert est == pytest.approx(2.0)
+
+
+def test_bootstrap_partition_inverse_proportional():
+    b = bootstrap_partition([1.0, 2.0, 4.0], 70)
+    assert sum(b) == pytest.approx(70)
+    assert b[0] == pytest.approx(40)
+    assert b[1] == pytest.approx(20)
+    assert b[2] == pytest.approx(10)
+
+
+def test_fitter_recovers_linear_model():
+    fitter = OnlineNodeFitter()
+    q, s, k, m = 2e-3, 0.01, 3e-3, 0.008
+    for b in (8, 16, 32, 64):
+        fitter.add(
+            NodeObservation(
+                batch_size=b, a_time=q * b + s, backprop_time=k * b + m,
+                gamma=0.15, comm_time=0.05,
+            )
+        )
+    model = fitter.fit()
+    assert model.q == pytest.approx(q, rel=1e-6)
+    assert model.k == pytest.approx(k, rel=1e-6)
+    assert model.s == pytest.approx(s, rel=1e-6)
+    assert model.m == pytest.approx(m, rel=1e-6)
+
+
+def test_gamma_aggregator_prefers_stable_nodes():
+    noisy, stable = OnlineNodeFitter(), OnlineNodeFitter()
+    rng = np.random.default_rng(0)
+    for i, b in enumerate((8, 16, 32, 64, 128)):
+        noisy.add(NodeObservation(b, 0.01 * b, 0.02 * b, 0.15 + rng.normal(0, 0.1), 0.05))
+        stable.add(NodeObservation(b, 0.01 * b, 0.02 * b, 0.15 + rng.normal(0, 0.002), 0.05))
+    agg = GammaAggregator({0: noisy, 1: stable})
+    gamma = agg.gamma()
+    assert abs(gamma - 0.15) < 0.02  # dominated by the stable node
+
+
+def test_prediction_error_with_learned_models():
+    """§5.3 analogue: learn models from noisy measurements over a few epochs,
+    then check the OptPerf prediction error against the noise-free cluster."""
+    profiles, comm = cluster_B()
+    sim = SimulatedCluster(profiles, comm, noise=0.02, seed=1)
+    fitters = {i: OnlineNodeFitter() for i in range(sim.n)}
+    rng = np.random.default_rng(0)
+    for epoch in range(5):
+        batches = [int(rng.integers(8, 64)) for _ in range(sim.n)]
+        _, ms = sim.run_epoch(batches, steps=6)
+        for i in range(sim.n):
+            obs = [m.observations[i] for m in ms]
+            fitters[i].add(
+                NodeObservation(
+                    batch_size=batches[i],
+                    a_time=float(np.mean([o.a_time for o in obs])),
+                    backprop_time=float(np.mean([o.backprop_time for o in obs])),
+                    gamma=float(np.mean([o.gamma for o in obs])),
+                    comm_time=float(np.min([o.comm_time for o in obs])),
+                )
+            )
+    from repro.core.perf_model import ClusterPerfModel, CommModel
+
+    agg = GammaAggregator(fitters)
+    learned = ClusterPerfModel(
+        nodes=tuple(fitters[i].fit() for i in range(sim.n)),
+        comm=CommModel(t_o=comm.t_o, t_u=comm.t_u, gamma=agg.gamma()),
+    )
+    truth = sim.true_model()
+    for B in (256, 512, 1024):
+        pred = solve_optperf_algorithm1(learned, B)
+        actual = truth.cluster_time(list(pred.batches))
+        best = solve_optperf_algorithm1(truth, B).opt_perf
+        # Prediction within 7% of realized time (paper §5.3), and the
+        # realized time within 7% of the true optimum.
+        assert abs(pred.opt_perf - actual) / actual < 0.07
+        assert (actual - best) / best < 0.07

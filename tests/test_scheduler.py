@@ -1,0 +1,135 @@
+"""Multi-job heterogeneity-aware scheduler + elastic controller tests
+(paper §6 future-work items, implemented as beyond-paper extensions)."""
+import numpy as np
+import pytest
+
+from repro.core.controller import CannikinController
+from repro.core.perf_model import CommModel
+from repro.core.scheduler import Allocation, JobSpec, allocate
+from repro.core.simulator import GPU_CATALOG, SimulatedCluster, cluster_B
+
+
+def make_job(name, node_names, total_batch, b_noise, scale=1.0, min_nodes=1):
+    models = tuple(
+        GPU_CATALOG[n].scaled(1.0 / scale).model() for n in node_names
+    )
+    return JobSpec(
+        name=name,
+        node_models=models,
+        comm=CommModel(t_o=0.04 * scale, t_u=0.008 * scale, gamma=0.15),
+        total_batch=total_batch,
+        b_noise=b_noise,
+        ref_batch=64,
+        min_nodes=min_nodes,
+    )
+
+
+NODES = ["a100"] * 4 + ["v100"] * 4 + ["rtx6000"] * 8
+
+
+def test_allocation_covers_cluster_and_jobs():
+    jobs = [
+        make_job("big", NODES, total_batch=1024, b_noise=2000.0, scale=2.0),
+        make_job("small", NODES, total_batch=128, b_noise=200.0, scale=0.2),
+    ]
+    alloc = allocate(jobs, len(NODES))
+    assigned = [n for ids in alloc.assignment.values() for n in ids]
+    assert sorted(assigned) == sorted(set(assigned))  # disjoint
+    assert all(len(ids) >= 1 for ids in alloc.assignment.values())
+    assert all(g > 0 for g in alloc.goodputs.values())
+    assert 0 < alloc.aggregate_fraction <= 2.0 + 1e-9
+
+
+def test_big_job_gets_more_nodes():
+    jobs = [
+        make_job("big", NODES, total_batch=2048, b_noise=5000.0, scale=2.0),
+        make_job("tiny", NODES, total_batch=64, b_noise=100.0, scale=0.1),
+    ]
+    alloc = allocate(jobs, len(NODES))
+    assert len(alloc.assignment["big"]) > len(alloc.assignment["tiny"])
+
+
+def test_greedy_beats_random_split():
+    rng = np.random.default_rng(0)
+    jobs = [
+        make_job("a", NODES, total_batch=512, b_noise=1500.0, scale=1.0),
+        make_job("b", NODES, total_batch=512, b_noise=1500.0, scale=1.0),
+    ]
+    alloc = allocate(jobs, len(NODES))
+    greedy = alloc.aggregate_fraction
+    # random disjoint splits
+    worst_gap = 0.0
+    for _ in range(10):
+        perm = rng.permutation(len(NODES))
+        half = len(NODES) // 2
+        f = (
+            jobs[0].goodput(tuple(perm[:half])) / max(jobs[0].solo_goodput(), 1e-12)
+            + jobs[1].goodput(tuple(perm[half:])) / max(jobs[1].solo_goodput(), 1e-12)
+        )
+        assert greedy >= f - 1e-6
+
+
+def test_min_nodes_respected():
+    jobs = [
+        make_job("needs4", NODES, total_batch=512, b_noise=1000.0, min_nodes=4),
+        make_job("any", NODES, total_batch=256, b_noise=500.0),
+    ]
+    alloc = allocate(jobs, len(NODES))
+    # min_nodes gates goodput to zero below the floor, so the greedy loop
+    # keeps feeding the job until it produces goodput.
+    assert len(alloc.assignment["needs4"]) >= 4 or alloc.goodputs["needs4"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# elastic controller
+# ---------------------------------------------------------------------------
+
+
+def _learn(ctrl, sim, epochs=3, steps=4):
+    for _ in range(epochs):
+        plan = ctrl.plan_epoch()
+        _, ms = sim.run_epoch(list(plan.batches), steps)
+        ctrl.observe_epoch(ms)
+    return plan
+
+
+def test_remove_nodes_keeps_models():
+    profiles, comm = cluster_B()
+    sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
+    ctrl = CannikinController(sim.n, batch_candidates=[256], ref_batch=256,
+                             adaptive=False)
+    _learn(ctrl, sim, epochs=4)
+    assert ctrl.last_plan.phase == "optperf"
+    # Scheduler takes the 8 rtx nodes away.
+    ctrl.remove_nodes(list(range(8, 16)))
+    plan = ctrl.plan_epoch()
+    assert plan.phase == "optperf"  # no re-bootstrap: models retained
+    assert len(plan.batches) == 8
+    assert sum(plan.batches) == 256
+    # Remaining nodes are the (faster) a100/v100s: predicted time must beat
+    # the LB-BSP-style even split over them.
+    sub = SimulatedCluster(profiles[:8], comm, noise=0.0, seed=0)
+    even = sub.run_batch([32] * 8).batch_time
+    opt = sub.run_batch(list(plan.batches)).batch_time
+    assert opt <= even * 1.02
+
+
+def test_add_nodes_triggers_bootstrap():
+    profiles, comm = cluster_B()
+    sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
+    ctrl = CannikinController(sim.n, batch_candidates=[256], ref_batch=256,
+                             adaptive=False)
+    _learn(ctrl, sim, epochs=4)
+    ctrl.add_nodes(2)
+    plan = ctrl.plan_epoch()
+    assert plan.phase == "bootstrap"  # two re-learning epochs (paper §6)
+    assert len(plan.batches) == 18
+    # After the new nodes see two distinct batch sizes, optperf resumes.
+    profiles2 = list(profiles) + [profiles[0], profiles[1]]
+    sim2 = SimulatedCluster(profiles2, comm, noise=0.005, seed=1)
+    for _ in range(3):
+        _, ms = sim2.run_epoch(list(plan.batches), 4)
+        ctrl.observe_epoch(ms)
+        plan = ctrl.plan_epoch()
+    assert plan.phase == "optperf"
+    assert len(plan.batches) == 18

@@ -1,0 +1,98 @@
+"""Sharding-rules unit tests: divisibility fallbacks, duplicate-axis rule,
+batch specs, constraint-context no-op, and mesh/microbatch helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import train_microbatches
+from repro.sharding.context import active_rules, constrain
+from repro.sharding.rules import MeshRules
+
+
+def rules(**kw):
+    base = dict(mesh_axes={"data": 16, "model": 16}, batch_axes=("data",))
+    base.update(kw)
+    return MeshRules(**base)
+
+
+def test_divisible_dims_shard():
+    r = rules()
+    assert r.spec(("embed", "ff"), (4096, 14336)) == P(None, "model")
+    r2 = rules(fsdp_axis="data")
+    assert r2.spec(("embed", "ff"), (4096, 14336)) == P("data", "model")
+
+
+def test_indivisible_dim_falls_back_and_is_recorded():
+    r = rules()
+    # 24 heads on a 16-way axis -> replicated.
+    spec = r.spec((None, "heads", None), (3072, 24, 128), path="wq")
+    assert spec == P()
+    assert any(f.path == "wq" and f.logical == "heads" for f in r.fallbacks)
+    assert "wq" in r.fallback_report()
+
+
+def test_duplicate_axis_earlier_dim_wins():
+    r = rules(cache_seq_axes=("model",))
+    # cache (L, B, T, KV, D): cache_seq takes "model"; kv_heads (16,
+    # divisible) must fall back because the axis is taken.
+    spec = r.spec(
+        (None, "batch", "cache_seq", "kv_heads", None),
+        (16, 128, 32768, 16, 128),
+        path="cache/k",
+    )
+    assert spec == P(None, "data", "model")
+    assert any(f.reason.startswith("mesh axis already used") for f in r.fallbacks)
+
+
+def test_batch_one_replicates():
+    r = rules()
+    assert r.spec(("batch", None), (1, 1)) == P()
+
+
+def test_multi_pod_batch_axes():
+    r = MeshRules(
+        mesh_axes={"pod": 2, "data": 16, "model": 16},
+        batch_axes=("pod", "data"),
+    )
+    assert r.spec(("batch", None), (256, 4096)) == P(("pod", "data"))
+    # 16 rows cannot shard over 32 -> replicated.
+    assert r.spec(("batch", None), (16, 4096)) == P()
+
+
+def test_experts_axis_option():
+    r = rules(experts_axis="model")
+    assert r.spec(("experts", None, "ff"), (160, 5120, 1536), path="w")[0] == "model"
+    # ff also wants model -> duplicate -> replicated.
+    assert r.spec(("experts", None, "ff"), (160, 5120, 1536))[2:] == ()
+
+
+def test_constrain_noop_without_context():
+    assert active_rules() is None
+    x = jnp.ones((4, 8))
+    y = constrain(x, ("batch", None))
+    assert y is x  # untouched outside a sharding context
+
+
+def test_constrain_rank_mismatch():
+    from repro.sharding.context import sharding_context
+
+    r = rules()
+    mesh = jax.make_mesh((1,), ("data",)) if jax.device_count() == 1 else None
+    if mesh is None:
+        pytest.skip("needs exactly one device")
+    with sharding_context(mesh, r):
+        with pytest.raises(ValueError):
+            constrain(jnp.ones((4, 8)), ("batch",))
+
+
+def test_train_microbatches_capped_by_batch_extent():
+    # single pod: data=16 -> 256/16 = 16 >= 8: keep 8
+    assert train_microbatches("olmo-1b", global_batch=256, batch_extent=16) == 8
+    # multi pod: 32-way batch -> cap 16 -> 8
+    assert (
+        train_microbatches("deepseek-v2-236b", global_batch=256, batch_extent=32) == 8
+    )
+    # tiny batch: never below 1
+    assert train_microbatches("olmo-1b", global_batch=4, batch_extent=16) == 1

@@ -1,0 +1,78 @@
+"""Simulator semantics: §3.2 timing (max form), noise behaviour, catalogs."""
+import numpy as np
+import pytest
+
+from repro.core.optperf import solve_optperf_waterfill
+from repro.core.simulator import (
+    GPU_CATALOG,
+    SimulatedCluster,
+    cluster_A,
+    cluster_B,
+    cluster_C,
+)
+
+
+def test_noise_free_matches_analytic_model():
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    truth = sim.true_model()
+    for batches in ([16, 16, 16], [40, 30, 10], [5, 80, 43]):
+        m = sim.run_batch(batches)
+        assert m.batch_time == pytest.approx(truth.cluster_time(batches), rel=1e-12)
+
+
+def test_catalog_speed_ordering():
+    # Table 1/3 ordering: a100 faster than v100 faster than rtx6000/p4000.
+    b = 64
+    t = {name: p.model().t_compute(b) for name, p in GPU_CATALOG.items()}
+    assert t["a100"] < t["v100"] < t["rtx6000"] < t["p4000"]
+    # §6: A100 ~3.4x RTX6000.
+    assert 2.5 < t["rtx6000"] / t["a100"] < 4.5
+
+
+def test_cluster_c_sharing_heterogeneity():
+    profiles, _ = cluster_C(16)
+    speeds = [p.model().t_compute(64) for p in profiles]
+    assert speeds == sorted(speeds)  # monotonically slower
+    assert 3.5 < speeds[-1] / speeds[0] < 4.5  # 1.0 -> 0.25 of a GPU
+
+
+def test_measurement_noise_unbiased():
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.05, seed=0)
+    truth = sim.true_model()
+    batches = [30, 20, 14]
+    times = [sim.run_batch(batches).batch_time for _ in range(300)]
+    expected = truth.cluster_time(batches)
+    # Multiplicative lognormal noise on a max(): small positive bias allowed.
+    assert np.mean(times) == pytest.approx(expected, rel=0.1)
+
+
+def test_fast_nodes_report_inflated_comm_time():
+    """§4.5: only the straggler observes the true T_comm; min-aggregation
+    across nodes recovers it (exactly so in the comm-bound regime)."""
+    profiles, comm = cluster_B(t_o=0.8, t_u=0.05)  # strongly comm-bound
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    m = sim.run_batch([32] * sim.n)
+    reported = [o.comm_time for o in m.observations]
+    assert min(reported) == pytest.approx(comm.t_comm, rel=1e-9)
+    assert max(reported) > comm.t_comm
+    # Compute-bound regime: every report is >= the true T_comm, so the min
+    # is still the least-biased estimate.
+    profiles, comm = cluster_B()
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    m = sim.run_batch([64] * sim.n)
+    assert min(o.comm_time for o in m.observations) >= comm.t_comm - 1e-12
+
+
+def test_optimum_beats_even_split_under_simulator():
+    profiles, comm = cluster_B()
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    truth = sim.true_model()
+    B = 512
+    sol = solve_optperf_waterfill(truth, B)
+    from repro.core.optperf import round_batches
+
+    t_opt = sim.run_batch(round_batches(list(sol.batches), B)).batch_time
+    t_even = sim.run_batch([B // sim.n] * sim.n).batch_time
+    assert t_opt < t_even

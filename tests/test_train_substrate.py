@@ -1,0 +1,168 @@
+"""Substrate tests: optimizers, gradient-accumulation exactness, data
+pipeline invariants, checkpoint round-trip, hetero trainer epoch."""
+import os
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_api
+from repro.core import CannikinController, SimulatedCluster, cluster_A
+from repro.data import HeteroBatchPartitioner, SyntheticLM
+from repro.optim import adamw, constant_schedule, cosine_schedule, global_norm, sgd
+from repro.train import HeteroTrainer, restore, save
+from repro.train.step import build_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def quad_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+
+
+def quad_loss(p):
+    return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(constant_schedule(0.1), momentum=0.9),
+    lambda: adamw(constant_schedule(0.05), weight_decay=0.0),
+])
+def test_optimizers_converge_on_quadratic(make_opt):
+    opt = make_opt()
+    p = quad_params()
+    state = opt.init(p)
+    for _ in range(200):
+        g = jax.grad(quad_loss)(p)
+        p, state = opt.update(g, state, p)
+    assert quad_loss(p) < 1e-3
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(sched(jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(sched(jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_lr_scale_applied():
+    opt = sgd(constant_schedule(0.1), momentum=0.0)
+    p = {"w": jnp.array(1.0)}
+    s = opt.init(p)
+    p1, _ = opt.update({"w": jnp.array(1.0)}, s, p, jnp.float32(1.0))
+    p2, _ = opt.update({"w": jnp.array(1.0)}, s, p, jnp.float32(3.0))
+    assert float(p["w"] - p2["w"]) == pytest.approx(3 * float(p["w"] - p1["w"]))
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    api = get_api("olmo-1b", reduced=True)
+    rng = jax.random.PRNGKey(0)
+    params = api.init(rng)
+    B, S = 8, 16
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, api.cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, api.cfg.vocab),
+        "weights": jnp.array([1.0, 2.0, 1.0, 0.5, 1.0, 1.0, 3.0, 1.0], jnp.float32),
+    }
+    opt = sgd(constant_schedule(0.5), momentum=0.0, max_grad_norm=None)
+    step1 = jax.jit(build_train_step(api, opt, microbatches=1))
+    step4 = jax.jit(build_train_step(api, opt, microbatches=4))
+    s0 = opt.init(params)
+    p1, _, m1 = step1(params, s0, batch)
+    p4, _, m4 = step4(params, s0, batch)
+    assert float(m1["loss"]) == pytest.approx(float(jnp.sum(m4["loss"])), rel=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-2, atol=3e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_lm_deterministic_and_learnable():
+    data = SyntheticLM(vocab=64, seq_len=16, seed=3)
+    b1 = data.batch(5, 8)
+    b2 = data.batch(5, 8)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels mostly follow the rule: next token = rule[token]
+    match = (data.rule[b1["tokens"]] == b1["labels"]).mean()
+    assert match > 0.5
+
+
+@hypothesis.given(st.lists(st.integers(1, 40), min_size=2, max_size=6))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_partitioner_invariants(sizes):
+    total = sum(sizes)
+    data = SyntheticLM(vocab=32, seq_len=8, seed=0)
+    batch = data.batch(0, total)
+    nodes = HeteroBatchPartitioner.split(batch, sizes)
+    assert [n.size for n in nodes] == sizes
+    # Concatenation reconstructs the global batch exactly.
+    recon = np.concatenate([n.tokens for n in nodes], axis=0)
+    np.testing.assert_array_equal(recon, batch["tokens"])
+    padded, weights = HeteroBatchPartitioner.padded(batch, sizes)
+    assert padded["tokens"].shape[0] == len(sizes)
+    assert weights.sum() == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    api = get_api("rwkv6-7b", reduced=True)
+    params = api.init(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save(path, params)
+    restored = restore(path, params)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    api = get_api("olmo-1b", reduced=True)
+    params = api.init(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save(path, params)
+    other = get_api("llama3-8b", reduced=True).init(jax.random.PRNGKey(0))
+    with pytest.raises((ValueError, KeyError)):
+        restore(path, other)
+
+
+# ---------------------------------------------------------------------------
+# hetero trainer end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_trainer_loss_decreases_and_predicts():
+    api = get_api("olmo-1b", reduced=True)
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.01, seed=0)
+    data = SyntheticLM(vocab=api.cfg.vocab, seq_len=24, seed=0)
+    ctrl = CannikinController(sim.n, batch_candidates=[24, 48], ref_batch=24)
+    tr = HeteroTrainer(
+        api, sgd(constant_schedule(0.3)), sim, ctrl, data, steps_per_epoch=4
+    )
+    hist = tr.run(6)
+    assert hist[-1].mean_loss < hist[0].mean_loss
+    optperf_epochs = [h for h in hist if h.phase == "optperf"]
+    assert optperf_epochs, "controller never left bootstrap"
+    for h in optperf_epochs:
+        err = abs(h.predicted_batch_time - h.measured_batch_time) / h.measured_batch_time
+        assert err < 0.07, f"epoch {h.epoch}: OptPerf prediction error {err:.1%}"
