@@ -13,7 +13,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import Row, save_json
-from repro.core.optperf import round_batches, solve_optperf_algorithm1
+from repro.core.optperf import solve_optperf_batch
 from repro.core.simulator import SimulatedCluster, cluster_B
 
 # (workload, compute scale, comm scale) — relative to ResNet-50 defaults.
@@ -47,9 +47,11 @@ def run() -> List[Row]:
         sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
         truth = sim.true_model()
         curve = {}
-        for B in (128, 256, 512, 1024, 2048):
-            opt = solve_optperf_algorithm1(truth, B)
-            t_opt = truth.cluster_time(list(opt.batches))
+        batch_sizes = (128, 256, 512, 1024, 2048)
+        # One array pass solves OptPerf for the whole batch-size curve.
+        opts = solve_optperf_batch(truth, [float(B) for B in batch_sizes])
+        for j, B in enumerate(batch_sizes):
+            t_opt = truth.cluster_time(list(opts.batches[j]))
             t_even = truth.cluster_time([B / sim.n] * sim.n)
             t_lb = truth.cluster_time(lbbsp_converged(truth, B))
             # Adaptive regime: LB-BSP re-tunes from even after a batch change

@@ -20,8 +20,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import Row, save_json
-from repro.core.goodput import statistical_efficiency
-from repro.core.optperf import solve_optperf_algorithm1
+from repro.core.goodput import goodput_curve, statistical_efficiency
 from repro.core.simulator import SimulatedCluster, cluster_B
 from benchmarks.bench_batchtime import WORKLOADS, lbbsp_converged
 
@@ -40,20 +39,19 @@ TARGET_BUDGET = 1_600_000     # effective samples to reach target metric
 
 def _policy_epoch(policy, truth, b_noise, ref_batch, candidates):
     """Return (total batch, partition) for one epoch under a policy."""
-    if policy in ("cannikin", "adaptdl"):
-        best, best_gp = None, -1.0
-        for B in candidates:
-            if policy == "cannikin":
-                sol = solve_optperf_algorithm1(truth, B)
-                t = sol.opt_perf
-            else:
-                t = truth.cluster_time([B / len(truth.nodes)] * len(truth.nodes))
-            gp = (B / t) * statistical_efficiency(b_noise, B, ref_batch)
-            if gp > best_gp:
-                best, best_gp = B, gp
-        if policy == "cannikin":
-            return best, list(solve_optperf_algorithm1(truth, best).batches)
-        return best, [best / len(truth.nodes)] * len(truth.nodes)
+    if policy == "cannikin":
+        # The whole candidate sweep is one batched OptPerf array pass.
+        curve = goodput_curve(truth, [float(B) for B in candidates], b_noise, ref_batch)
+        best, sol, _ = curve.best()
+        return int(best), list(sol.batches)
+    if policy == "adaptdl":
+        n = len(truth.nodes)
+        cands = np.asarray(candidates, dtype=np.float64)
+        even = np.repeat(cands[:, None] / n, n, axis=1)       # (C, n) even shards
+        times = truth.node_times(even).max(axis=-1)
+        gps = (cands / times) * statistical_efficiency(b_noise, cands, ref_batch)
+        best = int(cands[int(np.argmax(gps))])
+        return best, [best / n] * n
     if policy == "pytorch-ddp":
         return ref_batch, [ref_batch / len(truth.nodes)] * len(truth.nodes)
     if policy == "lb-bsp":

@@ -7,7 +7,11 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import Row, save_json, time_call
-from repro.core.optperf import solve_optperf_algorithm1, solve_optperf_waterfill
+from repro.core.optperf import (
+    solve_optperf_algorithm1,
+    solve_optperf_batch,
+    solve_optperf_waterfill,
+)
 from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
 
 
@@ -36,8 +40,23 @@ def run() -> List[Row]:
         s1 = solve_optperf_algorithm1(model, 1024)
         s2 = solve_optperf_waterfill(model, 1024)
         agree = abs(s1.opt_perf - s2.opt_perf) / s2.opt_perf
+        # 32-candidate sweep: per-candidate scalar loop vs one batched pass.
+        cands = np.geomspace(64, 65536, 32)
+        t_loop = time_call(
+            lambda: [solve_optperf_waterfill(model, float(b)) for b in cands], repeats=3
+        )
+        t_batch = time_call(lambda: solve_optperf_batch(model, cands), repeats=3)
         rows.append(Row(f"optperf/algorithm1/n{n}", t1, f"agree={agree:.2e}"))
         rows.append(Row(f"optperf/waterfill/n{n}", t2, ""))
-        payload[n] = {"alg1_us": t1, "waterfill_us": t2, "rel_gap": agree}
+        rows.append(
+            Row(f"optperf/batch_sweep32/n{n}", t_batch, f"speedup={t_loop / t_batch:.1f}x")
+        )
+        payload[n] = {
+            "alg1_us": t1,
+            "waterfill_us": t2,
+            "sweep32_loop_us": t_loop,
+            "sweep32_batched_us": t_batch,
+            "rel_gap": agree,
+        }
     save_json("solver", payload)
     return rows

@@ -1,0 +1,140 @@
+"""Goodput-sweep benchmark: batched OptPerf engine vs per-candidate scalar
+loops (the §4.1/§4.5 control-loop hot path behind the Table 5 overhead
+claims).
+
+Measures, at n nodes x C candidate total batch sizes:
+
+  * scalar water-fill loop  — ``solve_optperf_waterfill`` per candidate
+  * scalar Algorithm 1 loop — ``solve_optperf_algorithm1`` per candidate
+    (with §4.5 boundary-hint chaining, as the old selector sweep did)
+  * batched engine          — one ``solve_optperf_batch`` array pass
+
+and verifies the batched opt_perf values against the scalar water-fill
+oracle (max relative gap must be <= 1e-6).
+
+Usage:
+    PYTHONPATH=src:. python -m benchmarks.bench_sweep            # full (64x64)
+    PYTHONPATH=src:. python -m benchmarks.bench_sweep --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, save_json, time_call
+from repro.core.goodput import goodput_curve
+from repro.core.optperf import (
+    solve_optperf_algorithm1,
+    solve_optperf_batch,
+    solve_optperf_waterfill,
+)
+from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
+
+
+def _random_model(n: int, seed: int = 0) -> ClusterPerfModel:
+    rng = np.random.default_rng(seed)
+    nodes = tuple(
+        NodePerfModel(
+            q=float(rng.uniform(1e-4, 5e-3)),
+            s=float(rng.uniform(0, 0.02)),
+            k=float(rng.uniform(1e-4, 8e-3)),
+            m=float(rng.uniform(0, 0.02)),
+        )
+        for _ in range(n)
+    )
+    comm = CommModel(t_o=0.04, t_u=0.008, gamma=0.15)
+    return ClusterPerfModel(nodes=nodes, comm=comm)
+
+
+def _candidates(count: int) -> np.ndarray:
+    return np.unique(np.round(np.geomspace(64, 65536, count))).astype(np.float64)
+
+
+def run_config(n: int, num_candidates: int, repeats: int) -> dict:
+    model = _random_model(n)
+    cands = _candidates(num_candidates)
+
+    def scalar_waterfill():
+        return [solve_optperf_waterfill(model, float(b)) for b in cands]
+
+    def scalar_algorithm1():
+        hint = None
+        out = []
+        for b in cands:
+            sol = solve_optperf_algorithm1(model, float(b), boundary_hint=hint)
+            hint = sum(1 for s in sol.bottleneck if s == "compute")
+            out.append(sol)
+        return out
+
+    def batched():
+        return solve_optperf_batch(model, cands)
+
+    t_wf = time_call(scalar_waterfill, repeats=repeats)
+    t_a1 = time_call(scalar_algorithm1, repeats=repeats)
+    t_batch = time_call(batched, repeats=repeats)
+
+    batch_sol = batched()
+    scalar_sols = scalar_waterfill()
+    gaps = [
+        abs(batch_sol.opt_perfs[j] - s.opt_perf) / s.opt_perf
+        for j, s in enumerate(scalar_sols)
+    ]
+    return {
+        "n": n,
+        "candidates": int(cands.size),
+        "scalar_waterfill_us": t_wf,
+        "scalar_algorithm1_us": t_a1,
+        "batched_us": t_batch,
+        "speedup_vs_waterfill_loop": t_wf / t_batch,
+        "speedup_vs_algorithm1_loop": t_a1 / t_batch,
+        "max_rel_gap_vs_oracle": float(max(gaps)),
+    }
+
+
+def run(smoke: bool = False) -> List[Row]:
+    configs = [(8, 8)] if smoke else [(16, 16), (64, 64), (256, 64)]
+    repeats = 3 if smoke else 5
+    rows: List[Row] = []
+    payload = {}
+    for n, c in configs:
+        rec = run_config(n, c, repeats)
+        payload[f"n{n}_c{c}"] = rec
+        rows.append(
+            Row(
+                f"sweep/batched/n{n}xc{c}",
+                rec["batched_us"],
+                f"speedup={rec['speedup_vs_waterfill_loop']:.1f}x;"
+                f"gap={rec['max_rel_gap_vs_oracle']:.2e}",
+            )
+        )
+        rows.append(Row(f"sweep/scalar_waterfill/n{n}xc{c}", rec["scalar_waterfill_us"], ""))
+        rows.append(Row(f"sweep/scalar_algorithm1/n{n}xc{c}", rec["scalar_algorithm1_us"], ""))
+        # The acceptance gate: >= 10x over the per-candidate scalar loop and
+        # <= 1e-6 relative opt_perf gap at the 64x64 configuration.
+        if rec["max_rel_gap_vs_oracle"] > 1e-6:
+            raise AssertionError(f"batched engine drifted from oracle: {rec}")
+        if not smoke and (n, c) == (64, 64) and rec["speedup_vs_waterfill_loop"] < 10.0:
+            raise AssertionError(f"batched sweep under 10x at 64x64: {rec}")
+    # A goodput_curve smoke call so the end-to-end consumer path is timed too.
+    model = _random_model(16)
+    cands = _candidates(16)
+    t_curve = time_call(lambda: goodput_curve(model, cands, 500.0, 128), repeats=repeats)
+    rows.append(Row("sweep/goodput_curve/n16xc16", t_curve, ""))
+    payload["goodput_curve_n16_c16_us"] = t_curve
+    save_json("sweep", payload)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows and writes JSON payloads under
 artifacts/bench/.
 
   bench_solver       — Algorithm 1 / water-fill micro-bench (O((n+1)^3) claim)
+  bench_sweep        — batched OptPerf engine vs per-candidate scalar sweeps
   bench_adaptation   — Fig. 9: epochs to reach OptPerf (Cannikin vs LB-BSP)
   bench_batchtime    — Fig. 10: batch time vs total batch size, 5 workloads
   bench_convergence  — Fig. 7/8 + Fig. 5: normalized convergence time
@@ -27,11 +28,13 @@ def main() -> None:
         bench_overhead,
         bench_prediction,
         bench_solver,
+        bench_sweep,
         roofline,
     )
 
     modules = [
         ("solver", bench_solver),
+        ("sweep", bench_sweep),
         ("adaptation", bench_adaptation),
         ("batchtime", bench_batchtime),
         ("convergence", bench_convergence),

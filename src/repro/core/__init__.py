@@ -3,7 +3,8 @@
 Modules:
   perf_model   — §3.2 per-node linear compute model + comm/overlap model,
                  online fitting, gamma inverse-variance weighting (Eq. 12)
-  optperf      — §3.3/§4.2 OptPerf solvers (Algorithm 1 + water-fill oracle)
+  optperf      — §3.3/§4.2 OptPerf solvers (Algorithm 1 + water-fill oracle
+                 + the batched all-candidates array engine)
   gns          — §4.4 heterogeneous gradient-noise-scale (Theorem 4.1)
   aggregation  — §4.3 weighted gradient aggregation (Eq. 9)
   goodput      — Pollux-style goodput + batch-size selection with caching
@@ -14,15 +15,24 @@ Modules:
 from repro.core.aggregation import ratios, sample_weights, weighted_aggregate
 from repro.core.controller import CannikinController, EpochPlan
 from repro.core.gns import GNSState, estimate_gns, gns_update, gns_weights
-from repro.core.goodput import BatchSizeSelector, goodput, statistical_efficiency
+from repro.core.goodput import (
+    BatchSizeSelector,
+    GoodputCurve,
+    goodput,
+    goodput_curve,
+    statistical_efficiency,
+)
 from repro.core.optperf import (
+    BatchedOptPerfSolution,
     OptPerfSolution,
     round_batches,
     solve_optperf,
     solve_optperf_algorithm1,
+    solve_optperf_batch,
     solve_optperf_waterfill,
 )
 from repro.core.perf_model import (
+    ClusterCoeffs,
     ClusterPerfModel,
     CommModel,
     NodeObservation,
@@ -50,15 +60,20 @@ __all__ = [
     "NodeObservation",
     "OnlineNodeFitter",
     "OptPerfSolution",
+    "BatchedOptPerfSolution",
+    "ClusterCoeffs",
     "GNSState",
     "BatchSizeSelector",
+    "GoodputCurve",
     "SimulatedCluster",
     "NodeProfile",
     "GPU_CATALOG",
     "solve_optperf",
     "solve_optperf_algorithm1",
+    "solve_optperf_batch",
     "solve_optperf_waterfill",
     "round_batches",
+    "goodput_curve",
     "estimate_gns",
     "gns_update",
     "gns_weights",

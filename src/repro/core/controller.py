@@ -78,6 +78,10 @@ class CannikinController:
       lr_rule: "adascale" (SGD workloads) or "sqrt" (Adam workloads).
       adaptive: if False, keeps total batch fixed at ``ref_batch`` (the
         fixed-batch evaluation mode of §5.2.2) but still optimizes the split.
+      sweep_engine: "batched" (default) runs the candidate goodput sweep as
+        one vectorized ``solve_optperf_batch`` pass; "scalar" keeps the
+        per-candidate Algorithm-1 loop (cross-check oracle).  Plans are
+        identical either way — the winner is always re-solved scalar.
       min_local / max_local: per-node local batch bounds (memory limits, §6).
     """
 
@@ -92,6 +96,7 @@ class CannikinController:
         lr_rule: str = "adascale",
         adaptive: bool = True,
         solver: str = "algorithm1",
+        sweep_engine: str = "batched",
         gns_decay: float = 0.9,
         min_local: int = 1,
         max_local: Optional[int] = None,
@@ -110,6 +115,7 @@ class CannikinController:
             candidates=tuple(sorted(set(int(b) for b in batch_candidates))),
             ref_batch=int(ref_batch),
             solver=solver,
+            engine=sweep_engine,
         )
         self.gns = GNSState()
         self.gns_decay = gns_decay

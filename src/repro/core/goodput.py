@@ -8,6 +8,11 @@ goodput(B) = throughput(B) * efficiency(B)
   * efficiency(B) = (B_noise + B0) / (B_noise + B) — statistical efficiency
     relative to the user's reference batch size B0 (McCandlish/Pollux).
 
+The whole candidate sweep is evaluated in one array pass via
+:func:`goodput_curve` / :func:`repro.core.optperf.solve_optperf_batch`
+(O(~200) NumPy broadcasts for any number of candidates); the scalar
+:func:`goodput` remains for single-B queries and as the cross-check oracle.
+
 Also provides the AdaScale learning-rate gain used by the SGD workloads and
 the square-root scaling rule used by Adam-family workloads (Table 4).
 """
@@ -18,26 +23,40 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.optperf import OptPerfSolution, solve_optperf
+from repro.core.optperf import (
+    BatchedOptPerfSolution,
+    OptPerfSolution,
+    solve_optperf,
+    solve_optperf_batch,
+)
 from repro.core.perf_model import ClusterPerfModel
 
 __all__ = [
     "statistical_efficiency",
     "goodput",
+    "goodput_curve",
+    "GoodputCurve",
     "adascale_gain",
     "sqrt_lr_scale",
     "BatchSizeSelector",
 ]
 
 
-def statistical_efficiency(b_noise: float, batch: float, ref_batch: float) -> float:
-    """E(B) = (B_noise + B0) / (B_noise + B); E(B0) = 1, decreasing in B."""
-    if batch <= 0 or ref_batch <= 0:
+def statistical_efficiency(b_noise: float, batch, ref_batch: float):
+    """E(B) = (B_noise + B0) / (B_noise + B); E(B0) = 1, decreasing in B.
+
+    ``batch`` may be a scalar (returns float) or an array (returns an array
+    of the same shape).
+    """
+    b = np.asarray(batch, dtype=np.float64)
+    if np.any(b <= 0) or ref_batch <= 0:
         raise ValueError("batch sizes must be positive")
     if not np.isfinite(b_noise):
-        return 1.0
-    b_noise = max(b_noise, 0.0)
-    return (b_noise + ref_batch) / (b_noise + batch)
+        eff = np.ones_like(b)
+    else:
+        b_noise = max(b_noise, 0.0)
+        eff = (b_noise + ref_batch) / (b_noise + b)
+    return float(eff) if np.ndim(batch) == 0 else eff
 
 
 def goodput(
@@ -54,6 +73,56 @@ def goodput(
     thr = batch / sol.opt_perf
     eff = statistical_efficiency(b_noise, batch, ref_batch)
     return thr * eff, sol
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodputCurve:
+    """goodput(B) over a candidate vector, solved in one batched pass."""
+
+    candidates: np.ndarray          # (C,) total batch sizes
+    goodputs: np.ndarray            # (C,) samples/sec * efficiency
+    throughputs: np.ndarray         # (C,) samples/sec at the OptPerf partition
+    efficiencies: np.ndarray        # (C,) statistical efficiency
+    solutions: BatchedOptPerfSolution
+
+    def best_index(self) -> int:
+        return int(np.argmax(self.goodputs))
+
+    def best(self) -> Tuple[float, OptPerfSolution, float]:
+        """(best B, its OptPerf solution, its goodput)."""
+        j = self.best_index()
+        return (
+            float(self.candidates[j]),
+            self.solutions.solution(j),
+            float(self.goodputs[j]),
+        )
+
+
+def goodput_curve(
+    model: ClusterPerfModel,
+    candidates: Sequence[float],
+    b_noise: float,
+    ref_batch: float,
+) -> GoodputCurve:
+    """Vectorized goodput(B) for every candidate total batch size.
+
+    One :func:`solve_optperf_batch` call (a ``(C,)``-bracket bisection against
+    a ``(C, n)`` feasible-batch matrix) replaces the per-candidate scalar
+    sweep; cost is independent of the candidate count up to the O(C*n) array
+    arithmetic inside each of the ~200 bisection steps.
+    """
+    cands = np.array(candidates, dtype=np.float64)  # copy: no aliasing
+    cands.flags.writeable = False
+    sols = solve_optperf_batch(model, cands)
+    thr = cands / sols.opt_perfs
+    eff = statistical_efficiency(b_noise, cands, ref_batch)
+    return GoodputCurve(
+        candidates=cands,
+        goodputs=thr * eff,
+        throughputs=thr,
+        efficiencies=np.asarray(eff, dtype=np.float64),
+        solutions=sols,
+    )
 
 
 def adascale_gain(b_noise: float, batch: float, ref_batch: float) -> float:
@@ -81,21 +150,41 @@ class BatchSizeSelector:
     states) are cached; subsequent epochs only recompute the candidate that
     wins under the updated GNS, unless its overlap state changed — then the
     full sweep re-runs.
+
+    ``engine`` selects how a full sweep is executed: ``"batched"`` (default)
+    solves every candidate in one :func:`solve_optperf_batch` array pass;
+    ``"scalar"`` is the original per-candidate loop with §4.5 boundary-hint
+    chaining, kept as the cross-check oracle.  Either way the winning
+    candidate is re-solved with the scalar ``solver``, so the emitted plan is
+    identical across engines.
     """
 
     candidates: Tuple[int, ...]
     ref_batch: int
     solver: str = "algorithm1"
+    engine: str = "batched"
     # epoch -> cache
     _optperf_cache: Dict[int, OptPerfSolution] = dataclasses.field(default_factory=dict)
     _state_cache: Dict[int, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
     full_sweeps: int = 0
     incremental_updates: int = 0
 
+    def __post_init__(self) -> None:
+        if self.engine not in ("batched", "scalar"):
+            raise ValueError(f"unknown sweep engine {self.engine!r}")
+
     def _sweep(self, model: ClusterPerfModel) -> None:
         self.full_sweeps += 1
+        ordered = sorted(self.candidates)
+        if self.engine == "batched":
+            batch_sol = solve_optperf_batch(model, np.asarray(ordered, dtype=np.float64))
+            for j, b in enumerate(ordered):
+                sol = batch_sol.solution(j)
+                self._optperf_cache[b] = sol
+                self._state_cache[b] = sol.bottleneck
+            return
         hint: Optional[int] = None
-        for b in sorted(self.candidates):
+        for b in ordered:
             sol = solve_optperf(model, b, method=self.solver, boundary_hint=hint)
             self._optperf_cache[b] = sol
             self._state_cache[b] = sol.bottleneck
@@ -122,7 +211,11 @@ class BatchSizeSelector:
             # Overlap pattern changed -> cached landscape is stale: resweep.
             self._sweep(model)
             best = max(self.candidates, key=cached_goodput)
-            fresh = self._optperf_cache[best]
+            # Re-solve the (possibly new) winner with the scalar solver so
+            # the emitted plan is engine-independent on this path too.
+            fresh = solve_optperf(model, best, method=self.solver)
+            self._optperf_cache[best] = fresh
+            self._state_cache[best] = fresh.bottleneck
         else:
             self.incremental_updates += 1
             self._optperf_cache[best] = fresh

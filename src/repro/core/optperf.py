@@ -1,6 +1,6 @@
 """OptPerf: the optimal batch-partition / batch-time solver (§3.3, §4.2, App. A).
 
-Two solvers are provided:
+Three solvers are provided:
 
 ``solve_optperf_algorithm1``
     Paper-faithful Algorithm 1: closed-form Check 1 (all compute-bottleneck),
@@ -8,6 +8,7 @@ Two solvers are provided:
     bottleneck boundary for the mixed case.  O(n) per candidate boundary
     (the "linear system" of the paper is diagonal once the partition is
     fixed, so we solve it directly rather than with a generic O(n^3) solve).
+    Kept as the independent cross-check oracle for the array engine below.
 
 ``solve_optperf_waterfill``
     Beyond-paper oracle: the node batch time
@@ -17,10 +18,25 @@ Two solvers are provided:
         b_i(T) = min((T - T_u - c_i)/alpha_i, (T - T_comm - d_i)/beta_i)
     and Sum_i max(b_i(T), 0) is continuous and nondecreasing in T.  Bisection
     on T yields the exact optimum including b_i >= 0 clamping that
-    Algorithm 1's linear solves ignore.  Used as the property-test oracle and
-    as the production solver when clamping binds.
+    Algorithm 1's linear solves ignore.  Implemented as the single-candidate
+    special case of the batched engine.
 
-Both return an :class:`OptPerfSolution`.
+``solve_optperf_batch``
+    The batched water-fill engine: solves OptPerf for *all* candidate total
+    batch sizes of a goodput sweep simultaneously.  The bisection state is a
+    ``(num_candidates,)`` vector of ``[lo, hi]`` brackets refined against a
+    ``(num_candidates, n)`` feasible-batch matrix, so the whole sweep costs
+    O(max_iter) NumPy broadcasts — ~200 array ops total regardless of the
+    candidate count — instead of ``num_candidates * max_iter * n``
+    Python-level evaluations.  Complexity: O(max_iter * C * n) flops, O(C * n)
+    memory, zero Python-level per-node or per-candidate work in the hot loop.
+
+All coefficient access goes through :attr:`ClusterPerfModel.coeffs`, the
+cached array view (precomputed alphas/cs/betas/ds/backprop vectors; the model
+dataclass is frozen so the cache can never go stale).
+
+Scalar solvers return an :class:`OptPerfSolution`; the batched engine returns
+a :class:`BatchedOptPerfSolution`.
 """
 from __future__ import annotations
 
@@ -34,8 +50,10 @@ from repro.core.perf_model import ClusterPerfModel
 
 __all__ = [
     "OptPerfSolution",
+    "BatchedOptPerfSolution",
     "solve_optperf_algorithm1",
     "solve_optperf_waterfill",
+    "solve_optperf_batch",
     "solve_optperf",
     "round_batches",
 ]
@@ -62,96 +80,93 @@ class OptPerfSolution:
         return f"OptPerf={self.opt_perf * 1e3:.3f}ms B={self.total_batch:g} [{parts}]"
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchedOptPerfSolution:
+    """OptPerf solutions for a whole vector of candidate total batch sizes.
+
+    ``batches`` is ``(C, n)``; ``total_batches``/``opt_perfs`` are ``(C,)``;
+    ``compute_mask`` is the ``(C, n)`` boolean overlap state (True = the node
+    is compute-bottleneck at that candidate's optimum).
+    """
+
+    total_batches: np.ndarray
+    opt_perfs: np.ndarray
+    batches: np.ndarray
+    compute_mask: np.ndarray
+    method: str
+
+    def __len__(self) -> int:
+        return int(self.total_batches.shape[0])
+
+    def bottleneck(self, j: int) -> Tuple[str, ...]:
+        return tuple("compute" if c else "comm" for c in self.compute_mask[j])
+
+    def solution(self, j: int, *, method: Optional[str] = None) -> OptPerfSolution:
+        """Extract candidate ``j`` as a scalar :class:`OptPerfSolution`."""
+        return OptPerfSolution(
+            total_batch=float(self.total_batches[j]),
+            opt_perf=float(self.opt_perfs[j]),
+            batches=tuple(float(b) for b in self.batches[j]),
+            bottleneck=self.bottleneck(j),
+            method=method or self.method,
+        )
+
+    def solutions(self) -> List[OptPerfSolution]:
+        return [self.solution(j) for j in range(len(self))]
+
+
 # ---------------------------------------------------------------------------
-# helpers
+# helpers (all pure NumPy over the cached coefficient view)
 # ---------------------------------------------------------------------------
 
 
-def _node_time(model: ClusterPerfModel, i: int, b: float) -> float:
-    return model.node_time(i, b)
-
-
-def _bottleneck_labels(model: ClusterPerfModel, batches: Sequence[float]) -> Tuple[str, ...]:
-    return tuple(
-        "compute" if model.is_compute_bottleneck(i, b) else "comm"
-        for i, b in enumerate(batches)
-    )
-
-
-def _solve_equal_compute(model: ClusterPerfModel, total_batch: float) -> Tuple[float, List[float]]:
+def _solve_equal_compute(model: ClusterPerfModel, total_batch: float) -> Tuple[float, np.ndarray]:
     """Check 1: equalize t_compute across all nodes.  mu is the common
     t_compute; b_i = (mu - c_i)/alpha_i."""
-    alphas = np.array([n.alpha for n in model.nodes])
-    cs = np.array([n.c for n in model.nodes])
-    inv = 1.0 / alphas
-    mu = (total_batch + (cs * inv).sum()) / inv.sum()
-    batches = (mu - cs) * inv
-    return float(mu), [float(b) for b in batches]
+    c = model.coeffs
+    inv = 1.0 / c.alphas
+    mu = (total_batch + (c.cs * inv).sum()) / inv.sum()
+    return float(mu), (mu - c.cs) * inv
 
 
-def _solve_equal_syncstart(model: ClusterPerfModel, total_batch: float) -> Tuple[float, List[float]]:
+def _solve_equal_syncstart(model: ClusterPerfModel, total_batch: float) -> Tuple[float, np.ndarray]:
     """Check 2: equalize syncStart across all nodes."""
-    gamma = model.comm.gamma
-    betas = np.array([n.beta(gamma) for n in model.nodes])
-    ds = np.array([n.d(gamma) for n in model.nodes])
-    inv = 1.0 / betas
-    mu = (total_batch + (ds * inv).sum()) / inv.sum()
-    batches = (mu - ds) * inv
-    return float(mu), [float(b) for b in batches]
+    c = model.coeffs
+    inv = 1.0 / c.betas
+    mu = (total_batch + (c.ds * inv).sum()) / inv.sum()
+    return float(mu), (mu - c.ds) * inv
 
 
 def _solve_mixed(
     model: ClusterPerfModel,
     total_batch: float,
-    compute_set: Sequence[int],
-    comm_set: Sequence[int],
-) -> Tuple[float, List[float]]:
-    """Mixed case (App. A.3): compute nodes satisfy t_compute_i = mu,
-    comm nodes satisfy syncStart_i + T_o = mu; Sum b = B."""
-    gamma = model.comm.gamma
+    compute_mask: np.ndarray,
+) -> Tuple[float, np.ndarray]:
+    """Mixed case (App. A.3): compute nodes satisfy t_compute_i = mu, comm
+    nodes satisfy syncStart_i + T_o = mu; Sum b = B.  One masked reduction."""
+    c = model.coeffs
     t_o = model.comm.t_o
-    num = total_batch
-    den = 0.0
-    for i in compute_set:
-        node = model.nodes[i]
-        num += node.c / node.alpha
-        den += 1.0 / node.alpha
-    for i in comm_set:
-        node = model.nodes[i]
-        num += (t_o + node.d(gamma)) / node.beta(gamma)
-        den += 1.0 / node.beta(gamma)
-    mu = num / den
-    batches = [0.0] * model.n
-    for i in compute_set:
-        node = model.nodes[i]
-        batches[i] = (mu - node.c) / node.alpha
-    for i in comm_set:
-        node = model.nodes[i]
-        batches[i] = (mu - t_o - node.d(gamma)) / node.beta(gamma)
-    return float(mu), batches
+    slope = np.where(compute_mask, c.alphas, c.betas)
+    offset = np.where(compute_mask, c.cs, t_o + c.ds)
+    inv = 1.0 / slope
+    mu = (total_batch + (offset * inv).sum()) / inv.sum()
+    return float(mu), (mu - offset) * inv
 
 
 def _partition_valid(
     model: ClusterPerfModel,
-    batches: Sequence[float],
-    compute_set: Sequence[int],
-    comm_set: Sequence[int],
+    batches: np.ndarray,
+    compute_mask: np.ndarray,
 ) -> bool:
     """The hypothesized overlap state must match the realized one, and all
     batches must be physically valid (>= 0)."""
-    if min(batches) < 0:
+    if batches.min() < 0:
         return False
-    for i in compute_set:
-        if not model.is_compute_bottleneck(i, batches[i]):
-            return False
-    for i in comm_set:
-        if model.is_compute_bottleneck(i, batches[i]):
-            return False
-    return True
+    return bool(np.array_equal(model.compute_bottleneck_mask(batches), compute_mask))
 
 
 # ---------------------------------------------------------------------------
-# Algorithm 1 — paper-faithful
+# Algorithm 1 — paper-faithful (scalar cross-check oracle)
 # ---------------------------------------------------------------------------
 
 
@@ -172,8 +187,7 @@ def solve_optperf_algorithm1(
         raise ValueError("total batch must be positive")
     model.validate()
     n = model.n
-    gamma = model.comm.gamma
-    t_o, t_u = model.comm.t_o, model.comm.t_u
+    t_u = model.comm.t_u
 
     # ---- Check 1: all nodes compute-bottleneck --------------------------
     # The paper's linear solves do not enforce b_i >= 0; with small total
@@ -182,26 +196,24 @@ def solve_optperf_algorithm1(
     # to the clamped water-fill oracle (beyond-paper robustness; recorded
     # in EXPERIMENTS.md).
     mu_c, batches_c = _solve_equal_compute(model, total_batch)
-    if min(batches_c) >= 0 and all(
-        (1.0 - gamma) * model.nodes[i].backprop(batches_c[i]) >= t_o for i in range(n)
-    ):
+    mask_c = model.compute_bottleneck_mask(batches_c)
+    if batches_c.min() >= 0 and mask_c.all():
         return OptPerfSolution(
             total_batch=total_batch,
             opt_perf=mu_c + t_u,
-            batches=tuple(batches_c),
+            batches=tuple(float(b) for b in batches_c),
             bottleneck=("compute",) * n,
             method="algorithm1/check1",
         )
 
     # ---- Check 2: all nodes communication-bottleneck --------------------
     mu_s, batches_s = _solve_equal_syncstart(model, total_batch)
-    if min(batches_s) >= 0 and all(
-        (1.0 - gamma) * model.nodes[i].backprop(batches_s[i]) < t_o for i in range(n)
-    ):
+    mask_s = model.compute_bottleneck_mask(batches_s)
+    if batches_s.min() >= 0 and not mask_s.any():
         return OptPerfSolution(
             total_batch=total_batch,
             opt_perf=mu_s + model.comm.t_comm,
-            batches=tuple(batches_s),
+            batches=tuple(float(b) for b in batches_s),
             bottleneck=("comm",) * n,
             method="algorithm1/check2",
         )
@@ -210,35 +222,25 @@ def solve_optperf_algorithm1(
     # Nodes that are compute-bound under BOTH checks are certainly compute-
     # bound at the optimum; likewise for comm-bound.  The remaining
     # "outliers" are ordered and a boundary is binary-searched (§4.2).
-    compute_certain: List[int] = []
-    comm_certain: List[int] = []
-    outliers: List[int] = []
-    for i in range(n):
-        cb1 = (1.0 - gamma) * model.nodes[i].backprop(batches_c[i]) >= t_o
-        cb2 = (1.0 - gamma) * model.nodes[i].backprop(batches_s[i]) >= t_o
-        if cb1 and cb2:
-            compute_certain.append(i)
-        elif not cb1 and not cb2:
-            comm_certain.append(i)
-        else:
-            outliers.append(i)
+    certain_compute = mask_c & mask_s
+    certain_comm = ~mask_c & ~mask_s
+    outliers = np.flatnonzero(~certain_compute & ~certain_comm)
 
     # Rank outliers by fixed processing time (the batch-independent part of
     # the node time); larger fixed time => more likely comm-bottleneck.
-    def fixed_time(i: int) -> float:
-        node = model.nodes[i]
-        return node.d(gamma) + model.comm.t_comm
+    fixed_times = model.coeffs.ds + model.comm.t_comm
+    outliers = outliers[np.argsort(fixed_times[outliers], kind="stable")]
 
-    outliers.sort(key=fixed_time)
+    def split_mask(split: int) -> np.ndarray:
+        mask = certain_compute.copy()
+        mask[outliers[:split]] = True
+        return mask
 
-    def try_boundary(split: int) -> Optional[Tuple[float, List[float], List[int], List[int]]]:
-        compute_set = compute_certain + outliers[:split]
-        comm_set = comm_certain + outliers[split:]
-        if not compute_set and not comm_set:
-            return None
-        mu, batches = _solve_mixed(model, total_batch, compute_set, comm_set)
-        if _partition_valid(model, batches, compute_set, comm_set):
-            return mu, batches, compute_set, comm_set
+    def try_boundary(split: int) -> Optional[Tuple[float, np.ndarray, np.ndarray]]:
+        mask = split_mask(split)
+        mu, batches = _solve_mixed(model, total_batch, mask)
+        if _partition_valid(model, batches, mask):
+            return mu, batches, mask
         return None
 
     # Probe order: hint (if any) first, then binary search, then exhaustive
@@ -252,10 +254,10 @@ def solve_optperf_algorithm1(
         candidates.append(mid)
         # Direction: if solving with `mid` makes some hypothesized comm node
         # actually compute-bound, we put too few nodes on the compute side.
-        compute_set = compute_certain + outliers[:mid]
-        comm_set = comm_certain + outliers[mid:]
-        mu, batches = _solve_mixed(model, total_batch, compute_set, comm_set)
-        too_few_compute = any(model.is_compute_bottleneck(i, batches[i]) for i in comm_set)
+        mask = split_mask(mid)
+        mu, batches = _solve_mixed(model, total_batch, mask)
+        realized = model.compute_bottleneck_mask(batches)
+        too_few_compute = bool(np.any(realized & ~mask))
         if too_few_compute:
             lo = mid + 1
         else:
@@ -270,15 +272,12 @@ def solve_optperf_algorithm1(
         result = try_boundary(split)
         if result is None:
             continue
-        mu, batches, compute_set, comm_set = result
-        bottleneck = ["comm"] * n
-        for i in compute_set:
-            bottleneck[i] = "compute"
+        mu, batches, mask = result
         return OptPerfSolution(
             total_batch=total_batch,
             opt_perf=mu + t_u,
-            batches=tuple(batches),
-            bottleneck=tuple(bottleneck),
+            batches=tuple(float(b) for b in batches),
+            bottleneck=tuple("compute" if c else "comm" for c in mask),
             method=f"algorithm1/mixed(split={split})",
         )
 
@@ -288,24 +287,138 @@ def solve_optperf_algorithm1(
 
 
 # ---------------------------------------------------------------------------
-# Water-fill bisection — beyond-paper exact oracle
+# Batched water-fill bisection — the array engine
 # ---------------------------------------------------------------------------
 
 
-def _max_batch_at_time(model: ClusterPerfModel, i: int, t: float) -> float:
-    """Largest b such that node i's batch time <= t (may be negative)."""
-    node = model.nodes[i]
+def _max_batches_at_times(model: ClusterPerfModel, ts: np.ndarray) -> np.ndarray:
+    """Largest feasible batch per node at cluster times ``ts``.
+
+    ``ts`` has shape ``(...,)``; the result broadcasts to ``(..., n)``.  A
+    node whose syncStart does not grow with b (beta == 0, i.e. q = gamma = 0)
+    is never comm-constrained once t clears its fixed comm time.
+    """
+    c = model.coeffs
     comm = model.comm
-    b_compute = (t - comm.t_u - node.c) / node.alpha
-    beta = node.beta(comm.gamma)
-    if beta <= 0.0:
-        # syncStart does not grow with b (q=0, gamma=0): the comm path never
-        # constrains the batch once t clears the fixed comm time.
-        slack = t - comm.t_comm - node.d(comm.gamma)
-        b_comm = math.inf if slack >= 0 else -math.inf
+    t = np.asarray(ts, dtype=np.float64)[..., None]
+    b_compute = (t - comm.t_u - c.cs) / c.alphas
+    slack = t - comm.t_comm - c.ds
+    degenerate = c.betas <= 0.0
+    b_comm = slack / np.where(degenerate, 1.0, c.betas)
+    if degenerate.any():
+        b_comm = np.where(
+            degenerate, np.where(slack >= 0.0, np.inf, -np.inf), b_comm
+        )
+    return np.minimum(b_compute, b_comm)
+
+
+def _finalize_batches(
+    model: ClusterPerfModel,
+    totals: np.ndarray,
+    t_star: np.ndarray,
+    *,
+    tol: float,
+) -> np.ndarray:
+    """Turn the bisected time bounds into exact-sum batch vectors.
+
+    Bisection leaves Sum_i max(b_i(t_star), 0) >= B (up to float residue).
+    The excess is removed *proportionally from the positive (binding) nodes
+    only* — shrinking a binding node keeps it under its time bound, whereas
+    the old whole-vector rescale could inflate a binding node past ``t_star``
+    whenever float residue left the sum a hair under B.  Clamped nodes (b=0,
+    fixed time already at/above ``t_star``) are never touched.
+    """
+    raw = _max_batches_at_times(model, t_star)          # (..., n)
+    batches = np.maximum(raw, 0.0)
+    sums = batches.sum(axis=-1)
+    # Invariant: the bisection keeps assigned(hi) >= B, and this recomputes
+    # the identical expression at t_star = hi, so sums >= totals exactly.
+    if not bool(np.all(sums >= totals)):
+        raise AssertionError("water-fill bisection lost its upper-bracket invariant")
+    pos_sums = np.where(sums > 0.0, sums, 1.0)
+    shrink = sums > totals
+    if np.any(shrink):
+        # Proportional removal from positive nodes == multiplicative rescale
+        # with factor <= 1: every touched node stays below its t_star bound.
+        factor = np.where(shrink, totals / pos_sums, 1.0)
+        batches = batches * factor[..., None]
+    # Internal consistency: no positive node may exceed its bisected time
+    # bound (clamped stragglers sit at their fixed floor, which can lie above
+    # t_star and is unavoidable at any partition).
+    node_times = model.node_times(batches)
+    positive = batches > 0.0
+    bound = t_star[..., None] * (1.0 + max(tol * 16.0, 1e-8)) + 1e-12
+    if not bool(np.all(np.where(positive, node_times, -np.inf) <= bound)):
+        raise AssertionError("water-fill finalization exceeded the bisected time bound")
+    return batches
+
+
+def solve_optperf_batch(
+    model: ClusterPerfModel,
+    total_batches: Sequence[float],
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+) -> BatchedOptPerfSolution:
+    """Solve OptPerf for every candidate total batch size in one array pass.
+
+    All candidates are bisected *simultaneously*: the bracket state is a
+    ``(C,)`` vector and each iteration evaluates one ``(C, n)`` feasible-batch
+    broadcast, so the whole sweep is ~``max_iter`` NumPy ops regardless of C.
+
+    Monotonicity argument (per candidate, same as the scalar water-fill):
+    each node's feasible batch b_i(T) is affine increasing in T, so
+    g(T) = Sum_i max(b_i(T), 0) is continuous, nondecreasing, and unbounded;
+    bisection on g(T) = B converges geometrically.
+    """
+    totals = np.array(total_batches, dtype=np.float64)  # copy: no aliasing
+    if totals.ndim != 1:
+        raise ValueError("total_batches must be a 1-D sequence")
+    if totals.size == 0:
+        raise ValueError("total_batches must be non-empty")
+    if np.any(totals <= 0):
+        raise ValueError("total batch must be positive")
+    model.validate()
+    c = model.coeffs
+    comm = model.comm
+
+    def assigned(t: np.ndarray) -> np.ndarray:
+        return np.maximum(_max_batches_at_times(model, t), 0.0).sum(axis=-1)
+
+    # Bracket every candidate.  At lo0 (the smallest fixed node time) no node
+    # can take positive batch, so assigned(lo0) == 0 < B for all candidates.
+    lo0 = float(min((c.cs + comm.t_u).min(), (c.ds + comm.t_comm).min()))
+    lo = np.full(totals.shape, lo0)
+    hi = lo + 1.0
+    for _ in range(64):
+        short = assigned(hi) < totals
+        if not short.any():
+            break
+        hi = np.where(short, lo0 + (hi - lo0) * 2.0, hi)
     else:
-        b_comm = (t - comm.t_comm - node.d(comm.gamma)) / beta
-    return min(b_compute, b_comm)
+        raise RuntimeError("water-fill failed to bracket optimum")
+
+    for _ in range(max_iter):
+        mid = 0.5 * (lo + hi)
+        ge = assigned(mid) >= totals
+        hi = np.where(ge, mid, hi)
+        lo = np.where(ge, lo, mid)
+        if np.all(hi - lo <= tol * np.maximum(1.0, np.abs(hi))):
+            break
+    t_star = hi
+
+    batches = _finalize_batches(model, totals, t_star, tol=tol)
+    opt_perfs = model.node_times(batches).max(axis=-1)
+    compute_mask = model.compute_bottleneck_mask(batches)
+    for arr in (totals, opt_perfs, batches, compute_mask):
+        arr.flags.writeable = False
+    return BatchedOptPerfSolution(
+        total_batches=totals,
+        opt_perfs=opt_perfs,
+        batches=batches,
+        compute_mask=compute_mask,
+        method="waterfill/batched",
+    )
 
 
 def solve_optperf_waterfill(
@@ -317,52 +430,13 @@ def solve_optperf_waterfill(
 ) -> OptPerfSolution:
     """Exact OptPerf via bisection on the cluster batch time T.
 
-    Monotonicity: each node's feasible batch b_i(T) is affine increasing in T,
-    so g(T) = Sum_i max(b_i(T), 0) is continuous, nondecreasing, and
-    unbounded; bisection on g(T) = B converges geometrically.
+    Single-candidate specialization of :func:`solve_optperf_batch` (identical
+    numerics, so the scalar oracle and the batched engine can never drift).
     """
-    if total_batch <= 0:
-        raise ValueError("total batch must be positive")
-    model.validate()
-    n = model.n
-
-    def assigned(t: float) -> float:
-        return sum(max(_max_batch_at_time(model, i, t), 0.0) for i in range(n))
-
-    # Bracket the optimum.
-    lo = min(
-        min(node.c + model.comm.t_u for node in model.nodes),
-        min(node.d(model.comm.gamma) + model.comm.t_comm for node in model.nodes),
+    batch = solve_optperf_batch(
+        model, np.asarray([total_batch], dtype=np.float64), tol=tol, max_iter=max_iter
     )
-    hi = lo + 1.0
-    while assigned(hi) < total_batch:
-        hi = lo + (hi - lo) * 2.0
-        if hi - lo > 1e15:
-            raise RuntimeError("water-fill failed to bracket optimum")
-
-    for _ in range(max_iter):
-        mid = 0.5 * (lo + hi)
-        if assigned(mid) >= total_batch:
-            hi = mid
-        else:
-            lo = mid
-        if hi - lo <= tol * max(1.0, abs(hi)):
-            break
-    t_star = hi
-
-    raw = np.array([_max_batch_at_time(model, i, t_star) for i in range(n)])
-    batches = np.maximum(raw, 0.0)
-    # Remove bisection residue: rescale the positive batches to hit B exactly.
-    pos = batches > 0
-    if batches[pos].sum() > 0:
-        batches[pos] *= total_batch / batches[pos].sum()
-    return OptPerfSolution(
-        total_batch=total_batch,
-        opt_perf=float(model.cluster_time(list(batches))),
-        batches=tuple(float(b) for b in batches),
-        bottleneck=_bottleneck_labels(model, batches),
-        method="waterfill",
-    )
+    return batch.solution(0, method="waterfill")
 
 
 def solve_optperf(
@@ -390,19 +464,43 @@ def round_batches(batches: Sequence[float], total_batch: int) -> List[int]:
 
     The paper rounds and accepts the (insignificant) error; we use
     largest-remainder rounding so the sum constraint holds exactly and the
-    rounding error per node is < 1 sample.
+    rounding error per node is < 1 sample.  When float residue leaves the
+    real batches summing a hair *above* ``total_batch`` (so the floors
+    already overshoot), the deficit is taken from the entries with the
+    smallest fractional parts instead of raising; overshoot of a sample per
+    node or more still raises (that is a wrong-total caller bug).
     """
     if total_batch != int(total_batch):
         raise ValueError("total batch must be an integer")
     floors = [int(math.floor(b)) for b in batches]
     remainder = int(total_batch) - sum(floors)
+    out = list(floors)
     if remainder < 0:
-        raise ValueError("batches sum above total")
+        if sum(batches) - total_batch >= len(batches):
+            # Overshoot of a sample per node or more is a caller bug (a
+            # partition computed for a different total), not float residue.
+            raise ValueError("batches sum above total")
+        # Decrement the smallest fractional parts (they lose the least mass),
+        # skipping entries already at zero; raise only when the total is
+        # unreachable even with every batch driven to zero.
+        order = sorted(range(len(batches)), key=lambda i: batches[i] - floors[i])
+        need = -remainder
+        while need:
+            progressed = False
+            for i in order:
+                if out[i] > 0:
+                    out[i] -= 1
+                    need -= 1
+                    progressed = True
+                    if need == 0:
+                        break
+            if not progressed:
+                raise ValueError("batches sum above total")
+        return out
     # Assign leftover samples to the largest fractional parts.
     fracs = sorted(
         range(len(batches)), key=lambda i: batches[i] - floors[i], reverse=True
     )
-    out = list(floors)
     for i in fracs[:remainder]:
         out[i] += 1
     return out

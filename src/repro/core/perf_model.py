@@ -27,6 +27,7 @@ Parameter learning (§4.5):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
@@ -35,6 +36,7 @@ import numpy as np
 __all__ = [
     "NodePerfModel",
     "CommModel",
+    "ClusterCoeffs",
     "ClusterPerfModel",
     "NodeObservation",
     "OnlineNodeFitter",
@@ -122,6 +124,31 @@ class CommModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class ClusterCoeffs:
+    """Array-form coefficient view of a cluster: one entry per node.
+
+    Everything the vectorized solvers need, precomputed once:
+    ``t_compute_i(b) = alphas[i]*b + cs[i]`` and
+    ``syncStart_i(b) = betas[i]*b + ds[i]`` (betas/ds already include the
+    cluster gamma).  ``ks``/``ms`` are the raw backprop coefficients used by
+    the overlap-state criterion ``(1-gamma)*(ks*b + ms) >= T_o``.
+
+    All arrays are float64, read-only, shape ``(n,)``.
+    """
+
+    alphas: np.ndarray
+    cs: np.ndarray
+    betas: np.ndarray
+    ds: np.ndarray
+    ks: np.ndarray
+    ms: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(self.alphas.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterPerfModel:
     """Everything the OptPerf solver needs for one cluster."""
 
@@ -132,6 +159,32 @@ class ClusterPerfModel:
     def n(self) -> int:
         return len(self.nodes)
 
+    @functools.cached_property
+    def coeffs(self) -> ClusterCoeffs:
+        """Cached array view of the per-node coefficients.
+
+        The dataclass is frozen, so the view can never go stale; computing it
+        once means no solver ever touches per-node Python attributes inside a
+        loop.  (``cached_property`` writes straight to ``__dict__`` and thus
+        works on frozen dataclasses.)
+        """
+        gamma = self.comm.gamma
+        qs = np.fromiter((nd.q for nd in self.nodes), dtype=np.float64, count=self.n)
+        ss = np.fromiter((nd.s for nd in self.nodes), dtype=np.float64, count=self.n)
+        ks = np.fromiter((nd.k for nd in self.nodes), dtype=np.float64, count=self.n)
+        ms = np.fromiter((nd.m for nd in self.nodes), dtype=np.float64, count=self.n)
+        arrays = dict(
+            alphas=qs + ks,
+            cs=ss + ms,
+            betas=qs + gamma * ks,
+            ds=ss + gamma * ms,
+            ks=ks,
+            ms=ms,
+        )
+        for arr in arrays.values():
+            arr.flags.writeable = False
+        return ClusterCoeffs(**arrays)
+
     def node_time(self, i: int, b: float) -> float:
         """Batch time of node i at local batch b (max-form, §3.2.3)."""
         node = self.nodes[i]
@@ -139,15 +192,30 @@ class ClusterPerfModel:
         comm_path = node.sync_start(b, self.comm.gamma) + self.comm.t_comm
         return max(compute_path, comm_path)
 
+    def node_times(self, batches) -> np.ndarray:
+        """Vectorized node batch times for a ``(..., n)`` batch array."""
+        c = self.coeffs
+        b = np.asarray(batches, dtype=np.float64)
+        compute_path = c.alphas * b + c.cs + self.comm.t_u
+        comm_path = c.betas * b + c.ds + self.comm.t_comm
+        return np.maximum(compute_path, comm_path)
+
     def cluster_time(self, batches: Sequence[float]) -> float:
         """Cluster batch time = max over nodes (synchronous DP)."""
         if len(batches) != self.n:
             raise ValueError("batch vector length mismatch")
-        return max(self.node_time(i, b) for i, b in enumerate(batches))
+        return float(self.node_times(batches).max())
 
     def is_compute_bottleneck(self, i: int, b: float) -> bool:
         node = self.nodes[i]
         return (1.0 - self.comm.gamma) * node.backprop(b) >= self.comm.t_o
+
+    def compute_bottleneck_mask(self, batches) -> np.ndarray:
+        """Vectorized overlap-state criterion for a ``(..., n)`` batch array:
+        True where a node is compute-bottleneck (``(1-gamma) P_i >= T_o``)."""
+        c = self.coeffs
+        b = np.asarray(batches, dtype=np.float64)
+        return (1.0 - self.comm.gamma) * (c.ks * b + c.ms) >= self.comm.t_o
 
     def validate(self) -> None:
         self.comm.validate()

@@ -172,6 +172,12 @@ class SimulatedCluster:
                 noise, 1e-12
             )
         self.gamma_noise = np.asarray(per_node_gamma_noise, dtype=np.float64)
+        # Coefficient arrays for the vectorized timing path (profiles are
+        # frozen dataclasses and the list is never mutated after init).
+        self._qs = np.array([p.q for p in self.profiles], dtype=np.float64)
+        self._ss = np.array([p.s for p in self.profiles], dtype=np.float64)
+        self._ks = np.array([p.k for p in self.profiles], dtype=np.float64)
+        self._ms = np.array([p.m for p in self.profiles], dtype=np.float64)
 
     @property
     def n(self) -> int:
@@ -198,48 +204,62 @@ class SimulatedCluster:
         if len(batches) != self.n:
             raise ValueError("batch vector length mismatch")
         comm, gamma = self.comm, self.comm.gamma
-        a_times, p_times, sync_starts = [], [], []
-        for prof, b in zip(self.profiles, batches):
-            node = prof.model()
-            a_t = self._jitter(node.a(b))
-            p_t = self._jitter(node.backprop(b))
-            a_times.append(a_t)
-            p_times.append(p_t)
-            sync_starts.append(a_t + gamma * p_t)
+        b = np.asarray(batches, dtype=np.float64)
+        a_times = self._qs * b + self._ss
+        p_times = self._ks * b + self._ms
+        if self.noise > 0:
+            # One vectorized draw consumes the bit stream exactly like the
+            # historical per-node (a, p) interleaved scalar draws.
+            eps = self._rng.normal(0.0, self.noise, size=(self.n, 2))
+            a_times = a_times * np.exp(eps[:, 0])
+            p_times = p_times * np.exp(eps[:, 1])
+        sync_starts = a_times + gamma * p_times
 
         # Ring all-reduce is collective: the last bucket cannot complete
         # before every node reaches its own syncStart + remaining compute.
         # Node batch time per §3.2.3 (max form), with the *cluster-wide*
         # all-reduce gating: every node ends at the same sync-finish time for
         # the final bucket, but local compute may extend past it.
-        last_sync_finish = max(
-            max(ss + comm.t_comm for ss in sync_starts),
-            max(a + p + comm.t_u for a, p in zip(a_times, p_times)),
-        )
-        node_times = [last_sync_finish] * self.n  # synchronous: all end together
-        batch_time = last_sync_finish
-
-        observations = []
-        for i, (prof, b) in enumerate(zip(self.profiles, batches)):
-            measured_gamma = self._jitter(gamma, float(self.gamma_noise[i]))
-            measured_gamma = min(max(measured_gamma, 0.0), 1.0)
-            # Reported comm time = true T_comm + waiting (nodes that reach
-            # syncStart early observe a longer "communication" phase).
-            wait = last_sync_finish - (sync_starts[i] + comm.t_comm)
-            reported_comm = comm.t_comm + max(wait, 0.0)
-            observations.append(
-                NodeObservation(
-                    batch_size=float(b),
-                    a_time=a_times[i],
-                    backprop_time=p_times[i],
-                    gamma=measured_gamma,
-                    comm_time=self._jitter(reported_comm),
-                )
+        last_sync_finish = float(
+            max(
+                (sync_starts + comm.t_comm).max(),
+                (a_times + p_times + comm.t_u).max(),
             )
+        )
+        node_times = (last_sync_finish,) * self.n  # synchronous: all end together
+
+        # Measurement jitter, preserving the historical draw order
+        # [gamma_0, comm_0, gamma_1, comm_1, ...] with zero-scale draws
+        # skipped (matching the scalar _jitter early-return).
+        scales = np.empty((self.n, 2), dtype=np.float64)
+        scales[:, 0] = self.gamma_noise
+        scales[:, 1] = self.noise
+        flat = scales.reshape(-1)
+        factors = np.ones(2 * self.n, dtype=np.float64)
+        drawn = flat > 0
+        if drawn.any():
+            factors[drawn] = np.exp(self._rng.normal(0.0, flat[drawn]))
+        factors = factors.reshape(self.n, 2)
+        measured_gammas = np.clip(gamma * factors[:, 0], 0.0, 1.0)
+        # Reported comm time = true T_comm + waiting (nodes that reach
+        # syncStart early observe a longer "communication" phase).
+        wait = last_sync_finish - (sync_starts + comm.t_comm)
+        reported_comm = (comm.t_comm + np.maximum(wait, 0.0)) * factors[:, 1]
+
+        observations = tuple(
+            NodeObservation(
+                batch_size=float(bi),
+                a_time=float(a_times[i]),
+                backprop_time=float(p_times[i]),
+                gamma=float(measured_gammas[i]),
+                comm_time=float(reported_comm[i]),
+            )
+            for i, bi in enumerate(batches)
+        )
         return StepMeasurement(
-            batch_time=batch_time,
-            node_times=tuple(node_times),
-            observations=tuple(observations),
+            batch_time=last_sync_finish,
+            node_times=node_times,
+            observations=observations,
         )
 
     def run_epoch(

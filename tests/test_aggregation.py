@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compiling; excluded from the fast lane
+
 from repro.core.aggregation import (
     padded_batch_layout,
     ratios,

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compiling; excluded from the fast lane
+
 from repro.configs import REDUCED_SHAPES, arch_ids, get_api
 from repro.optim import constant_schedule, sgd
 from repro.train.step import build_train_step

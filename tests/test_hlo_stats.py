@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compiling; excluded from the fast lane
+
 from repro.launch.hlo_stats import analyze_hlo
 
 

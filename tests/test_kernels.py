@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compiling; excluded from the fast lane
+
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.rwkv6_wkv import wkv, wkv_ref
 from repro.kernels.ssm_scan import ssm_ref, ssm_scan

@@ -1,9 +1,9 @@
 """OptPerf solver tests: Algorithm 1 vs the water-fill oracle, optimality
 properties, special cases (App. A), and integer rounding."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hypothesis, st
 
 from repro.core.optperf import (
     round_batches,

@@ -1,0 +1,199 @@
+"""Batched OptPerf engine: seeded (hypothesis-free) equivalence against the
+scalar water-fill and Algorithm-1 oracles, water-fill finalization
+invariants, integer-rounding hardening, and sweep-consumer plan parity."""
+import numpy as np
+import pytest
+
+from repro.core.controller import CannikinController
+from repro.core.goodput import BatchSizeSelector, goodput, goodput_curve
+from repro.core.optperf import (
+    round_batches,
+    solve_optperf_algorithm1,
+    solve_optperf_batch,
+    solve_optperf_waterfill,
+)
+from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
+from repro.core.simulator import SimulatedCluster, cluster_B
+
+
+def random_model(rng: np.random.Generator, n: int) -> ClusterPerfModel:
+    """Random cluster spanning compute-, comm-, and mixed-bottleneck regimes
+    (t_o drawn across three orders of magnitude drives the regime)."""
+    nodes = tuple(
+        NodePerfModel(
+            q=float(rng.uniform(1e-4, 8e-3)),
+            s=float(rng.uniform(0.0, 0.02)),
+            k=float(rng.uniform(1e-4, 8e-3)),
+            m=float(rng.uniform(0.0, 0.02)),
+        )
+        for _ in range(n)
+    )
+    comm = CommModel(
+        t_o=float(10.0 ** rng.uniform(-4, -1)),
+        t_u=float(rng.uniform(0.0, 0.02)),
+        gamma=float(rng.uniform(0.02, 0.6)),
+    )
+    return ClusterPerfModel(nodes=nodes, comm=comm)
+
+
+# 200 random clusters: 50 per cluster size.
+CASES = [(n, seed) for n in (2, 16, 64, 256) for seed in range(50)]
+
+
+@pytest.mark.parametrize("n,seed", CASES, ids=lambda v: str(v))
+def test_batch_matches_scalar_oracles(n, seed):
+    """`solve_optperf_batch` == scalar water-fill == Algorithm 1 within 1e-6
+    relative opt_perf, and partitions sum exactly to each candidate."""
+    rng = np.random.default_rng(1000 * n + seed)
+    model = random_model(rng, n)
+    cands = np.unique(np.round(rng.uniform(8, 8192, size=5))).astype(np.float64)
+    batch = solve_optperf_batch(model, cands)
+    for j, b in enumerate(cands):
+        wf = solve_optperf_waterfill(model, float(b))
+        a1 = solve_optperf_algorithm1(model, float(b))
+        assert batch.opt_perfs[j] == pytest.approx(wf.opt_perf, rel=1e-6)
+        assert batch.opt_perfs[j] == pytest.approx(a1.opt_perf, rel=1e-6)
+        assert batch.batches[j].sum() == pytest.approx(b, rel=1e-9)
+        assert batch.batches[j].min() >= 0.0
+        # Realized time equals the reported optimum.
+        assert model.cluster_time(list(batch.batches[j])) == pytest.approx(
+            float(batch.opt_perfs[j]), rel=1e-12
+        )
+
+
+def test_batch_solution_extraction_roundtrip():
+    rng = np.random.default_rng(7)
+    model = random_model(rng, 5)
+    batch = solve_optperf_batch(model, [64.0, 256.0, 1024.0])
+    assert len(batch) == 3
+    sol = batch.solution(1)
+    assert sol.total_batch == 256.0
+    assert sum(sol.batches) == pytest.approx(256.0, rel=1e-9)
+    assert sol.bottleneck == batch.bottleneck(1)
+    assert len(batch.solutions()) == 3
+
+
+def test_batch_input_validation():
+    rng = np.random.default_rng(3)
+    model = random_model(rng, 3)
+    with pytest.raises(ValueError):
+        solve_optperf_batch(model, [])
+    with pytest.raises(ValueError):
+        solve_optperf_batch(model, [128.0, -1.0])
+    with pytest.raises(ValueError):
+        solve_optperf_batch(model, [[128.0]])
+    with pytest.raises(ValueError):
+        BatchSizeSelector(candidates=(64,), ref_batch=64, engine="bathced")
+
+
+def test_batch_solution_does_not_alias_caller_array():
+    rng = np.random.default_rng(9)
+    model = random_model(rng, 4)
+    cands = np.array([64.0, 256.0])
+    sol = solve_optperf_batch(model, cands)
+    cands[0] = 1e9  # caller reuses its buffer
+    assert sol.total_batches[0] == 64.0
+    with pytest.raises(ValueError):
+        sol.batches[0, 0] = 0.0  # result arrays are frozen
+
+
+def test_waterfill_positive_nodes_respect_time_bound():
+    """Finalization never inflates a binding node past the bisected bound:
+    every positive-batch node's realized time is <= the reported optimum
+    (clamped stragglers may sit above it at their fixed floor)."""
+    for seed in range(30):
+        rng = np.random.default_rng(seed)
+        model = random_model(rng, int(rng.integers(2, 32)))
+        sol = solve_optperf_waterfill(model, float(rng.uniform(4, 4096)))
+        times = model.node_times(np.asarray(sol.batches))
+        positive = np.asarray(sol.batches) > 0
+        assert np.all(times[positive] <= sol.opt_perf * (1 + 1e-8))
+        assert sum(sol.batches) == pytest.approx(sol.total_batch, rel=1e-9)
+
+
+def test_waterfill_clamps_hopeless_straggler():
+    model = ClusterPerfModel(
+        nodes=(
+            NodePerfModel(q=1e-4, s=0.0, k=1e-4, m=0.0),
+            NodePerfModel(q=1.0, s=10.0, k=1.0, m=10.0),
+        ),
+        comm=CommModel(t_o=0.001, t_u=0.001, gamma=0.1),
+    )
+    batch = solve_optperf_batch(model, [64.0, 128.0])
+    assert batch.batches[0, 1] == 0.0
+    assert batch.batches[0, 0] == pytest.approx(64.0)
+    assert batch.batches[1, 0] == pytest.approx(128.0)
+
+
+def test_round_batches_negative_float_residue():
+    """Floors already overshooting the total (post-rescale float residue) are
+    handled by decrementing the smallest fractional parts, not by raising."""
+    out = round_batches([11.0, 11.0, 10.000001], 31)
+    assert sum(out) == 31
+    assert sorted(out) == [10, 10, 11]
+    # Zero entries are never driven negative.
+    out = round_batches([0.0, 2.0, 30.0], 31)
+    assert sum(out) == 31
+    assert min(out) >= 0
+    # Overshoot of >= 1 sample per node is a caller bug, not residue: raise.
+    with pytest.raises(ValueError):
+        round_batches([10.2, 10.2], 10)
+    with pytest.raises(ValueError):
+        round_batches([1.0, 1.0], -2)
+
+
+def test_goodput_curve_matches_scalar_goodput():
+    rng = np.random.default_rng(11)
+    model = random_model(rng, 8)
+    cands = [32.0, 64.0, 128.0, 512.0, 2048.0]
+    curve = goodput_curve(model, cands, b_noise=300.0, ref_batch=32)
+    for j, b in enumerate(cands):
+        gp, _ = goodput(model, b, 300.0, 32, solver="waterfill")
+        assert curve.goodputs[j] == pytest.approx(gp, rel=1e-6)
+    best_b, best_sol, best_gp = curve.best()
+    assert best_b == cands[curve.best_index()]
+    assert best_gp == pytest.approx(curve.goodputs.max())
+    assert sum(best_sol.batches) == pytest.approx(best_b, rel=1e-9)
+
+
+def test_selector_engines_agree():
+    """Batched and scalar sweep engines pick the same candidate and emit the
+    same solution for the winner."""
+    rng = np.random.default_rng(23)
+    for trial in range(10):
+        model = random_model(rng, int(rng.integers(2, 24)))
+        cands = tuple(int(b) for b in (64, 128, 256, 512, 1024, 2048))
+        b_noise = float(rng.uniform(50, 5000))
+        sel_b = BatchSizeSelector(candidates=cands, ref_batch=64, engine="batched")
+        sel_s = BatchSizeSelector(candidates=cands, ref_batch=64, engine="scalar")
+        got_b = sel_b.select(model, b_noise)
+        got_s = sel_s.select(model, b_noise)
+        assert got_b[0] == got_s[0]
+        assert got_b[1].batches == got_s[1].batches
+        assert got_b[2] == pytest.approx(got_s[2], rel=1e-9)
+
+
+def test_controller_plans_identical_across_engines():
+    """Acceptance: the controller produces identical epoch plans (same chosen
+    B, same integer partitions) with the batched sweep and the scalar one, on
+    seeded noisy scenarios."""
+    profiles, comm = cluster_B()
+    for seed in (0, 1, 2):
+        plans = {}
+        for engine in ("batched", "scalar"):
+            sim = SimulatedCluster(profiles, comm, noise=0.01, seed=seed)
+            ctrl = CannikinController(
+                sim.n,
+                batch_candidates=[128, 256, 512, 1024, 2048, 4096],
+                ref_batch=128,
+                sweep_engine=engine,
+            )
+            out = []
+            for _ in range(8):
+                plan = ctrl.plan_epoch()
+                _, ms = sim.run_epoch(list(plan.batches), steps=5)
+                ctrl.observe_epoch(ms)
+                ctrl.observe_gradients([4.0] * sim.n, 3.0, list(plan.batches))
+                out.append((plan.total_batch, plan.batches, plan.lr_scale))
+            plans[engine] = out
+        assert plans["batched"] == plans["scalar"]

@@ -1,10 +1,10 @@
 """Performance-model learning: OLS fits, inverse-variance gamma weighting,
 T_comm min-aggregation, Eq. (8) bootstrap, and end-to-end model recovery
 from noisy simulated measurements (§4.5 / §5.3)."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hypothesis, st
 
 from repro.core.perf_model import (
     GammaAggregator,

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow  # JAX-compiling; excluded from the fast lane
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import train_microbatches

@@ -10,6 +10,8 @@ import sys
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compiling; excluded from the fast lane
+
 from repro.configs import get_api
 from repro.core import CannikinController, SimulatedCluster, cluster_B
 from repro.core.baselines import EvenPartition, LBBSPPartition

@@ -2,12 +2,14 @@
 pipeline invariants, checkpoint round-trip, hetero trainer epoch."""
 import os
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from _hypothesis_compat import hypothesis, st
+
+pytestmark = pytest.mark.slow  # JAX-compiling substrate tests
 
 from repro.configs import get_api
 from repro.core import CannikinController, SimulatedCluster, cluster_A
