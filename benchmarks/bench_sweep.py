@@ -1,16 +1,30 @@
-"""Goodput-sweep benchmark: batched OptPerf engine vs per-candidate scalar
-loops (the §4.1/§4.5 control-loop hot path behind the Table 5 overhead
-claims).
+"""Goodput-sweep benchmark: the OptPerf engines head-to-head (the §4.1/§4.5
+control-loop hot path behind the Table 5 overhead claims).
 
-Measures, at n nodes x C candidate total batch sizes:
+Lanes, at n nodes x C candidate total batch sizes:
 
   * scalar water-fill loop  — ``solve_optperf_waterfill`` per candidate
   * scalar Algorithm 1 loop — ``solve_optperf_algorithm1`` per candidate
     (with §4.5 boundary-hint chaining, as the old selector sweep did)
   * batched engine          — one ``solve_optperf_batch`` array pass
+  * warm-started engine     — the same sweep re-solved after a small
+    coefficient drift, brackets seeded from the previous ``t_stars``
+  * jax engine              — ``solve_optperf_batch_jax``: the sweep
+    jit-compiled on-device (cold and warm-seeded)
+  * scheduler               — ``allocate`` at J jobs x N nodes, batched
+    stacked rounds vs the per-(job, node) scalar loop
 
-and verifies the batched opt_perf values against the scalar water-fill
-oracle (max relative gap must be <= 1e-6).
+Hard gates (full mode):
+  * batched engine <= 1e-6 relative opt_perf gap vs the scalar oracle and
+    >= 10x over the scalar loop at 64x64,
+  * warm-started sweep >= 5x over the cold batched sweep under small drift
+    at 64x64 (and bit-equal results to ~1e-9),
+  * jax engine <= 1e-5 relative gap vs the scalar oracle,
+  * batched ``allocate`` >= 10x over the scalar loop at 8 jobs x 64 nodes
+    with an identical assignment.
+
+Results land in ``artifacts/bench/sweep.json`` (uploaded per CI run so the
+perf trajectory is tracked per PR).
 
 Usage:
     PYTHONPATH=src:. python -m benchmarks.bench_sweep            # full (64x64)
@@ -19,6 +33,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import time
 from typing import List
 
 import numpy as np
@@ -31,6 +46,8 @@ from repro.core.optperf import (
     solve_optperf_waterfill,
 )
 from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
+from repro.core.scheduler import allocate, random_jobs
+from repro.core.simulator import drift_model
 
 
 def _random_model(n: int, seed: int = 0) -> ClusterPerfModel:
@@ -93,6 +110,102 @@ def run_config(n: int, num_candidates: int, repeats: int) -> dict:
     }
 
 
+def run_warm(n: int, num_candidates: int, repeats: int, *, assert_gate: bool) -> dict:
+    """Warm-start lane: re-solve after a small drift, seeded vs cold."""
+    model = _random_model(n)
+    cands = _candidates(num_candidates)
+    base = solve_optperf_batch(model, cands)
+    drifted = drift_model(model, rel=1e-4, seed=1)
+
+    t_cold = time_call(lambda: solve_optperf_batch(drifted, cands), repeats=repeats)
+    t_warm = time_call(
+        lambda: solve_optperf_batch(drifted, cands, warm_start=base.t_stars),
+        repeats=repeats,
+    )
+    cold_sol = solve_optperf_batch(drifted, cands)
+    warm_sol = solve_optperf_batch(drifted, cands, warm_start=base.t_stars)
+    gap = float(np.max(np.abs(warm_sol.opt_perfs - cold_sol.opt_perfs) / cold_sol.opt_perfs))
+    rec = {
+        "n": n,
+        "candidates": int(cands.size),
+        "drift_rel": 1e-4,
+        "cold_us": t_cold,
+        "warm_us": t_warm,
+        "speedup_warm_vs_cold": t_cold / t_warm,
+        "cold_evals": cold_sol.iterations,
+        "warm_evals": warm_sol.iterations,
+        "max_rel_gap_warm_vs_cold": gap,
+    }
+    if gap > 1e-9:
+        raise AssertionError(f"warm-started sweep drifted from cold: {rec}")
+    if assert_gate and rec["speedup_warm_vs_cold"] < 5.0:
+        raise AssertionError(f"warm sweep under 5x at {n}x{num_candidates}: {rec}")
+    return rec
+
+
+def run_jax(n: int, num_candidates: int, repeats: int) -> dict:
+    """JAX-engine lane: jit-compiled on-device sweep vs the scalar oracle."""
+    from repro.core.optperf_jax import solve_optperf_batch_jax
+
+    model = _random_model(n)
+    cands = _candidates(num_candidates)
+    # warmup inside time_call covers jit compilation.
+    t_jax = time_call(lambda: solve_optperf_batch_jax(model, cands), repeats=repeats)
+    base = solve_optperf_batch_jax(model, cands)
+    t_jax_warm = time_call(
+        lambda: solve_optperf_batch_jax(model, cands, warm_start=base.t_stars),
+        repeats=repeats,
+    )
+    t_np = time_call(lambda: solve_optperf_batch(model, cands), repeats=repeats)
+    gaps = []
+    for j, b in enumerate(cands):
+        wf = solve_optperf_waterfill(model, float(b))
+        gaps.append(abs(base.opt_perfs[j] - wf.opt_perf) / wf.opt_perf)
+    rec = {
+        "n": n,
+        "candidates": int(cands.size),
+        "jax_us": t_jax,
+        "jax_warm_us": t_jax_warm,
+        "numpy_batched_us": t_np,
+        "max_rel_gap_vs_oracle": float(max(gaps)),
+    }
+    if rec["max_rel_gap_vs_oracle"] > 1e-5:
+        raise AssertionError(f"jax engine drifted from scalar oracle: {rec}")
+    return rec
+
+
+def run_scheduler(n_jobs: int, n_nodes: int, *, assert_gate: bool) -> dict:
+    """Scheduler lane: batched stacked allocation vs the per-pair loop."""
+    jobs = random_jobs(n_jobs, n_nodes)
+
+    def timed(engine: str, repeats: int) -> float:
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            allocate(jobs, n_nodes, engine=engine)
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    t_batched = timed("batched", repeats=3)
+    t_scalar = timed("scalar", repeats=1)  # the slow baseline: once is enough
+    a_b = allocate(jobs, n_nodes, engine="batched")
+    a_s = allocate(jobs, n_nodes, engine="scalar")
+    rec = {
+        "jobs": n_jobs,
+        "nodes": n_nodes,
+        "batched_us": t_batched,
+        "scalar_us": t_scalar,
+        "speedup": t_scalar / t_batched,
+        "assignments_equal": a_b.assignment == a_s.assignment,
+        "aggregate_fraction": a_b.aggregate_fraction,
+    }
+    if not rec["assignments_equal"]:
+        raise AssertionError(f"batched allocate diverged from scalar: {rec}")
+    if assert_gate and rec["speedup"] < 10.0:
+        raise AssertionError(f"batched allocate under 10x at {n_jobs}x{n_nodes}: {rec}")
+    return rec
+
+
 def run(smoke: bool = False) -> List[Row]:
     configs = [(8, 8)] if smoke else [(16, 16), (64, 64), (256, 64)]
     repeats = 3 if smoke else 5
@@ -117,6 +230,51 @@ def run(smoke: bool = False) -> List[Row]:
             raise AssertionError(f"batched engine drifted from oracle: {rec}")
         if not smoke and (n, c) == (64, 64) and rec["speedup_vs_waterfill_loop"] < 10.0:
             raise AssertionError(f"batched sweep under 10x at 64x64: {rec}")
+
+    # Warm-start lane (gate: >= 5x at the full 64x64 configuration).
+    wn, wc = (8, 8) if smoke else (64, 64)
+    rec = run_warm(wn, wc, repeats=max(repeats, 7), assert_gate=not smoke)
+    payload["warm"] = rec
+    rows.append(
+        Row(
+            f"sweep/warm/n{wn}xc{wc}",
+            rec["warm_us"],
+            f"speedup={rec['speedup_warm_vs_cold']:.1f}x;"
+            f"evals={rec['warm_evals']}vs{rec['cold_evals']}",
+        )
+    )
+
+    # JAX-engine lane (gate: <= 1e-5 vs the scalar oracle; CPU jit in CI).
+    try:
+        from repro.core.optperf_jax import HAS_JAX
+    except ImportError:
+        HAS_JAX = False
+    if HAS_JAX:
+        rec = run_jax(wn, wc, repeats)
+        payload["jax"] = rec
+        rows.append(
+            Row(
+                f"sweep/jax/n{wn}xc{wc}",
+                rec["jax_us"],
+                f"warm={rec['jax_warm_us']:.0f}us;"
+                f"gap={rec['max_rel_gap_vs_oracle']:.2e}",
+            )
+        )
+    else:
+        payload["jax"] = {"skipped": "jax unavailable"}
+
+    # Scheduler lane (gate: >= 10x at 8 jobs x 64 nodes, equal assignments).
+    sj, sn = (3, 12) if smoke else (8, 64)
+    rec = run_scheduler(sj, sn, assert_gate=not smoke)
+    payload["scheduler"] = rec
+    rows.append(
+        Row(
+            f"sweep/scheduler/j{sj}xn{sn}",
+            rec["batched_us"],
+            f"speedup={rec['speedup']:.1f}x",
+        )
+    )
+
     # A goodput_curve smoke call so the end-to-end consumer path is timed too.
     model = _random_model(16)
     cands = _candidates(16)

@@ -1,5 +1,7 @@
 """olmo-1b [dense] — 16L d_model=2048 16H (MHA kv=16) d_ff=8192 vocab=50304,
 non-parametric LayerNorm [arXiv:2402.00838]."""
+import jax.numpy as jnp
+
 from repro.models.dense import DenseConfig
 
 ARCH_ID = "olmo-1b"
@@ -35,4 +37,10 @@ def reduced() -> DenseConfig:
         norm="nonparam_ln",
         decode_window=64,
         remat=False,
+        # The reduced config is the numerics-equivalence vehicle (Eq. 9
+        # aggregation, grad-accumulation identities): verify in float32 so
+        # mathematically exact identities are assertable; bf16 rounding of
+        # the full-scale config is exercised by the other arch configs.
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.float32,
     )

@@ -29,6 +29,7 @@ from repro.core.optperf import (
     solve_optperf,
     solve_optperf_algorithm1,
     solve_optperf_batch,
+    solve_optperf_stacked,
     solve_optperf_waterfill,
 )
 from repro.core.perf_model import (
@@ -38,6 +39,7 @@ from repro.core.perf_model import (
     NodeObservation,
     NodePerfModel,
     OnlineNodeFitter,
+    StackedClusterModel,
     bootstrap_partition,
     inverse_variance_weight,
 )
@@ -71,7 +73,9 @@ __all__ = [
     "solve_optperf",
     "solve_optperf_algorithm1",
     "solve_optperf_batch",
+    "solve_optperf_stacked",
     "solve_optperf_waterfill",
+    "StackedClusterModel",
     "round_batches",
     "goodput_curve",
     "estimate_gns",

@@ -61,6 +61,11 @@ class ControllerStats:
     epochs_planned: int = 0
     full_sweeps: int = 0
     incremental_updates: int = 0
+    # Incremental re-bracketing observability: how many full sweeps were
+    # warm-started from the previous epoch's t_star vector vs solved cold
+    # (cold = first sweep, membership change, or coefficient-regime change).
+    warm_sweeps: int = 0
+    cold_sweeps: int = 0
 
     def overhead_fraction(self, training_seconds: float) -> float:
         if training_seconds <= 0:
@@ -79,9 +84,13 @@ class CannikinController:
       adaptive: if False, keeps total batch fixed at ``ref_batch`` (the
         fixed-batch evaluation mode of §5.2.2) but still optimizes the split.
       sweep_engine: "batched" (default) runs the candidate goodput sweep as
-        one vectorized ``solve_optperf_batch`` pass; "scalar" keeps the
-        per-candidate Algorithm-1 loop (cross-check oracle).  Plans are
-        identical either way — the winner is always re-solved scalar.
+        one vectorized ``solve_optperf_batch`` pass; "jax" runs the same
+        sweep jit-compiled on-device beside the training step (falls back to
+        "batched" when JAX is unavailable); "scalar" keeps the per-candidate
+        Algorithm-1 loop (cross-check oracle).  Plans are identical in every
+        case — the winner is always re-solved scalar.  The array engines
+        warm-start each epoch's brackets from the previous epoch's t_star
+        vector (see BatchSizeSelector).
       min_local / max_local: per-node local batch bounds (memory limits, §6).
     """
 
@@ -254,6 +263,8 @@ class CannikinController:
         self.stats.overhead_seconds += time.perf_counter() - t0
         self.stats.full_sweeps = self.selector.full_sweeps
         self.stats.incremental_updates = self.selector.incremental_updates
+        self.stats.warm_sweeps = self.selector.warm_sweeps
+        self.stats.cold_sweeps = self.selector.cold_sweeps
         self._last_plan = plan
         return plan
 
@@ -310,8 +321,9 @@ class CannikinController:
         self.fitters = {new: self.fitters[old] for new, old in enumerate(keep)}
         self.n = len(keep)
         self._model = None
-        self.selector._optperf_cache.clear()
-        self.selector._state_cache.clear()
+        # Cluster membership changed: cached solutions AND the warm-start
+        # bracket state are both stale.
+        self.selector.invalidate()
 
     def add_nodes(self, count: int = 1) -> None:
         """Add fresh nodes: their models are unknown, so the controller
@@ -323,8 +335,7 @@ class CannikinController:
             self.fitters[i] = OnlineNodeFitter()
         self.n += count
         self._model = None
-        self.selector._optperf_cache.clear()
-        self.selector._state_cache.clear()
+        self.selector.invalidate()
 
     @property
     def last_plan(self) -> Optional[EpochPlan]:

@@ -75,6 +75,23 @@ def goodput(
     return thr * eff, sol
 
 
+def _array_sweep_solver(engine: str):
+    """The array-engine entry point for a full sweep: the jit on-device
+    solver for ``engine == "jax"`` (silently falling back to the NumPy
+    batched engine when JAX is unavailable), else the NumPy batched engine.
+    Shared gating for :func:`goodput_curve` and :class:`BatchSizeSelector`.
+    """
+    if engine == "jax":
+        try:
+            from repro.core import optperf_jax
+
+            if optperf_jax.HAS_JAX:
+                return optperf_jax.solve_optperf_batch_jax
+        except ImportError:  # pragma: no cover - jax present in CI image
+            pass
+    return solve_optperf_batch
+
+
 @dataclasses.dataclass(frozen=True)
 class GoodputCurve:
     """goodput(B) over a candidate vector, solved in one batched pass."""
@@ -103,17 +120,24 @@ def goodput_curve(
     candidates: Sequence[float],
     b_noise: float,
     ref_batch: float,
+    *,
+    engine: str = "batched",
+    warm_start: Optional[np.ndarray] = None,
 ) -> GoodputCurve:
     """Vectorized goodput(B) for every candidate total batch size.
 
     One :func:`solve_optperf_batch` call (a ``(C,)``-bracket bisection against
     a ``(C, n)`` feasible-batch matrix) replaces the per-candidate scalar
     sweep; cost is independent of the candidate count up to the O(C*n) array
-    arithmetic inside each of the ~200 bisection steps.
+    arithmetic inside each of the ~50 bisection steps — or a handful with a
+    ``warm_start`` (the previous epoch's ``curve.solutions.t_stars``).
+    ``engine="jax"`` runs the sweep jit-compiled on-device.
     """
     cands = np.array(candidates, dtype=np.float64)  # copy: no aliasing
     cands.flags.writeable = False
-    sols = solve_optperf_batch(model, cands)
+    if engine not in ("batched", "jax"):
+        raise ValueError(f"unknown goodput_curve engine {engine!r}")
+    sols = _array_sweep_solver(engine)(model, cands, warm_start=warm_start)
     thr = cands / sols.opt_perfs
     eff = statistical_efficiency(b_noise, cands, ref_batch)
     return GoodputCurve(
@@ -153,35 +177,93 @@ class BatchSizeSelector:
 
     ``engine`` selects how a full sweep is executed: ``"batched"`` (default)
     solves every candidate in one :func:`solve_optperf_batch` array pass;
-    ``"scalar"`` is the original per-candidate loop with §4.5 boundary-hint
-    chaining, kept as the cross-check oracle.  Either way the winning
-    candidate is re-solved with the scalar ``solver``, so the emitted plan is
-    identical across engines.
+    ``"jax"`` runs the same sweep jit-compiled on-device
+    (:mod:`repro.core.optperf_jax`; silently falls back to ``"batched"``
+    when JAX is unavailable); ``"scalar"`` is the original per-candidate
+    loop with §4.5 boundary-hint chaining, kept as the cross-check oracle.
+    Either way the winning candidate is re-solved with the scalar
+    ``solver``, so the emitted plan is identical across engines.
+
+    Incremental re-bracketing: the array engines carry the previous sweep's
+    ``t_stars`` vector and seed the next sweep's brackets from it, cutting a
+    full bisection to a handful of array passes when the performance models
+    drifted only a little between epochs.  The warm state is dropped —
+    falling back to cold brackets — whenever the cluster membership (node
+    count), the candidate set, or the coefficient regime changed (any
+    coefficient moved by more than ``warm_drift_limit`` relative).
     """
 
     candidates: Tuple[int, ...]
     ref_batch: int
     solver: str = "algorithm1"
     engine: str = "batched"
+    warm_drift_limit: float = 0.25
     # epoch -> cache
     _optperf_cache: Dict[int, OptPerfSolution] = dataclasses.field(default_factory=dict)
     _state_cache: Dict[int, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
     full_sweeps: int = 0
     incremental_updates: int = 0
+    warm_sweeps: int = 0
+    cold_sweeps: int = 0
+    _warm_t_stars: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+    _warm_signature: Optional[Tuple[np.ndarray, ...]] = dataclasses.field(
+        default=None, repr=False
+    )
 
     def __post_init__(self) -> None:
-        if self.engine not in ("batched", "scalar"):
+        if self.engine not in ("batched", "scalar", "jax"):
             raise ValueError(f"unknown sweep engine {self.engine!r}")
+
+    # -- warm-start state ----------------------------------------------
+
+    @staticmethod
+    def _model_signature(model: ClusterPerfModel) -> Tuple[np.ndarray, ...]:
+        c = model.coeffs
+        comm = np.asarray([model.comm.t_o, model.comm.t_u, model.comm.gamma])
+        return (c.alphas, c.cs, c.betas, c.ds, comm)
+
+    def _warm_start_for(self, model: ClusterPerfModel) -> Optional[np.ndarray]:
+        """Previous t_stars if they are still trustworthy seeds, else None."""
+        if self._warm_t_stars is None or self._warm_signature is None:
+            return None
+        if self._warm_t_stars.shape[0] != len(self.candidates):
+            return None
+        sig = self._model_signature(model)
+        for old, new in zip(self._warm_signature, sig):
+            if old.shape != new.shape:   # cluster membership changed
+                return None
+            denom = np.maximum(np.abs(old), 1e-12)
+            if float(np.max(np.abs(new - old) / denom)) > self.warm_drift_limit:
+                return None              # coefficient regime changed
+        return self._warm_t_stars
+
+    def invalidate(self) -> None:
+        """Drop every cached solution *and* the warm-start state (cluster
+        membership changes route through here)."""
+        self._optperf_cache.clear()
+        self._state_cache.clear()
+        self._warm_t_stars = None
+        self._warm_signature = None
 
     def _sweep(self, model: ClusterPerfModel) -> None:
         self.full_sweeps += 1
         ordered = sorted(self.candidates)
-        if self.engine == "batched":
-            batch_sol = solve_optperf_batch(model, np.asarray(ordered, dtype=np.float64))
+        if self.engine in ("batched", "jax"):
+            warm = self._warm_start_for(model)
+            solver = _array_sweep_solver(self.engine)
+            batch_sol = solver(
+                model, np.asarray(ordered, dtype=np.float64), warm_start=warm
+            )
             for j, b in enumerate(ordered):
                 sol = batch_sol.solution(j)
                 self._optperf_cache[b] = sol
                 self._state_cache[b] = sol.bottleneck
+            if warm is None:
+                self.cold_sweeps += 1
+            else:
+                self.warm_sweeps += 1
+            self._warm_t_stars = np.asarray(batch_sol.t_stars, dtype=np.float64)
+            self._warm_signature = self._model_signature(model)
             return
         hint: Optional[int] = None
         for b in ordered:

@@ -31,22 +31,41 @@ Three solvers are provided:
     Python-level evaluations.  Complexity: O(max_iter * C * n) flops, O(C * n)
     memory, zero Python-level per-node or per-candidate work in the hot loop.
 
+    ``warm_start`` (incremental re-bracketing): pass the previous epoch's
+    ``t_stars`` vector and the solver runs a *safeguarded Newton* refinement
+    from it instead of cold bracketing + full bisection.  g(T) is monotone
+    piecewise-affine, so when perf-model drift is small the active set is
+    unchanged and the first Newton step lands on the new optimum exactly —
+    a handful of array passes replace ~50.  Every Newton iterate also tightens
+    a true [lo, hi] bracket, and anything not converged falls through to
+    standard bisection, so a stale or even garbage warm start still converges
+    to the identical solution.
+
+``solve_optperf_stacked``
+    The same engine over a :class:`~repro.core.perf_model.StackedClusterModel`
+    — C *independent* problem rows (each row its own node subset + comm
+    model, padded to a common width).  This is what lets the multi-job
+    scheduler evaluate every (job, candidate-node) marginal goodput of a
+    greedy round in one array pass.
+
 All coefficient access goes through :attr:`ClusterPerfModel.coeffs`, the
 cached array view (precomputed alphas/cs/betas/ds/backprop vectors; the model
-dataclass is frozen so the cache can never go stale).
+dataclass is frozen so the cache can never go stale).  A third, jit-compiled
+engine that runs the same bisection on-device lives in
+:mod:`repro.core.optperf_jax`.
 
-Scalar solvers return an :class:`OptPerfSolution`; the batched engine returns
-a :class:`BatchedOptPerfSolution`.
+Scalar solvers return an :class:`OptPerfSolution`; the batched/stacked
+engines return a :class:`BatchedOptPerfSolution`.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.perf_model import ClusterPerfModel
+from repro.core.perf_model import ClusterPerfModel, StackedClusterModel
 
 __all__ = [
     "OptPerfSolution",
@@ -54,6 +73,7 @@ __all__ = [
     "solve_optperf_algorithm1",
     "solve_optperf_waterfill",
     "solve_optperf_batch",
+    "solve_optperf_stacked",
     "solve_optperf",
     "round_batches",
 ]
@@ -87,6 +107,13 @@ class BatchedOptPerfSolution:
     ``batches`` is ``(C, n)``; ``total_batches``/``opt_perfs`` are ``(C,)``;
     ``compute_mask`` is the ``(C, n)`` boolean overlap state (True = the node
     is compute-bottleneck at that candidate's optimum).
+
+    ``t_stars`` is the bisected cluster-time bound per candidate — the warm
+    start for the next epoch's solve.  ``iterations`` counts feasible-batch
+    array passes spent (observability: warm-started solves should use a
+    handful where cold ones use ~50).  ``node_mask`` is ``None`` for the
+    single-model engines; for stacked solves it marks real (non-padding)
+    slots per row and extraction respects it.
     """
 
     total_batches: np.ndarray
@@ -94,19 +121,30 @@ class BatchedOptPerfSolution:
     batches: np.ndarray
     compute_mask: np.ndarray
     method: str
+    t_stars: Optional[np.ndarray] = None
+    iterations: int = 0
+    node_mask: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return int(self.total_batches.shape[0])
 
+    def _valid(self, j: int) -> np.ndarray:
+        if self.node_mask is None:
+            return np.arange(self.batches.shape[1])
+        return np.flatnonzero(self.node_mask[j])
+
     def bottleneck(self, j: int) -> Tuple[str, ...]:
-        return tuple("compute" if c else "comm" for c in self.compute_mask[j])
+        return tuple(
+            "compute" if self.compute_mask[j, i] else "comm" for i in self._valid(j)
+        )
 
     def solution(self, j: int, *, method: Optional[str] = None) -> OptPerfSolution:
-        """Extract candidate ``j`` as a scalar :class:`OptPerfSolution`."""
+        """Extract candidate/row ``j`` as a scalar :class:`OptPerfSolution`
+        (padding slots of stacked solves are dropped)."""
         return OptPerfSolution(
             total_batch=float(self.total_batches[j]),
             opt_perf=float(self.opt_perfs[j]),
-            batches=tuple(float(b) for b in self.batches[j]),
+            batches=tuple(float(self.batches[j, i]) for i in self._valid(j)),
             bottleneck=self.bottleneck(j),
             method=method or self.method,
         )
@@ -289,68 +327,406 @@ def solve_optperf_algorithm1(
 # ---------------------------------------------------------------------------
 # Batched water-fill bisection — the array engine
 # ---------------------------------------------------------------------------
+#
+# A _Problem is the engine's uniform array view of either
+#   * one ClusterPerfModel shared by all C candidates (coeffs (n,), comm
+#     scalars, mask None — NumPy broadcasting does the (C, n) lift), or
+#   * a StackedClusterModel of C independent rows (coeffs (C, n), comm
+#     (C, 1), boolean mask for padding slots).
+# Every solver below (cold bisection, warm-start Newton, finalization, the
+# on-device port in optperf_jax) is written against this view, so the
+# single-model and stacked paths can never drift numerically.
 
 
-def _max_batches_at_times(model: ClusterPerfModel, ts: np.ndarray) -> np.ndarray:
-    """Largest feasible batch per node at cluster times ``ts``.
+class _Problem(NamedTuple):
+    alphas: np.ndarray            # (n,) or (C, n)
+    cs: np.ndarray
+    betas: np.ndarray
+    ds: np.ndarray
+    ks: np.ndarray
+    ms: np.ndarray
+    t_o: Union[float, np.ndarray]     # scalar or (C, 1)
+    t_u: Union[float, np.ndarray]
+    t_comm: Union[float, np.ndarray]
+    gamma: Union[float, np.ndarray]
+    mask: Optional[np.ndarray]        # None (all valid) or (C, n) bool
+    # t-independent precomputes, hoisted out of the per-iteration evals:
+    safe_betas: np.ndarray            # betas with 1.0 at degenerate slots
+    degenerate: np.ndarray            # betas <= 0 (syncStart flat in b)
+    any_degenerate: bool
+    inv_alphas: np.ndarray            # Newton slope ingredients
+    inv_betas: np.ndarray             # 0 at degenerate slots
 
-    ``ts`` has shape ``(...,)``; the result broadcasts to ``(..., n)``.  A
-    node whose syncStart does not grow with b (beta == 0, i.e. q = gamma = 0)
-    is never comm-constrained once t clears its fixed comm time.
-    """
-    c = model.coeffs
-    comm = model.comm
-    t = np.asarray(ts, dtype=np.float64)[..., None]
-    b_compute = (t - comm.t_u - c.cs) / c.alphas
-    slack = t - comm.t_comm - c.ds
-    degenerate = c.betas <= 0.0
-    b_comm = slack / np.where(degenerate, 1.0, c.betas)
-    if degenerate.any():
-        b_comm = np.where(
-            degenerate, np.where(slack >= 0.0, np.inf, -np.inf), b_comm
+
+def _make_problem(alphas, cs, betas, ds, ks, ms, t_o, t_u, t_comm, gamma, mask):
+    degenerate = betas <= 0.0
+    safe_betas = np.where(degenerate, 1.0, betas)
+    return _Problem(
+        alphas=alphas, cs=cs, betas=betas, ds=ds, ks=ks, ms=ms,
+        t_o=t_o, t_u=t_u, t_comm=t_comm, gamma=gamma, mask=mask,
+        safe_betas=safe_betas,
+        degenerate=degenerate,
+        any_degenerate=bool(degenerate.any()),
+        inv_alphas=1.0 / alphas,
+        inv_betas=np.where(degenerate, 0.0, 1.0 / safe_betas),
+    )
+
+
+def _problem_from_model(model: ClusterPerfModel) -> Tuple[_Problem, float]:
+    """(problem view, lo0) — memoized on the frozen model like ``coeffs``,
+    so per-epoch re-solves pay the precompute once."""
+    cached = model.__dict__.get("_optperf_problem")
+    if cached is None:
+        c = model.coeffs
+        comm = model.comm
+        p = _make_problem(
+            c.alphas, c.cs, c.betas, c.ds, c.ks, c.ms,
+            comm.t_o, comm.t_u, comm.t_comm, comm.gamma, None,
         )
-    return np.minimum(b_compute, b_comm)
+        cached = (p, _p_lo0(p))
+        model.__dict__["_optperf_problem"] = cached
+    return cached
+
+
+def _problem_from_stack(stack: StackedClusterModel) -> Tuple[_Problem, np.ndarray]:
+    col = lambda v: v[:, None]  # noqa: E731 — broadcast against (C, n)
+    p = _make_problem(
+        stack.alphas, stack.cs, stack.betas, stack.ds, stack.ks, stack.ms,
+        col(stack.t_o), col(stack.t_u), col(stack.t_comm), col(stack.gamma),
+        stack.mask,
+    )
+    return p, _p_lo0(p)
+
+
+def _p_lo0(p: _Problem) -> Union[float, np.ndarray]:
+    """Per-problem lower time bound: below the smallest fixed node time no
+    node can take positive batch, so assigned(lo0) == 0 < B always."""
+    fixed = np.minimum(p.cs + p.t_u, p.ds + p.t_comm)
+    if p.mask is not None:
+        fixed = np.where(p.mask, fixed, np.inf)
+    out = fixed.min(axis=-1)
+    return float(out) if np.ndim(out) == 0 else out
+
+
+def _p_feasible(
+    p: _Problem, ts: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Shared feasible-batch kernel: (b, b_compute, b_comm).
+
+    Every consumer (bracketing, bisection, Newton, finalization) goes through
+    this single expression, so recomputing feasible batches at an emitted
+    t_star is *bit-identical* to the evaluation that certified it — the
+    upper-bracket invariant in :func:`_finalize_batches` depends on that.
+    """
+    t = np.asarray(ts, dtype=np.float64)[..., None]
+    b_compute = (t - p.t_u - p.cs) / p.alphas
+    slack = t - p.t_comm - p.ds
+    b_comm = slack / p.safe_betas
+    if p.any_degenerate:
+        # A node whose syncStart does not grow with b (beta == 0, i.e.
+        # q = gamma = 0) is never comm-constrained once t clears its fixed
+        # comm time.
+        b_comm = np.where(
+            p.degenerate, np.where(slack >= 0.0, np.inf, -np.inf), b_comm
+        )
+    b = np.minimum(b_compute, b_comm)
+    if p.mask is not None:
+        b = np.where(p.mask, b, -np.inf)
+    return b, b_compute, b_comm
+
+
+def _p_max_batches(p: _Problem, ts: np.ndarray) -> np.ndarray:
+    """Largest feasible batch per node at cluster times ``ts``; shape
+    ``(...,)`` -> ``(..., n)``.  Padding slots (mask False) are forced to
+    -inf, i.e. contribute nothing."""
+    return _p_feasible(p, ts)[0]
+
+
+def _p_max_batches_and_slope(
+    p: _Problem, ts: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(feasible batches, d feasible/dT) — the Newton ingredients.
+
+    The slope of min(b_compute, b_comm) is 1/alpha on the compute branch and
+    1/beta on the comm branch (0 where beta is degenerate: that branch is a
+    constant ±inf)."""
+    b, b_compute, b_comm = _p_feasible(p, ts)
+    slope = np.where(b_compute <= b_comm, p.inv_alphas, p.inv_betas)
+    return b, slope
+
+
+def _p_assigned(p: _Problem, ts: np.ndarray) -> np.ndarray:
+    return np.maximum(_p_max_batches(p, ts), 0.0).sum(axis=-1)
+
+
+def _p_rows(p: _Problem, rows: np.ndarray) -> _Problem:
+    """Row-subset view of a stacked problem (single-model problems broadcast
+    over candidates, so they are returned unchanged)."""
+    if p.mask is None:
+        return p
+    take = lambda v: v[rows]  # noqa: E731
+    return p._replace(
+        alphas=take(p.alphas), cs=take(p.cs), betas=take(p.betas),
+        ds=take(p.ds), ks=take(p.ks), ms=take(p.ms),
+        t_o=take(p.t_o), t_u=take(p.t_u), t_comm=take(p.t_comm),
+        gamma=take(p.gamma), mask=take(p.mask),
+        safe_betas=take(p.safe_betas), degenerate=take(p.degenerate),
+        inv_alphas=take(p.inv_alphas), inv_betas=take(p.inv_betas),
+    )
+
+
+def _p_node_times(p: _Problem, batches: np.ndarray) -> np.ndarray:
+    """Per-node batch times (max form); padding slots get -inf so row maxima
+    see only real nodes."""
+    b = np.asarray(batches, dtype=np.float64)
+    out = np.maximum(
+        p.alphas * b + p.cs + p.t_u, p.betas * b + p.ds + p.t_comm
+    )
+    if p.mask is not None:
+        out = np.where(p.mask, out, -np.inf)
+    return out
+
+
+def _p_compute_mask(p: _Problem, batches: np.ndarray) -> np.ndarray:
+    """Overlap-state criterion (1-gamma) P_i >= T_o; padding slots False."""
+    b = np.asarray(batches, dtype=np.float64)
+    out = (1.0 - p.gamma) * (p.ks * b + p.ms) >= p.t_o
+    if p.mask is not None:
+        out = out & p.mask
+    return out
+
+
+def _grow_bracket(
+    p: _Problem,
+    totals: np.ndarray,
+    lo0: Union[float, np.ndarray],
+    hi: np.ndarray,
+) -> Tuple[np.ndarray, int]:
+    """Geometrically expand ``hi`` until assigned(hi) >= B on every row."""
+    evals = 0
+    for _ in range(64):
+        short = _p_assigned(p, hi) < totals
+        evals += 1
+        if not short.any():
+            return hi, evals
+        hi = np.where(short, lo0 + (hi - lo0) * 2.0, hi)
+    raise RuntimeError("water-fill failed to bracket optimum")
+
+
+def _bisect(
+    p: _Problem,
+    totals: np.ndarray,
+    lo: np.ndarray,
+    hi: np.ndarray,
+    *,
+    tol: float,
+    max_iter: int,
+) -> Tuple[np.ndarray, int]:
+    """Standard simultaneous bisection; returns (t_star = hi, eval count).
+    The upper-bracket invariant assigned(hi) >= B holds throughout: hi only
+    ever moves to midpoints verified >= B."""
+    evals = 0
+    for _ in range(max_iter):
+        if np.all(hi - lo <= tol * np.maximum(1.0, np.abs(hi))):
+            break
+        mid = 0.5 * (lo + hi)
+        ge = _p_assigned(p, mid) >= totals
+        evals += 1
+        hi = np.where(ge, mid, hi)
+        lo = np.where(ge, lo, mid)
+    return hi, evals
+
+
+_WARM_NEWTON_ITER = 16
+
+
+def _warm_refine(
+    p: _Problem,
+    totals: np.ndarray,
+    lo0: Union[float, np.ndarray],
+    warm_start: np.ndarray,
+    *,
+    tol: float,
+) -> Tuple[np.ndarray, np.ndarray, int, np.ndarray, Optional[np.ndarray]]:
+    """Safeguarded-Newton refinement from a previous t_star vector.
+
+    g(T) = Sum_i max(b_i(T), 0) is monotone piecewise-affine, so inside one
+    affine segment a single Newton step is exact — under small perf-model
+    drift the active set is unchanged and the solve needs ~2-3 array passes.
+    Every iterate also updates a certified [lo, hi] bracket (any evaluated t
+    with g >= B is an upper bound, g < B a lower bound), and proposals
+    leaving the bracket fall back to its midpoint (or geometric growth while
+    no upper bound is known), so arbitrary warm starts remain correct.
+
+    Returns (lo, hi, evals, t_last, raw_last): the brackets ready for
+    :func:`_bisect` (which exits immediately on already-converged rows) plus
+    the final evaluation point and its feasible-batch matrix — when
+    ``t_star == t_last`` finalization reuses ``raw_last`` instead of paying
+    another array pass.
+    """
+    w = np.asarray(warm_start, dtype=np.float64)
+    if w.shape != totals.shape:
+        raise ValueError("warm_start shape must match total_batches")
+    lo = np.broadcast_to(np.asarray(lo0, dtype=np.float64), totals.shape).copy()
+    hi = np.full(totals.shape, np.inf)
+    usable = np.isfinite(w) & (w > lo)
+    t = np.where(usable, w, lo + 1.0)
+    close_rel = max(tol, 1e-14)
+    evals = 0
+    raw = None
+    for _ in range(_WARM_NEWTON_ITER):
+        raw, slope_elem = _p_max_batches_and_slope(p, t)
+        evals += 1
+        g = np.maximum(raw, 0.0).sum(axis=-1)
+        ge = g >= totals
+        hi = np.where(ge, np.minimum(hi, t), hi)
+        lo = np.where(~ge, np.maximum(lo, t), lo)
+        # Residual acceptance: an evaluated point whose residual is within
+        # tolerance IS the answer (|t - t*| <= tol*B/slope <= tol*t* since g
+        # passes through ~B*t/t*); collapse the bracket onto it so the
+        # trailing bisection skips the row.  Acceptance works from *either*
+        # side — finalization turns a tol-sized deficit into a proportional
+        # inflation the same way it removes overshoot.  Width-based
+        # convergence alone never fires here: Newton lands *on* the root
+        # instead of squeezing a bracket around it.
+        close = np.abs(g - totals) <= close_rel * totals
+        lo = np.where(close, t, lo)
+        hi = np.where(close, t, hi)
+        done = np.isfinite(hi) & (hi - lo <= tol * np.maximum(1.0, np.abs(hi)))
+        if done.all():
+            break
+        slope = np.where(raw > 0.0, slope_elem, 0.0).sum(axis=-1)
+        ok = slope > 0.0
+        t_newton = t - (g - totals) / np.where(ok, slope, 1.0)
+        # A float-stuck proposal (residual below one step of representable
+        # progress) gets a tol-sized upward bump: the next evaluation then
+        # certifies it as an exact upper point.
+        t_newton = np.where(
+            (t_newton == t) & ~done, t * (1.0 + close_rel) + 1e-300, t_newton
+        )
+        # Safeguard: the proposal must fall strictly inside the certified
+        # bracket; otherwise bisect it (or keep growing while unbounded).
+        bounded = np.isfinite(hi)
+        fallback = np.where(bounded, 0.5 * (lo + hi), lo0 + (lo - lo0) * 2.0 + 1.0)
+        bad = ~ok | ~(t_newton > lo) | ~(t_newton < hi)
+        t = np.where(done, t, np.where(bad, fallback, t_newton))
+    # Rows still unbounded above (warm start far below the new optimum and
+    # Newton ran out of iterations) get the cold geometric growth.
+    missing = ~np.isfinite(hi)
+    if missing.any():
+        seed = np.where(missing, np.maximum(lo, lo0) + 1.0, hi)
+        grown, grow_evals = _grow_bracket(p, totals, lo0, seed)
+        evals += grow_evals
+        hi = np.where(missing, grown, hi)
+        raw = None  # t no longer matches the last evaluation
+    return lo, hi, evals, t, raw
 
 
 def _finalize_batches(
-    model: ClusterPerfModel,
+    p: _Problem,
     totals: np.ndarray,
     t_star: np.ndarray,
     *,
     tol: float,
-) -> np.ndarray:
+    raw: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
     """Turn the bisected time bounds into exact-sum batch vectors.
 
-    Bisection leaves Sum_i max(b_i(t_star), 0) >= B (up to float residue).
-    The excess is removed *proportionally from the positive (binding) nodes
-    only* — shrinking a binding node keeps it under its time bound, whereas
-    the old whole-vector rescale could inflate a binding node past ``t_star``
-    whenever float residue left the sum a hair under B.  Clamped nodes (b=0,
-    fixed time already at/above ``t_star``) are never touched.
+    Returns ``(batches, node_times)`` — the realized per-node times fall out
+    of the internal bound check, so callers reuse them for ``opt_perfs``
+    instead of paying another array pass.  ``raw`` may carry a feasible-batch
+    matrix already evaluated *at* ``t_star`` (warm solves end on one); it
+    must be the output of :func:`_p_max_batches` at exactly ``t_star``.
+
+    Bisection leaves Sum_i max(b_i(t_star), 0) >= B (up to float residue);
+    warm Newton acceptance may instead leave a deficit of at most ~tol*B.
+    Either way the residual is removed *proportionally over the positive
+    (binding) nodes* — shrinking keeps every touched node under its time
+    bound, and the tol-sized inflation of the deficit case stays inside the
+    bound tolerance below.  (A whole-vector rescale would be wrong: it could
+    inflate a binding node past ``t_star`` whenever float residue left the
+    sum a hair under B.)  Clamped nodes (b=0, fixed time already at/above
+    ``t_star``) are never touched.
     """
-    raw = _max_batches_at_times(model, t_star)          # (..., n)
+    if raw is None:
+        raw = _p_max_batches(p, t_star)                 # (..., n)
     batches = np.maximum(raw, 0.0)
     sums = batches.sum(axis=-1)
-    # Invariant: the bisection keeps assigned(hi) >= B, and this recomputes
-    # the identical expression at t_star = hi, so sums >= totals exactly.
-    if not bool(np.all(sums >= totals)):
+    # Invariant: the solvers only emit t_star values verified (by the
+    # identical expression) to overshoot, or to undershoot by at most the
+    # residual-acceptance tolerance.  Anything worse is a bracket-logic bug.
+    if not bool(np.all(totals - sums <= 4.0 * max(tol, 1e-14) * totals)):
         raise AssertionError("water-fill bisection lost its upper-bracket invariant")
     pos_sums = np.where(sums > 0.0, sums, 1.0)
-    shrink = sums > totals
-    if np.any(shrink):
-        # Proportional removal from positive nodes == multiplicative rescale
-        # with factor <= 1: every touched node stays below its t_star bound.
-        factor = np.where(shrink, totals / pos_sums, 1.0)
+    off = sums != totals
+    if np.any(off):
+        # Proportional rescale over positive nodes; factor <= 1 for
+        # overshoot, <= 1 + O(tol) for the warm-acceptance deficit.
+        factor = np.where(off, totals / pos_sums, 1.0)
         batches = batches * factor[..., None]
     # Internal consistency: no positive node may exceed its bisected time
     # bound (clamped stragglers sit at their fixed floor, which can lie above
     # t_star and is unavoidable at any partition).
-    node_times = model.node_times(batches)
+    node_times = _p_node_times(p, batches)
     positive = batches > 0.0
     bound = t_star[..., None] * (1.0 + max(tol * 16.0, 1e-8)) + 1e-12
     if not bool(np.all(np.where(positive, node_times, -np.inf) <= bound)):
         raise AssertionError("water-fill finalization exceeded the bisected time bound")
-    return batches
+    return batches, node_times
+
+
+def _solve_problem(
+    p: _Problem,
+    lo0: Union[float, np.ndarray],
+    totals: np.ndarray,
+    *,
+    tol: float,
+    max_iter: int,
+    warm_start: Optional[np.ndarray],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
+    """Shared engine body: bracket (cold or warm), bisect, finalize.
+
+    Returns (t_star, batches, opt_perfs, compute_mask, evals)."""
+    raw_last = None
+    if warm_start is None:
+        lo = np.broadcast_to(np.asarray(lo0, dtype=np.float64), totals.shape).copy()
+        hi, evals = _grow_bracket(p, totals, lo0, lo + 1.0)
+    else:
+        lo, hi, evals, t_last, raw_last = _warm_refine(
+            p, totals, lo0, warm_start, tol=tol
+        )
+    t_star, bisect_evals = _bisect(p, totals, lo, hi, tol=tol, max_iter=max_iter)
+    evals += bisect_evals
+    # Warm solves typically end with (almost) every row accepted at its final
+    # evaluation point — finalization then reuses that feasible-batch matrix.
+    # The few rows that converged by bracket width instead (t_star = an older
+    # upper point) get a cheap subset re-evaluation.
+    reuse = None
+    if raw_last is not None and bisect_evals == 0:
+        mismatch = t_star != t_last
+        n_mismatch = int(np.count_nonzero(mismatch))
+        if n_mismatch == 0:
+            reuse = raw_last
+        elif n_mismatch <= max(4, totals.shape[0] // 8):
+            reuse = raw_last.copy()
+            reuse[mismatch] = _p_max_batches(
+                _p_rows(p, mismatch), t_star[mismatch]
+            )
+    batches, node_times = _finalize_batches(p, totals, t_star, tol=tol, raw=reuse)
+    opt_perfs = node_times.max(axis=-1)
+    compute_mask = _p_compute_mask(p, batches)
+    return t_star, batches, opt_perfs, compute_mask, evals
+
+
+def _validated_totals(total_batches: Sequence[float]) -> np.ndarray:
+    totals = np.array(total_batches, dtype=np.float64)  # copy: no aliasing
+    if totals.ndim != 1:
+        raise ValueError("total_batches must be a 1-D sequence")
+    if totals.size == 0:
+        raise ValueError("total_batches must be non-empty")
+    if np.any(totals <= 0):
+        raise ValueError("total batch must be positive")
+    return totals
 
 
 def solve_optperf_batch(
@@ -359,6 +735,7 @@ def solve_optperf_batch(
     *,
     tol: float = 1e-10,
     max_iter: int = 200,
+    warm_start: Optional[np.ndarray] = None,
 ) -> BatchedOptPerfSolution:
     """Solve OptPerf for every candidate total batch size in one array pass.
 
@@ -370,54 +747,64 @@ def solve_optperf_batch(
     each node's feasible batch b_i(T) is affine increasing in T, so
     g(T) = Sum_i max(b_i(T), 0) is continuous, nondecreasing, and unbounded;
     bisection on g(T) = B converges geometrically.
+
+    ``warm_start``: previous ``t_stars`` vector (aligned with
+    ``total_batches``); enables the safeguarded-Newton incremental re-solve
+    (see module docstring).  The answer is identical with or without it.
     """
-    totals = np.array(total_batches, dtype=np.float64)  # copy: no aliasing
-    if totals.ndim != 1:
-        raise ValueError("total_batches must be a 1-D sequence")
-    if totals.size == 0:
-        raise ValueError("total_batches must be non-empty")
-    if np.any(totals <= 0):
-        raise ValueError("total batch must be positive")
+    totals = _validated_totals(total_batches)
     model.validate()
-    c = model.coeffs
-    comm = model.comm
-
-    def assigned(t: np.ndarray) -> np.ndarray:
-        return np.maximum(_max_batches_at_times(model, t), 0.0).sum(axis=-1)
-
-    # Bracket every candidate.  At lo0 (the smallest fixed node time) no node
-    # can take positive batch, so assigned(lo0) == 0 < B for all candidates.
-    lo0 = float(min((c.cs + comm.t_u).min(), (c.ds + comm.t_comm).min()))
-    lo = np.full(totals.shape, lo0)
-    hi = lo + 1.0
-    for _ in range(64):
-        short = assigned(hi) < totals
-        if not short.any():
-            break
-        hi = np.where(short, lo0 + (hi - lo0) * 2.0, hi)
-    else:
-        raise RuntimeError("water-fill failed to bracket optimum")
-
-    for _ in range(max_iter):
-        mid = 0.5 * (lo + hi)
-        ge = assigned(mid) >= totals
-        hi = np.where(ge, mid, hi)
-        lo = np.where(ge, lo, mid)
-        if np.all(hi - lo <= tol * np.maximum(1.0, np.abs(hi))):
-            break
-    t_star = hi
-
-    batches = _finalize_batches(model, totals, t_star, tol=tol)
-    opt_perfs = model.node_times(batches).max(axis=-1)
-    compute_mask = model.compute_bottleneck_mask(batches)
-    for arr in (totals, opt_perfs, batches, compute_mask):
+    p, lo0 = _problem_from_model(model)
+    t_star, batches, opt_perfs, compute_mask, evals = _solve_problem(
+        p, lo0, totals, tol=tol, max_iter=max_iter, warm_start=warm_start
+    )
+    for arr in (totals, t_star, opt_perfs, batches, compute_mask):
         arr.flags.writeable = False
     return BatchedOptPerfSolution(
         total_batches=totals,
         opt_perfs=opt_perfs,
         batches=batches,
         compute_mask=compute_mask,
-        method="waterfill/batched",
+        method="waterfill/batched" if warm_start is None else "waterfill/batched+warm",
+        t_stars=t_star,
+        iterations=evals,
+    )
+
+
+def solve_optperf_stacked(
+    stack: StackedClusterModel,
+    total_batches: Sequence[float],
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+    warm_start: Optional[np.ndarray] = None,
+) -> BatchedOptPerfSolution:
+    """Water-fill C *independent* problem rows simultaneously.
+
+    Each row of the :class:`StackedClusterModel` is its own cluster (node
+    subset + comm model) with its own total batch ``total_batches[r]``; all
+    rows share the bisection loop, so a whole scheduler round costs the same
+    ~50 array passes as a single solve.  Padding slots never receive batch
+    and never contribute to row times."""
+    totals = _validated_totals(total_batches)
+    if totals.shape[0] != stack.shape[0]:
+        raise ValueError("total_batches length must match stack rows")
+    stack.validate()
+    p, lo0 = _problem_from_stack(stack)
+    t_star, batches, opt_perfs, compute_mask, evals = _solve_problem(
+        p, lo0, totals, tol=tol, max_iter=max_iter, warm_start=warm_start
+    )
+    for arr in (totals, t_star, opt_perfs, batches, compute_mask):
+        arr.flags.writeable = False
+    return BatchedOptPerfSolution(
+        total_batches=totals,
+        opt_perfs=opt_perfs,
+        batches=batches,
+        compute_mask=compute_mask,
+        method="waterfill/stacked",
+        t_stars=t_star,
+        iterations=evals,
+        node_mask=stack.mask,
     )
 
 

@@ -1,0 +1,283 @@
+"""On-device OptPerf: the jit-compiled batched water-fill sweep engine.
+
+Third engine next to the scalar oracle and the NumPy batched engine of
+:mod:`repro.core.optperf`.  The whole goodput sweep — a ``(C,)`` bracket
+vector bisected against the ``(C, n)`` feasible-batch matrix — runs inside
+one ``jax.jit`` with
+
+  * :func:`device_coeffs`: :attr:`ClusterPerfModel.coeffs` exported once as
+    stacked device arrays (cached per (model, dtype); the model is frozen so
+    the export can never go stale),
+  * a bounded ``lax.while_loop`` for geometric bracket growth,
+  * a fixed-trip-count ``lax.fori_loop`` for the bisection itself (no
+    per-iteration host round-trip, no data-dependent control flow), and
+  * donate-friendly bracket state: the ``(lo, hi)`` vectors are donated to
+    the jitted sweep where the backend supports donation, so epoch-over-epoch
+    re-solves reuse the same device buffers.
+
+This lets the controller re-solve OptPerf on-device beside the training step
+(§4–5 of the paper re-solve continuously as the gradient-noise scale drifts)
+with zero host work inside the loop.
+
+Warm starts seed the device brackets from the previous epoch's ``t_stars``
+(±``warm_delta`` relative) with on-device validation: a seeded bracket whose
+lower edge already over-assigns is reset to the cold lower bound, so stale
+warm starts stay correct while valid ones cut the fixed trip count from
+``max_iter`` to ``warm_max_iter``.
+
+Precision: the device sweep runs in float32 unless x64 is enabled (pass
+``dtype`` or run under ``jax.experimental.enable_x64``).  The emitted
+``t_stars`` are certified and finalized *on the host in float64* through the
+exact same :func:`repro.core.optperf._finalize_batches` path as the NumPy
+engine, so partitions sum exactly and the two engines agree to the device
+dtype's resolution (<= 1e-5 relative for float32, ~1e-10 for float64);
+winners re-solved by the scalar oracle are identical across all engines.
+
+JAX is an optional dependency of the core: when it is missing ``HAS_JAX`` is
+False and :class:`~repro.core.goodput.BatchSizeSelector` silently falls back
+to the NumPy batched engine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.optperf import (
+    BatchedOptPerfSolution,
+    _finalize_batches,
+    _p_assigned,
+    _p_compute_mask,
+    _p_node_times,
+    _problem_from_model,
+    _validated_totals,
+)
+from repro.core.perf_model import ClusterPerfModel
+
+try:  # pragma: no cover - import success is the covered path in this image
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    HAS_JAX = True
+except Exception:  # pragma: no cover - gated fallback for jax-less installs
+    jax = None  # type: ignore[assignment]
+    jnp = None  # type: ignore[assignment]
+    lax = None  # type: ignore[assignment]
+    HAS_JAX = False
+
+__all__ = ["HAS_JAX", "DeviceCoeffs", "device_coeffs", "solve_optperf_batch_jax"]
+
+_GROWTH_ITERS = 64
+
+
+class DeviceCoeffs(NamedTuple):
+    """Stacked device-array view of one cluster's OptPerf coefficients."""
+
+    alphas: "jax.Array"       # (n,)
+    cs: "jax.Array"           # (n,)
+    safe_betas: "jax.Array"   # (n,) betas with 1.0 at degenerate slots
+    degenerate: "jax.Array"   # (n,) bool: beta <= 0 (syncStart flat in b)
+    ds: "jax.Array"           # (n,)
+    t_u: "jax.Array"          # scalar
+    t_comm: "jax.Array"       # scalar
+
+
+@functools.lru_cache(maxsize=128)
+def _device_coeffs_cached(model: ClusterPerfModel, dtype_name: str) -> DeviceCoeffs:
+    c = model.coeffs
+    dt = jnp.dtype(dtype_name)
+    degenerate = c.betas <= 0.0
+    return DeviceCoeffs(
+        alphas=jnp.asarray(c.alphas, dt),
+        cs=jnp.asarray(c.cs, dt),
+        safe_betas=jnp.asarray(np.where(degenerate, 1.0, c.betas), dt),
+        degenerate=jnp.asarray(degenerate),
+        ds=jnp.asarray(c.ds, dt),
+        t_u=jnp.asarray(model.comm.t_u, dt),
+        t_comm=jnp.asarray(model.comm.t_comm, dt),
+    )
+
+
+def device_coeffs(model: ClusterPerfModel, dtype=None) -> DeviceCoeffs:
+    """Export (and cache) a model's coefficient arrays on the device.
+
+    ``dtype`` defaults to float64 under x64 and float32 otherwise.  The cache
+    is keyed on the frozen model *and* the dtype, so flipping x64 mid-process
+    (e.g. ``jax.experimental.enable_x64``) never serves stale-width arrays.
+    """
+    if not HAS_JAX:
+        raise RuntimeError("jax is not available; use the NumPy batched engine")
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    return _device_coeffs_cached(model, np.dtype(dtype).name)
+
+
+@functools.lru_cache(maxsize=1)
+def _donate_argnums() -> Tuple[int, ...]:
+    # Donation is a no-op (with a warning per call site) on backends that do
+    # not support it; keep the sweep warning-free on CPU.
+    return () if jax.default_backend() == "cpu" else (0, 1)
+
+
+@functools.lru_cache(maxsize=8)
+def _device_sweep(max_iter: int, warm: bool):
+    """Build (and cache) the jitted sweep for a static trip count.
+
+    The returned function maps donated ``(lo, hi)`` bracket state plus the
+    stacked coefficients to the refined ``(lo, hi)``: a bounded
+    ``lax.while_loop`` grows ``hi`` geometrically until every row's assigned
+    batch covers its total, then bisection runs.
+
+    Cold sweeps use a fixed-trip ``lax.fori_loop`` of ``max_iter`` steps —
+    iterating past float convergence is harmless (the midpoint rounds onto
+    an endpoint and the state is a fixed point), so no per-iteration
+    convergence predicate — and therefore no host synchronization — is
+    needed.  Warm sweeps instead validate the seeded lower edge (a stale lo
+    that already over-assigns is reset to the certified cold bound) and run
+    a convergence-checked ``lax.while_loop`` bounded by ``max_iter``: a
+    valid ±delta seed exits after ~log2(2*delta/tol) steps, while a stale
+    bracket that snapped open keeps halving until it converges anyway.
+    """
+
+    def sweep(
+        lo, hi, lo0, totals, tol, alphas, cs, safe_betas, degenerate, ds, t_u, t_comm
+    ):
+        def assigned(t):
+            tt = t[:, None]
+            b_compute = (tt - t_u - cs) / alphas
+            slack = tt - t_comm - ds
+            b_comm = jnp.where(
+                degenerate,
+                jnp.where(slack >= 0.0, jnp.inf, -jnp.inf),
+                slack / safe_betas,
+            )
+            return jnp.maximum(jnp.minimum(b_compute, b_comm), 0.0).sum(axis=-1)
+
+        if warm:
+            # Warm-seeded lower edges must strictly under-assign; reset any
+            # that do not (stale warm start) to the certified cold bound.
+            lo = jnp.where(assigned(lo) >= totals, jnp.full_like(lo, lo0), lo)
+
+        def grow_cond(state):
+            i, h = state
+            return (i < _GROWTH_ITERS) & jnp.any(assigned(h) < totals)
+
+        def grow_body(state):
+            i, h = state
+            h = jnp.where(assigned(h) < totals, lo0 + (h - lo0) * 2.0, h)
+            return i + 1, h
+
+        _, hi_grown = lax.while_loop(grow_cond, grow_body, (jnp.int32(0), hi))
+
+        def bisect_step(lo, hi):
+            mid = 0.5 * (lo + hi)
+            ge = assigned(mid) >= totals
+            return jnp.where(ge, lo, mid), jnp.where(ge, mid, hi)
+
+        if warm:
+            def cond(state):
+                i, lo, hi = state
+                unconverged = jnp.any(hi - lo > tol * jnp.maximum(1.0, jnp.abs(hi)))
+                return (i < max_iter) & unconverged
+
+            def body(state):
+                i, lo, hi = state
+                lo, hi = bisect_step(lo, hi)
+                return i + 1, lo, hi
+
+            iters, lo, hi = lax.while_loop(cond, body, (jnp.int32(0), lo, hi_grown))
+        else:
+            lo, hi = lax.fori_loop(
+                0, max_iter, lambda _, s: bisect_step(*s), (lo, hi_grown)
+            )
+            iters = jnp.int32(max_iter)
+        return lo, hi, iters
+
+    return jax.jit(sweep, donate_argnums=_donate_argnums())
+
+
+def solve_optperf_batch_jax(
+    model: ClusterPerfModel,
+    total_batches: Sequence[float],
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 64,
+    warm_start: Optional[np.ndarray] = None,
+    warm_delta: float = 1e-3,
+    dtype=None,
+) -> BatchedOptPerfSolution:
+    """Solve the whole candidate sweep on-device; finalize on host in f64.
+
+    Contract-compatible with :func:`repro.core.optperf.solve_optperf_batch`:
+    same solution type, exact-sum partitions, ``t_stars`` usable as the next
+    epoch's ``warm_start``.  ``max_iter`` bounds the bisection: the cold
+    sweep runs it as a fixed trip count (64 trips reach float32 resolution
+    from any practical bracket); the warm sweep exits early on convergence
+    (~log2(2*delta/tol) steps for a valid ±delta seed) and only spends the
+    full budget when a stale seed forced the bracket open.
+    """
+    if not HAS_JAX:
+        raise RuntimeError("jax is not available; use the NumPy batched engine")
+    totals_np = _validated_totals(total_batches)
+    model.validate()
+    dc = device_coeffs(model, dtype)
+    dt = dc.alphas.dtype
+    p, lo0 = _problem_from_model(model)
+
+    totals_dev = jnp.asarray(totals_np, dt)
+    lo0_dev = jnp.asarray(lo0, dt)
+    tol_dev = jnp.asarray(max(tol, 8.0 * float(jnp.finfo(dt).eps)), dt)
+    if warm_start is None:
+        lo = jnp.full(totals_np.shape, lo0, dt)
+        hi = lo + 1.0
+        sweep = _device_sweep(int(max_iter), False)
+    else:
+        w = np.asarray(warm_start, dtype=np.float64)
+        if w.shape != totals_np.shape:
+            raise ValueError("warm_start shape must match total_batches")
+        # Clamp seeds to a computable optimum ceiling — the best *single*
+        # node processing the whole batch — so a stale-high seed cannot
+        # open an astronomically wide bracket the iteration bound cannot
+        # close (the while_loop still converges any bracket this wide).
+        t_ub = np.min(_p_node_times(p, totals_np[:, None]), axis=-1)
+        w = np.where(np.isfinite(w) & (w > lo0), np.minimum(w, t_ub), lo0 + 1.0)
+        lo = jnp.maximum(jnp.asarray(w * (1.0 - warm_delta), dt), lo0_dev)
+        hi = jnp.maximum(jnp.asarray(w * (1.0 + warm_delta), dt), lo0_dev)
+        sweep = _device_sweep(int(max_iter), True)
+    _, hi_out, sweep_iters = sweep(
+        lo, hi, lo0_dev, totals_dev, tol_dev,
+        dc.alphas, dc.cs, dc.safe_betas, dc.degenerate, dc.ds, dc.t_u, dc.t_comm,
+    )
+
+    # Host float64 certification: the device ran in its own dtype (and XLA's
+    # own reduction order), so its hi may sit a rounding error *below* the
+    # true optimum.  Nudge up by dtype-epsilon-scaled steps until the float64
+    # upper invariant holds, then reuse the exact shared finalizer.
+    t_star = np.asarray(hi_out, dtype=np.float64)
+    nudge = 8.0 * float(np.finfo(np.dtype(dt.name)).eps)
+    polish = 0
+    for _ in range(64):
+        deficit = _p_assigned(p, t_star) < totals_np
+        polish += 1
+        if not deficit.any():
+            break
+        t_star = np.where(deficit, t_star * (1.0 + nudge) + 1e-300, t_star)
+    else:
+        raise RuntimeError("jax sweep t_star failed float64 certification")
+
+    batches, node_times = _finalize_batches(p, totals_np, t_star, tol=tol)
+    opt_perfs = node_times.max(axis=-1)
+    compute_mask = _p_compute_mask(p, batches)
+    for arr in (totals_np, t_star, opt_perfs, batches, compute_mask):
+        arr.flags.writeable = False
+    return BatchedOptPerfSolution(
+        total_batches=totals_np,
+        opt_perfs=opt_perfs,
+        batches=batches,
+        compute_mask=compute_mask,
+        method="waterfill/jax" if warm_start is None else "waterfill/jax+warm",
+        t_stars=t_star,
+        iterations=int(sweep_iters) + polish,
+    )

@@ -38,6 +38,7 @@ __all__ = [
     "CommModel",
     "ClusterCoeffs",
     "ClusterPerfModel",
+    "StackedClusterModel",
     "NodeObservation",
     "OnlineNodeFitter",
     "GammaAggregator",
@@ -218,9 +219,142 @@ class ClusterPerfModel:
         return (1.0 - self.comm.gamma) * (c.ks * b + c.ms) >= self.comm.t_o
 
     def validate(self) -> None:
+        # Hot path (every solver call revalidates): one vectorized pass over
+        # the cached coefficient view, memoized — the dataclass is frozen so
+        # a model that validated once can never become invalid.
+        if self.__dict__.get("_validated", False):
+            return
         self.comm.validate()
-        for node in self.nodes:
-            node.validate()
+        c = self.coeffs
+        # q = alphas - ks is float-safe: fl(q + k) >= k for q >= 0, so the
+        # vectorized check matches the per-node q >= 0, k > 0 semantics.
+        # Negated-all form so NaN coefficients fail validation (NaN makes
+        # any comparison False) exactly like the per-node checks do.
+        if not (bool(np.all(c.ks > 0)) and bool(np.all(c.alphas - c.ks >= 0))):
+            for node in self.nodes:
+                node.validate()  # per-node pass for a precise error message
+            raise ValueError("ill-posed node model")
+        self.__dict__["_validated"] = True
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedClusterModel:
+    """A batch of *independent* OptPerf problem rows padded to one width.
+
+    Row ``r`` is its own cluster: its own node subset (coefficient row
+    ``[r, :]`` with ``mask[r, :]`` marking real slots) and its own
+    communication model (``t_o[r]``/``t_u[r]``/``gamma[r]``).  This is the
+    input format of :func:`repro.core.optperf.solve_optperf_stacked`, which
+    water-fills every row simultaneously — the multi-job scheduler builds one
+    stack per greedy round covering all (job, candidate-node) pairs instead
+    of solving each pair with a scalar water-fill.
+
+    Coefficient semantics match :class:`ClusterCoeffs`:
+    ``t_compute = alphas*b + cs``, ``syncStart = betas*b + ds`` (betas/ds
+    include the row gamma); ``ks``/``ms`` are raw backprop coefficients for
+    the overlap-state criterion.  Padding slots must carry inert values
+    (``alphas = betas = ks = 1``, offsets 0) so broadcast arithmetic stays
+    finite; they are excluded from every reduction via ``mask``.
+    """
+
+    alphas: np.ndarray   # (C, n_max)
+    cs: np.ndarray       # (C, n_max)
+    betas: np.ndarray    # (C, n_max)
+    ds: np.ndarray       # (C, n_max)
+    ks: np.ndarray       # (C, n_max)
+    ms: np.ndarray       # (C, n_max)
+    t_o: np.ndarray      # (C,)
+    t_u: np.ndarray      # (C,)
+    gamma: np.ndarray    # (C,)
+    mask: np.ndarray     # (C, n_max) bool; False = padding slot
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return tuple(self.alphas.shape)  # type: ignore[return-value]
+
+    @property
+    def t_comm(self) -> np.ndarray:
+        return self.t_o + self.t_u
+
+    def validate(self) -> None:
+        c, n = self.alphas.shape
+        for name in ("cs", "betas", "ds", "ks", "ms", "mask"):
+            if getattr(self, name).shape != (c, n):
+                raise ValueError(f"{name} shape mismatch")
+        for name in ("t_o", "t_u", "gamma"):
+            if getattr(self, name).shape != (c,):
+                raise ValueError(f"{name} shape mismatch")
+        # Negated-all form throughout so NaN coefficients fail validation
+        # (NaN comparisons are False) — the batched scheduler relies on a
+        # ValueError here to degrade a garbage-fit job to goodput 0.0 the
+        # same way the scalar path does.
+        if not self.mask.any(axis=1).all():
+            raise ValueError("every row needs at least one valid node slot")
+        if not np.all(np.where(self.mask, self.alphas, 1.0) > 0):
+            raise ValueError("non-positive alpha on a valid slot")
+        # Same k > 0 and q >= 0 (alpha - k >= 0) requirements as the
+        # per-node NodePerfModel check: the batched scheduler must reject
+        # exactly the models the scalar oracle rejects, or the engines emit
+        # different allocations.
+        if not np.all(np.where(self.mask, self.ks, 1.0) > 0):
+            raise ValueError("non-positive backprop slope on a valid slot")
+        if not np.all(np.where(self.mask, self.alphas - self.ks, 0.0) >= 0):
+            raise ValueError("negative q slope on a valid slot")
+        if not np.all(np.where(self.mask, self.betas, 0.0) >= 0):
+            raise ValueError("negative beta on a valid slot")
+        if not (np.all(self.t_o >= 0) and np.all(self.t_u >= 0)):
+            raise ValueError("negative communication time")
+        if not np.all((self.gamma >= 0) & (self.gamma <= 1)):
+            raise ValueError("gamma out of range")
+
+    @classmethod
+    def from_models(cls, models: Sequence["ClusterPerfModel"]) -> "StackedClusterModel":
+        """Pad and stack heterogeneous-width clusters into one solve batch."""
+        if not models:
+            raise ValueError("need at least one model")
+        c = len(models)
+        n_max = max(m.n for m in models)
+        arrays = {
+            name: np.full((c, n_max), fill, dtype=np.float64)
+            for name, fill in (
+                ("alphas", 1.0), ("cs", 0.0), ("betas", 1.0),
+                ("ds", 0.0), ("ks", 1.0), ("ms", 0.0),
+            )
+        }
+        mask = np.zeros((c, n_max), dtype=bool)
+        t_o = np.empty(c)
+        t_u = np.empty(c)
+        gamma = np.empty(c)
+        for r, m in enumerate(models):
+            co = m.coeffs
+            for name in arrays:
+                arrays[name][r, : m.n] = getattr(co, name)
+            mask[r, : m.n] = True
+            t_o[r] = m.comm.t_o
+            t_u[r] = m.comm.t_u
+            gamma[r] = m.comm.gamma
+        out = cls(t_o=t_o, t_u=t_u, gamma=gamma, mask=mask, **arrays)
+        for arr in (*arrays.values(), t_o, t_u, gamma, mask):
+            arr.flags.writeable = False
+        return out
+
+    def row_model(self, r: int) -> "ClusterPerfModel":
+        """Reconstruct row ``r`` as a scalar :class:`ClusterPerfModel`
+        (cross-check oracle path; q = alpha - k, s = c - m)."""
+        valid = np.flatnonzero(self.mask[r])
+        nodes = tuple(
+            NodePerfModel(
+                q=float(self.alphas[r, i] - self.ks[r, i]),
+                s=float(self.cs[r, i] - self.ms[r, i]),
+                k=float(self.ks[r, i]),
+                m=float(self.ms[r, i]),
+            )
+            for i in valid
+        )
+        comm = CommModel(
+            t_o=float(self.t_o[r]), t_u=float(self.t_u[r]), gamma=float(self.gamma[r])
+        )
+        return ClusterPerfModel(nodes=nodes, comm=comm)
 
 
 # ---------------------------------------------------------------------------

@@ -15,21 +15,39 @@ most from it.  Each job's goodput for a candidate node set comes from the
 OptPerf solver over that subset — the same machinery the controller uses,
 so scheduler decisions and runtime behaviour cannot diverge.
 
+The default ``engine="batched"`` evaluates *every* (job, candidate-node)
+marginal goodput of a greedy round as one
+:func:`~repro.core.optperf.solve_optperf_stacked` call: the per-job
+coefficient arrays are gathered into a padded
+:class:`~repro.core.perf_model.StackedClusterModel` (one row per pair, each
+row carrying that job's comm model and total batch), so allocation costs
+O(rounds) array passes instead of O(jobs x nodes x solver) Python-level
+water-fills.  ``engine="scalar"`` keeps the original per-pair loop as the
+cross-check oracle; the chosen job's goodput is re-solved scalar after every
+round in both engines, so emitted allocations carry engine-identical
+numbers.
+
 This is intentionally a library (allocation policy + simulation harness),
 not a daemon: launch integration would wrap `allocate` in a reconcile loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import functools
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.goodput import statistical_efficiency
-from repro.core.optperf import solve_optperf_waterfill
-from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
+from repro.core.optperf import solve_optperf_stacked, solve_optperf_waterfill
+from repro.core.perf_model import (
+    ClusterPerfModel,
+    CommModel,
+    NodePerfModel,
+    StackedClusterModel,
+)
 
-__all__ = ["JobSpec", "Allocation", "allocate", "aggregate_goodput"]
+__all__ = ["JobSpec", "Allocation", "allocate", "aggregate_goodput", "random_jobs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +67,16 @@ class JobSpec:
     ref_batch: int
     min_nodes: int = 1
 
+    @functools.cached_property
+    def full_model(self) -> ClusterPerfModel:
+        """This job's model over the whole cluster; its cached ``coeffs`` are
+        the gather source for the batched scheduler rows."""
+        return ClusterPerfModel(nodes=self.node_models, comm=self.comm)
+
+    @functools.cached_property
+    def efficiency(self) -> float:
+        return statistical_efficiency(self.b_noise, self.total_batch, self.ref_batch)
+
     def goodput(self, node_ids: Sequence[int]) -> float:
         if len(node_ids) < self.min_nodes:
             return 0.0
@@ -60,7 +88,7 @@ class JobSpec:
         except (ValueError, RuntimeError):
             return 0.0
         thr = self.total_batch / sol.opt_perf
-        return thr * statistical_efficiency(self.b_noise, self.total_batch, self.ref_batch)
+        return thr * self.efficiency
 
     def solo_goodput(self) -> float:
         """Goodput with the whole cluster — the normalizer for fairness."""
@@ -78,7 +106,89 @@ class Allocation:
         return float(sum(self.fractions.values()))
 
 
-def allocate(jobs: Sequence[JobSpec], n_nodes: int) -> Allocation:
+def _batched_gains(
+    jobs: Sequence[JobSpec],
+    assign: Dict[str, List[int]],
+    candidates: Sequence[int],
+    current: Dict[str, float],
+    solo: Dict[str, float],
+    healthy: Dict[str, bool],
+) -> np.ndarray:
+    """Normalized marginal gains for every (job, candidate node) pair.
+
+    Builds one padded :class:`StackedClusterModel` — row ``(ji, r)`` is job
+    ``ji``'s current node set plus candidate ``candidates[r]``, gathered from
+    the job's cached full-cluster coefficient arrays with one fancy index —
+    and water-fills all rows simultaneously.  Jobs whose fitted model failed
+    validation get goodput-0 rows directly (the scalar path's graceful 0.0)
+    instead of poisoning the shared solve.  Returns gains shaped
+    ``(len(jobs), len(candidates))``, laid out so that ``argmax`` tie-breaks
+    in (job order, ascending node id) order, exactly like the scalar loop.
+    """
+    n_jobs = len(jobs)
+    n_cand = len(candidates)
+    cand_arr = np.asarray(candidates, dtype=np.intp)
+    width = max(len(assign[j.name]) for j in jobs) + 1
+    rows = n_jobs * n_cand
+    alphas = np.ones((rows, width))
+    cs = np.zeros((rows, width))
+    betas = np.ones((rows, width))
+    ds = np.zeros((rows, width))
+    ks = np.ones((rows, width))
+    ms = np.zeros((rows, width))
+    mask = np.zeros((rows, width), dtype=bool)
+    t_o = np.empty(rows)
+    t_u = np.empty(rows)
+    gamma = np.empty(rows)
+    totals = np.empty(rows)
+    viable = np.empty(rows, dtype=bool)
+    for ji, job in enumerate(jobs):
+        cur = np.asarray(assign[job.name], dtype=np.intp)
+        m = cur.size
+        sl = slice(ji * n_cand, (ji + 1) * n_cand)
+        totals[sl] = job.total_batch
+        if not healthy[job.name]:
+            # Garbage-fit job (bad node fit or bad comm model): inert unit
+            # rows — mask True and zeroed comm keep the stack valid — with
+            # goodput forced to 0 below, same as JobSpec.goodput's graceful
+            # degradation.
+            t_o[sl] = 0.0
+            t_u[sl] = 0.0
+            gamma[sl] = 0.0
+            mask[sl, 0] = True
+            viable[sl] = False
+            continue
+        t_o[sl] = job.comm.t_o
+        t_u[sl] = job.comm.t_u
+        gamma[sl] = job.comm.gamma
+        idx = np.empty((n_cand, m + 1), dtype=np.intp)
+        idx[:, :m] = cur
+        idx[:, m] = cand_arr
+        co = job.full_model.coeffs
+        alphas[sl, : m + 1] = co.alphas[idx]
+        cs[sl, : m + 1] = co.cs[idx]
+        betas[sl, : m + 1] = co.betas[idx]
+        ds[sl, : m + 1] = co.ds[idx]
+        ks[sl, : m + 1] = co.ks[idx]
+        ms[sl, : m + 1] = co.ms[idx]
+        mask[sl, : m + 1] = True
+        viable[sl] = (m + 1) >= job.min_nodes
+    stack = StackedClusterModel(
+        alphas=alphas, cs=cs, betas=betas, ds=ds, ks=ks, ms=ms,
+        t_o=t_o, t_u=t_u, gamma=gamma, mask=mask,
+    )
+    sol = solve_optperf_stacked(stack, totals)
+    goodputs = np.where(viable, totals / sol.opt_perfs, 0.0)
+    eff = np.repeat([j.efficiency for j in jobs], n_cand)
+    goodputs = goodputs * eff
+    cur_v = np.repeat([current[j.name] for j in jobs], n_cand)
+    solo_v = np.repeat([solo[j.name] for j in jobs], n_cand)
+    return ((goodputs - cur_v) / solo_v).reshape(n_jobs, n_cand)
+
+
+def allocate(
+    jobs: Sequence[JobSpec], n_nodes: int, *, engine: str = "batched"
+) -> Allocation:
     """Greedy marginal-gain node assignment.
 
     Seeds every job with its single best node (by marginal goodput), then
@@ -86,7 +196,14 @@ def allocate(jobs: Sequence[JobSpec], n_nodes: int) -> Allocation:
     marginal gain (gain / solo goodput) — normalization prevents one large
     job from starving small ones (the same normalization Pollux's fair
     goodput objective uses).
+
+    ``engine="batched"`` (default) evaluates each round's marginal gains as
+    one stacked water-fill; ``engine="scalar"`` is the per-pair loop oracle.
+    Both iterate candidates in ascending node id and jobs in caller order,
+    so tie-breaking matches across engines.
     """
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"unknown allocate engine {engine!r}")
     if not jobs:
         return Allocation({}, {}, {})
     remaining = set(range(n_nodes))
@@ -94,34 +211,57 @@ def allocate(jobs: Sequence[JobSpec], n_nodes: int) -> Allocation:
     solo = {j.name: max(j.solo_goodput(), 1e-12) for j in jobs}
     current = {j.name: 0.0 for j in jobs}
 
-    def gain(job: JobSpec, node: int) -> float:
+    def model_ok(job: JobSpec) -> bool:
+        try:
+            job.full_model.validate()
+            return True
+        except ValueError:
+            return False
+
+    # Validated once up front: a single garbage-fit job must not force every
+    # round of the batched engine through the scalar fallback.
+    healthy = {j.name: model_ok(j) for j in jobs}
+
+    def scalar_gain(job: JobSpec, node: int) -> float:
         g = job.goodput(tuple(assign[job.name] + [node]))
         return (g - current[job.name]) / solo[job.name]
+
+    def round_gains(round_jobs: Sequence[JobSpec], candidates: List[int]) -> np.ndarray:
+        if engine == "batched":
+            try:
+                return _batched_gains(
+                    round_jobs, assign, candidates, current, solo, healthy
+                )
+            except (ValueError, RuntimeError):
+                pass  # degenerate stack: fall back to the scalar oracle
+        return np.array(
+            [[scalar_gain(j, nid) for nid in candidates] for j in round_jobs]
+        )
+
+    def take(job: JobSpec, nid: int) -> None:
+        assign[job.name].append(nid)
+        # Chosen sets are always re-solved by the scalar path so emitted
+        # goodputs are engine-identical.
+        current[job.name] = job.goodput(tuple(assign[job.name]))
+        remaining.discard(nid)
 
     # Seed round: each job (in order of scarcity) takes its best node.
     for job in sorted(jobs, key=lambda j: -j.min_nodes):
         if not remaining:
             break
-        best = max(remaining, key=lambda nid: gain(job, nid))
-        assign[job.name].append(best)
-        current[job.name] = job.goodput(tuple(assign[job.name]))
-        remaining.discard(best)
+        candidates = sorted(remaining)
+        gains = round_gains([job], candidates)
+        take(job, candidates[int(np.argmax(gains[0]))])
 
-    # Greedy rounds.
+    # Greedy rounds: all (job, node) marginal gains per round in one pass.
     while remaining:
-        best_pair: Optional[Tuple[float, str, int]] = None
-        for job in jobs:
-            for nid in remaining:
-                g = gain(job, nid)
-                if best_pair is None or g > best_pair[0]:
-                    best_pair = (g, job.name, nid)
-        g, jname, nid = best_pair
-        if g <= 0:
+        candidates = sorted(remaining)
+        gains = round_gains(jobs, candidates)
+        flat = int(np.argmax(gains))
+        ji, r = divmod(flat, len(candidates))
+        if gains[ji, r] <= 0:
             break  # nobody benefits (comm-bound saturation)
-        assign[jname].append(nid)
-        job = next(j for j in jobs if j.name == jname)
-        current[jname] = job.goodput(tuple(assign[jname]))
-        remaining.discard(nid)
+        take(jobs[ji], candidates[r])
 
     goodputs = {name: current[name] for name in assign}
     fractions = {name: goodputs[name] / solo[name] for name in assign}
@@ -134,3 +274,37 @@ def allocate(jobs: Sequence[JobSpec], n_nodes: int) -> Allocation:
 
 def aggregate_goodput(jobs: Sequence[JobSpec], allocation: Allocation) -> float:
     return float(sum(allocation.goodputs.values()))
+
+
+def random_jobs(n_jobs: int, n_nodes: int, seed: int = 42) -> List[JobSpec]:
+    """Seeded random job mix over the GPU catalog — the shared scenario
+    generator for the scheduler benchmark gates and the engine-parity tests
+    (one source so both always exercise the same distribution)."""
+    from repro.core.simulator import GPU_CATALOG  # local: keep import graph lean
+
+    rng = np.random.default_rng(seed)
+    names = list(GPU_CATALOG)
+    jobs = []
+    for j in range(n_jobs):
+        models = tuple(
+            GPU_CATALOG[names[int(rng.integers(len(names)))]]
+            .scaled(float(rng.uniform(0.5, 2.0)))
+            .model()
+            for _ in range(n_nodes)
+        )
+        jobs.append(
+            JobSpec(
+                name=f"job{j}",
+                node_models=models,
+                comm=CommModel(
+                    t_o=float(rng.uniform(0.01, 0.08)),
+                    t_u=float(rng.uniform(0.002, 0.02)),
+                    gamma=float(rng.uniform(0.05, 0.4)),
+                ),
+                total_batch=int(rng.choice([256, 512, 1024, 2048])),
+                b_noise=float(rng.uniform(100, 5000)),
+                ref_batch=64,
+                min_nodes=int(rng.integers(1, 3)),
+            )
+        )
+    return jobs

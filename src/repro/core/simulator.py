@@ -45,7 +45,37 @@ __all__ = [
     "cluster_C",
     "SimulatedCluster",
     "StepMeasurement",
+    "drift_model",
 ]
+
+
+def _lognormal_drift(rng: np.random.Generator, rel: float, x: float) -> float:
+    """One multiplicative lognormal drift draw — THE per-coefficient drift
+    definition shared by :func:`drift_model` and
+    :meth:`SimulatedCluster.perturbed` (keep it in one place so benchmarks
+    and tests can never exercise diverging drift semantics)."""
+    return float(x * math.exp(rng.normal(0.0, rel))) if rel > 0 else float(x)
+
+
+def drift_model(model: ClusterPerfModel, rel: float, seed: int) -> ClusterPerfModel:
+    """Epoch-over-epoch performance drift applied to a fitted model.
+
+    Independent multiplicative lognormal jitter of scale ``rel`` on every
+    node coefficient — the single source of truth for the drift scenario the
+    warm-started OptPerf re-solve targets (benchmarks and tests share it)."""
+    if rel < 0:
+        raise ValueError("rel must be >= 0")
+    rng = np.random.default_rng(seed)
+    nodes = tuple(
+        NodePerfModel(
+            q=_lognormal_drift(rng, rel, n.q),
+            s=_lognormal_drift(rng, rel, n.s),
+            k=_lognormal_drift(rng, rel, n.k),
+            m=_lognormal_drift(rng, rel, n.m),
+        )
+        for n in model.nodes
+    )
+    return ClusterPerfModel(nodes=nodes, comm=model.comm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,3 +298,48 @@ class SimulatedCluster:
         """Simulate ``steps`` batches; returns (epoch seconds, measurements)."""
         measurements = [self.run_batch(batches) for _ in range(steps)]
         return sum(m.batch_time for m in measurements), measurements
+
+    def perturbed(
+        self,
+        rel: float,
+        *,
+        seed: int = 0,
+        perturb_comm: bool = False,
+    ) -> "SimulatedCluster":
+        """A cluster whose ground-truth coefficients drifted by ~``rel``.
+
+        Models epoch-to-epoch performance drift (thermal throttling, shared
+        hosts, background load) as independent multiplicative lognormal
+        jitter on every node coefficient — the scenario the warm-started
+        OptPerf re-solve is built for.  ``perturb_comm`` additionally drifts
+        T_o/T_u.  Measurement-noise settings and the per-node gamma noise
+        profile carry over; the RNG is freshly seeded so drifted clusters
+        are reproducible.
+        """
+        if rel < 0:
+            raise ValueError("rel must be >= 0")
+        rng = np.random.default_rng(seed)
+        profiles = [
+            NodeProfile(
+                name=p.name,
+                q=_lognormal_drift(rng, rel, p.q),
+                s=_lognormal_drift(rng, rel, p.s),
+                k=_lognormal_drift(rng, rel, p.k),
+                m=_lognormal_drift(rng, rel, p.m),
+            )
+            for p in self.profiles
+        ]
+        comm = self.comm
+        if perturb_comm:
+            comm = CommModel(
+                t_o=_lognormal_drift(rng, rel, comm.t_o),
+                t_u=_lognormal_drift(rng, rel, comm.t_u),
+                gamma=comm.gamma,
+            )
+        return SimulatedCluster(
+            profiles,
+            comm,
+            noise=self.noise,
+            per_node_gamma_noise=self.gamma_noise,
+            seed=seed + 1,
+        )

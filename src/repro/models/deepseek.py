@@ -260,8 +260,10 @@ def forward(
     return logits, {k: v.mean() for k, v in stats.items()}
 
 
-def init_cache(cfg: DeepSeekConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: DeepSeekConfig, batch: int, seq_len: int, dtype=None):
     """Latent cache: 512 + 64 floats per token per layer."""
+    if dtype is None:
+        dtype = cfg.compute_dtype  # cache dtype must match decode K/V
     return {
         "c": jnp.zeros((cfg.n_layers, batch, seq_len, cfg.kv_lora_rank), dtype),
         "kr": jnp.zeros((cfg.n_layers, batch, seq_len, cfg.qk_rope_dim), dtype),

@@ -186,7 +186,11 @@ def cache_length(cfg: DenseConfig, seq_len: int) -> int:
     return seq_len
 
 
-def init_cache(cfg: DenseConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: DenseConfig, batch: int, seq_len: int, dtype=None):
+    # Cache dtype must match the K/V the decode step produces (the config's
+    # compute dtype) or dynamic_update_slice rejects the insert.
+    if dtype is None:
+        dtype = cfg.compute_dtype
     return common.make_kv_cache(
         cfg.n_layers, batch, cache_length(cfg, seq_len), cfg.n_kv_heads, cfg.head_dim, dtype
     )

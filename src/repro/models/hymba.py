@@ -361,10 +361,12 @@ def forward(params: Dict[str, Any], cfg: HymbaConfig, tokens: jax.Array) -> jax.
     ).astype(jnp.float32)
 
 
-def init_cache(cfg: HymbaConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: HymbaConfig, batch: int, seq_len: int, dtype=None):
     """Ring KV cache of window size for every layer (global layers fall back
     to windowed context in decode — recorded in DESIGN.md), plus SSM state
     and conv tail."""
+    if dtype is None:
+        dtype = cfg.compute_dtype  # cache dtype must match decode K/V
     length = min(cfg.window, seq_len)
     kv = common.make_kv_cache(
         cfg.n_layers, batch, length, cfg.n_kv_heads, cfg.head_dim, dtype

@@ -303,7 +303,9 @@ def forward(
     return logits, mean_stats
 
 
-def init_cache(cfg: MixtralConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: MixtralConfig, batch: int, seq_len: int, dtype=None):
+    if dtype is None:
+        dtype = cfg.compute_dtype  # cache dtype must match decode K/V
     length = min(cfg.decode_window or seq_len, seq_len)
     return common.make_kv_cache(
         cfg.n_layers, batch, length, cfg.n_kv_heads, cfg.head_dim, dtype

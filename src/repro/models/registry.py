@@ -121,7 +121,9 @@ class ModelApi:
         return loss, aux
 
     # -- serving --------------------------------------------------------
-    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch: int, seq_len: int, dtype=None):
+        # None defers to each family's default: the config's compute dtype,
+        # which is what decode_step writes into the cache.
         return self._module.init_cache(self.cfg, batch, seq_len, dtype)
 
     def decode_step(self, params, cache, tokens, pos):

@@ -326,8 +326,10 @@ def forward(params: Dict[str, Any], cfg: RWKV6Config, tokens: jax.Array) -> jax.
     ).astype(jnp.float32)
 
 
-def init_cache(cfg: RWKV6Config, batch: int, seq_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: RWKV6Config, batch: int, seq_len: int, dtype=None):
     """O(1) state: WKV matrix + the two token-shift registers per layer."""
+    if dtype is None:
+        dtype = cfg.compute_dtype  # cache dtype must match decode K/V
     h, kk, d, L = cfg.n_heads, cfg.head_size, cfg.d_model, cfg.n_layers
     return {
         "wkv": jnp.zeros((L, batch, h, kk, kk), jnp.float32),

@@ -225,9 +225,11 @@ def forward(
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: WhisperConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: WhisperConfig, batch: int, seq_len: int, dtype=None):
     """Self-attn KV cache (seq_len) + cross-attn K/V (enc_frames), which the
     serve path fills once from `encode` output via `prime_cache`."""
+    if dtype is None:
+        dtype = cfg.compute_dtype  # cache dtype must match decode K/V
     L, h, dh = cfg.n_dec_layers, cfg.n_heads, cfg.head_dim
     return {
         "k": jnp.zeros((L, batch, seq_len, h, dh), dtype),

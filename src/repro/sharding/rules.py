@@ -128,6 +128,11 @@ class MeshRules:
                         assignment = None
                 if assignment is not None:
                     used |= set(axes)
+                    # Collapse singleton tuples to the bare axis name so
+                    # configured tuple forms like ("data",) produce the same
+                    # PartitionSpec as "data" (jax treats them equivalently
+                    # but spec equality does not).
+                    assignment = axes[0] if len(axes) == 1 else tuple(axes)
             parts.append(assignment)
         # Trim trailing Nones for tidier specs.
         while parts and parts[-1] is None:
@@ -135,8 +140,10 @@ class MeshRules:
         return P(*parts)
 
     def batch_spec(self, extra_dims: int = 1) -> P:
-        """Spec for (batch, seq, ...) activations."""
-        return P(self.batch_axes, *([None] * extra_dims))
+        """Spec for (batch, seq, ...) activations.  Single-axis batch meshes
+        collapse to the bare axis name, matching what :meth:`spec` emits."""
+        axes = self.batch_axes[0] if len(self.batch_axes) == 1 else tuple(self.batch_axes)
+        return P(axes, *([None] * extra_dims))
 
     def fallback_report(self) -> str:
         if not self.fallbacks:

@@ -1,0 +1,315 @@
+"""Warm-started (incremental re-bracketing) OptPerf: seeded drift scenarios
+must converge to the same solutions/plans as cold-start, stale warm starts
+must stay correct, membership/regime changes must fall back to cold brackets,
+and the stacked multi-row engine must match per-row scalar solves."""
+import numpy as np
+import pytest
+
+from repro.core.goodput import BatchSizeSelector
+from repro.core.optperf import (
+    solve_optperf_batch,
+    solve_optperf_stacked,
+    solve_optperf_waterfill,
+)
+from repro.core.perf_model import (
+    ClusterPerfModel,
+    CommModel,
+    NodePerfModel,
+    StackedClusterModel,
+)
+from repro.core.simulator import SimulatedCluster, cluster_B, cluster_C, drift_model
+
+
+def random_model(rng: np.random.Generator, n: int) -> ClusterPerfModel:
+    nodes = tuple(
+        NodePerfModel(
+            q=float(rng.uniform(1e-4, 8e-3)),
+            s=float(rng.uniform(0.0, 0.02)),
+            k=float(rng.uniform(1e-4, 8e-3)),
+            m=float(rng.uniform(0.0, 0.02)),
+        )
+        for _ in range(n)
+    )
+    comm = CommModel(
+        t_o=float(10.0 ** rng.uniform(-4, -1)),
+        t_u=float(rng.uniform(0.0, 0.02)),
+        gamma=float(rng.uniform(0.02, 0.6)),
+    )
+    return ClusterPerfModel(nodes=nodes, comm=comm)
+
+
+drifted = drift_model  # the shared drift vehicle (same one the bench gates use)
+
+
+# ---------------------------------------------------------------------------
+# solver-level warm-start correctness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 16, 64])
+@pytest.mark.parametrize("drift_exp", [-6, -4, -2])
+def test_warm_equals_cold_under_drift(n, drift_exp):
+    """Across seeded drift magnitudes, warm-started solves match cold ones
+    to solver tolerance (same opt_perfs, same partitions)."""
+    for seed in range(10):
+        rng = np.random.default_rng(1000 * n + seed)
+        model = random_model(rng, n)
+        cands = np.unique(np.round(rng.uniform(8, 8192, size=6)))
+        base = solve_optperf_batch(model, cands)
+        new = drifted(model, rel=10.0 ** drift_exp, seed=seed)
+        cold = solve_optperf_batch(new, cands)
+        warm = solve_optperf_batch(new, cands, warm_start=base.t_stars)
+        np.testing.assert_allclose(warm.opt_perfs, cold.opt_perfs, rtol=1e-9)
+        np.testing.assert_allclose(warm.batches, cold.batches, atol=1e-5)
+        assert np.allclose(warm.batches.sum(axis=1), cands, rtol=1e-9)
+
+
+def test_warm_uses_far_fewer_evals_under_small_drift():
+    rng = np.random.default_rng(7)
+    model = random_model(rng, 64)
+    cands = np.unique(np.round(np.geomspace(64, 65536, 64)))
+    base = solve_optperf_batch(model, cands)
+    new = drifted(model, rel=1e-4, seed=3)
+    cold = solve_optperf_batch(new, cands)
+    warm = solve_optperf_batch(new, cands, warm_start=base.t_stars)
+    assert warm.iterations <= 5
+    assert cold.iterations >= 5 * warm.iterations
+
+
+@pytest.mark.parametrize(
+    "garbage",
+    [
+        lambda c: np.zeros(c.shape),
+        lambda c: np.full(c.shape, 1e9),
+        lambda c: np.full(c.shape, np.nan),
+        lambda c: np.full(c.shape, -5.0),
+    ],
+    ids=["zeros", "huge", "nan", "negative"],
+)
+def test_garbage_warm_start_still_converges(garbage):
+    """The safeguarded Newton keeps a certified bracket: arbitrary warm
+    starts give the same answer, only slower."""
+    rng = np.random.default_rng(11)
+    model = random_model(rng, 12)
+    cands = np.asarray([32.0, 256.0, 2048.0])
+    cold = solve_optperf_batch(model, cands)
+    warm = solve_optperf_batch(model, cands, warm_start=garbage(cands))
+    np.testing.assert_allclose(warm.opt_perfs, cold.opt_perfs, rtol=1e-9)
+
+
+def test_nan_coefficients_rejected_by_validate():
+    """The vectorized validate must reject NaN coefficients exactly like the
+    per-node loop did (NaN comparisons are False: the check must be written
+    in negated-all form) — JobSpec.goodput's graceful 0.0 depends on it."""
+    bad = ClusterPerfModel(
+        nodes=(
+            NodePerfModel(q=float("nan"), s=0.0, k=1e-3, m=0.0),
+            NodePerfModel(q=1e-3, s=0.0, k=1e-3, m=0.0),
+        ),
+        comm=CommModel(t_o=0.01, t_u=0.005, gamma=0.1),
+    )
+    with pytest.raises(ValueError):
+        bad.validate()
+    with pytest.raises(ValueError):
+        solve_optperf_batch(bad, [64.0])
+    bad_k = ClusterPerfModel(
+        nodes=(NodePerfModel(q=1e-3, s=0.0, k=float("nan"), m=0.0),),
+        comm=CommModel(t_o=0.01, t_u=0.005, gamma=0.1),
+    )
+    with pytest.raises(ValueError):
+        bad_k.validate()
+
+
+def test_warm_start_shape_mismatch_raises():
+    rng = np.random.default_rng(3)
+    model = random_model(rng, 4)
+    with pytest.raises(ValueError):
+        solve_optperf_batch(model, [64.0, 128.0], warm_start=np.zeros(3))
+
+
+def test_warm_solution_reports_method():
+    rng = np.random.default_rng(5)
+    model = random_model(rng, 4)
+    cold = solve_optperf_batch(model, [64.0])
+    warm = solve_optperf_batch(model, [64.0], warm_start=cold.t_stars)
+    assert cold.method == "waterfill/batched"
+    assert warm.method == "waterfill/batched+warm"
+    assert cold.t_stars is not None and warm.t_stars is not None
+
+
+# ---------------------------------------------------------------------------
+# stacked engine
+# ---------------------------------------------------------------------------
+
+
+def test_stacked_matches_per_row_scalar():
+    """Each row of a padded heterogeneous-width stack solves exactly like a
+    standalone cluster."""
+    models, totals = [], []
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        models.append(random_model(rng, int(rng.integers(1, 24))))
+        totals.append(float(rng.uniform(16, 4096)))
+    stack = StackedClusterModel.from_models(models)
+    sol = solve_optperf_stacked(stack, totals)
+    for r, model in enumerate(models):
+        ref = solve_optperf_waterfill(model, totals[r])
+        assert sol.opt_perfs[r] == pytest.approx(ref.opt_perf, rel=1e-9)
+        row = sol.solution(r)
+        assert len(row.batches) == model.n          # padding slots dropped
+        assert sum(row.batches) == pytest.approx(totals[r], rel=1e-9)
+        # Padding slots never receive batch.
+        assert np.all(sol.batches[r, model.n:] == 0.0)
+
+
+def test_stacked_roundtrip_and_validation():
+    rng = np.random.default_rng(9)
+    models = [random_model(rng, 3), random_model(rng, 5)]
+    stack = StackedClusterModel.from_models(models)
+    assert stack.shape == (2, 5)
+    # row_model reconstructs the original coefficients.
+    rec = stack.row_model(0)
+    np.testing.assert_allclose(rec.coeffs.alphas, models[0].coeffs.alphas)
+    np.testing.assert_allclose(rec.coeffs.ds, models[0].coeffs.ds)
+    with pytest.raises(ValueError):
+        StackedClusterModel.from_models([])
+    bad = StackedClusterModel(
+        alphas=np.ones((1, 2)), cs=np.zeros((1, 2)), betas=np.ones((1, 2)),
+        ds=np.zeros((1, 2)), ks=np.ones((1, 2)), ms=np.zeros((1, 2)),
+        t_o=np.zeros(1), t_u=np.zeros(1), gamma=np.zeros(1),
+        mask=np.zeros((1, 2), dtype=bool),   # no valid slot in the row
+    )
+    with pytest.raises(ValueError):
+        bad.validate()
+    with pytest.raises(ValueError):
+        solve_optperf_stacked(StackedClusterModel.from_models(models), [64.0])
+
+
+def test_stacked_warm_start_matches_cold():
+    models = [random_model(np.random.default_rng(s), 8) for s in range(10)]
+    totals = [256.0] * 10
+    stack = StackedClusterModel.from_models(models)
+    cold = solve_optperf_stacked(stack, totals)
+    warm = solve_optperf_stacked(stack, totals, warm_start=cold.t_stars)
+    np.testing.assert_allclose(warm.opt_perfs, cold.opt_perfs, rtol=1e-9)
+    assert warm.iterations < cold.iterations
+
+
+# ---------------------------------------------------------------------------
+# selector warm-state carry + fall-back paths
+# ---------------------------------------------------------------------------
+
+
+def _selector(engine="batched"):
+    return BatchSizeSelector(
+        candidates=(64, 128, 256, 512, 1024), ref_batch=64, engine=engine
+    )
+
+
+def test_selector_warm_sweep_matches_cold_plan():
+    """A selector that warm-starts its resweep from the previous epoch's
+    t_stars caches the same solutions a cold selector computes."""
+    rng = np.random.default_rng(21)
+    for seed in range(8):
+        model = random_model(np.random.default_rng(seed), int(rng.integers(2, 24)))
+        new = drifted(model, rel=1e-3, seed=seed)
+        warm_sel = _selector()
+        warm_sel._sweep(model)          # epoch k: cold
+        warm_sel._sweep(new)            # epoch k+1: warm-started resweep
+        cold_sel = _selector()
+        cold_sel._sweep(new)            # fresh cold sweep of the same model
+        assert warm_sel.warm_sweeps == 1 and warm_sel.cold_sweeps == 1
+        for b in warm_sel.candidates:
+            w, c = warm_sel._optperf_cache[b], cold_sel._optperf_cache[b]
+            assert w.opt_perf == pytest.approx(c.opt_perf, rel=1e-9)
+            assert w.bottleneck == c.bottleneck
+            np.testing.assert_allclose(w.batches, c.batches, atol=1e-6)
+        # select() emits identical plans on top of identical caches.
+        assert warm_sel.select(new, 500.0)[:2][0] == cold_sel.select(new, 500.0)[0]
+
+
+def test_selector_falls_back_cold_on_membership_change():
+    rng = np.random.default_rng(31)
+    sel = _selector()
+    sel._sweep(random_model(rng, 8))
+    assert sel.cold_sweeps == 1
+    # Node joined/left: coefficient arrays change shape -> cold bracket.
+    sel._sweep(random_model(rng, 9))
+    assert sel.cold_sweeps == 2 and sel.warm_sweeps == 0
+
+
+def test_selector_falls_back_cold_on_regime_change():
+    rng = np.random.default_rng(37)
+    model = random_model(rng, 8)
+    sel = _selector()
+    sel._sweep(model)
+    # > warm_drift_limit relative coefficient change -> regime change.
+    shifted = drifted(model, rel=1.0, seed=2)
+    sel._sweep(shifted)
+    assert sel.cold_sweeps == 2 and sel.warm_sweeps == 0
+    # Small drift afterwards warm-starts again.
+    sel._sweep(drifted(shifted, rel=1e-4, seed=3))
+    assert sel.warm_sweeps == 1
+
+
+def test_selector_invalidate_clears_warm_state():
+    rng = np.random.default_rng(41)
+    model = random_model(rng, 6)
+    sel = _selector()
+    sel._sweep(model)
+    assert sel._warm_t_stars is not None
+    sel.invalidate()
+    assert sel._warm_t_stars is None and not sel._optperf_cache
+    sel._sweep(model)
+    assert sel.cold_sweeps == 2 and sel.warm_sweeps == 0
+
+
+def test_scalar_engine_keeps_no_warm_state():
+    rng = np.random.default_rng(43)
+    sel = _selector(engine="scalar")
+    sel._sweep(random_model(rng, 6))
+    assert sel._warm_t_stars is None
+    assert sel.warm_sweeps == 0 and sel.cold_sweeps == 0
+
+
+# ---------------------------------------------------------------------------
+# simulator drift vehicle
+# ---------------------------------------------------------------------------
+
+
+def test_simulated_cluster_perturbed():
+    profiles, comm = cluster_B()
+    sim = SimulatedCluster(profiles, comm, noise=0.01, seed=0)
+    drift = sim.perturbed(1e-3, seed=5)
+    assert drift.n == sim.n
+    qs0 = np.array([p.q for p in sim.profiles])
+    qs1 = np.array([p.q for p in drift.profiles])
+    rel = np.abs(qs1 - qs0) / qs0
+    assert np.all(rel > 0) and np.all(rel < 0.02)
+    assert drift.comm == sim.comm                      # comm untouched by default
+    drift2 = sim.perturbed(1e-3, seed=5, perturb_comm=True)
+    assert drift2.comm.t_o != sim.comm.t_o
+    # Reproducible: same seed, same drifted cluster.
+    again = sim.perturbed(1e-3, seed=5)
+    assert [p.q for p in again.profiles] == [p.q for p in drift.profiles]
+    with pytest.raises(ValueError):
+        sim.perturbed(-0.1)
+    # Zero drift is the identity on coefficients.
+    same = sim.perturbed(0.0)
+    assert [p.q for p in same.profiles] == [p.q for p in sim.profiles]
+
+
+def test_perturbed_cluster_warm_replan_parity():
+    """End-to-end drift scenario: the optimal plan for a perturbed cluster is
+    identical whether solved cold or warm-started from the pre-drift plan."""
+    profiles, comm = cluster_C(12)
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    model = sim.true_model()
+    cands = np.asarray([128.0, 256.0, 512.0, 1024.0, 2048.0])
+    base = solve_optperf_batch(model, cands)
+    for seed in range(5):
+        new_model = sim.perturbed(5e-4, seed=seed).true_model()
+        cold = solve_optperf_batch(new_model, cands)
+        warm = solve_optperf_batch(new_model, cands, warm_start=base.t_stars)
+        np.testing.assert_allclose(warm.opt_perfs, cold.opt_perfs, rtol=1e-9)
+        np.testing.assert_allclose(warm.batches, cold.batches, atol=1e-6)

@@ -5,7 +5,7 @@ import pytest
 
 from repro.core.controller import CannikinController
 from repro.core.perf_model import CommModel
-from repro.core.scheduler import Allocation, JobSpec, allocate
+from repro.core.scheduler import Allocation, JobSpec, allocate, random_jobs
 from repro.core.simulator import GPU_CATALOG, SimulatedCluster, cluster_B
 
 
@@ -78,6 +78,81 @@ def test_min_nodes_respected():
     # min_nodes gates goodput to zero below the floor, so the greedy loop
     # keeps feeding the job until it produces goodput.
     assert len(alloc.assignment["needs4"]) >= 4 or alloc.goodputs["needs4"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# batched (stacked) allocation engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_batched_allocate_matches_scalar(seed):
+    """The stacked per-round marginal evaluation emits the same assignment
+    and the same goodputs as the per-(job, node) scalar loop (the job mix is
+    the same seeded generator the benchmark gates use)."""
+    jobs = random_jobs(4, 12, seed)
+    a_b = allocate(jobs, 12, engine="batched")
+    a_s = allocate(jobs, 12, engine="scalar")
+    assert a_b.assignment == a_s.assignment
+    for name in a_b.goodputs:
+        assert a_b.goodputs[name] == pytest.approx(a_s.goodputs[name], rel=1e-12)
+    assert a_b.aggregate_fraction == pytest.approx(a_s.aggregate_fraction, rel=1e-12)
+
+
+def test_batched_allocate_min_nodes_and_identical_nodes():
+    """Exact-tie rows (identical node models) and min_nodes floors break the
+    same way in both engines."""
+    jobs = [
+        make_job("needs4", NODES, total_batch=512, b_noise=1000.0, min_nodes=4),
+        make_job("any", NODES, total_batch=256, b_noise=500.0),
+    ]
+    a_b = allocate(jobs, len(NODES), engine="batched")
+    a_s = allocate(jobs, len(NODES), engine="scalar")
+    assert a_b.assignment == a_s.assignment
+
+
+def test_nan_fit_job_degrades_gracefully_in_both_engines():
+    """A job whose OLS fit produced a NaN coefficient must score goodput 0.0
+    (validation rejects it with ValueError) — not crash the round — in the
+    batched engine exactly like the scalar one."""
+    from repro.core.perf_model import NodePerfModel as NPM
+
+    bad_node_sets = {
+        "nan-q": tuple(NPM(q=float("nan"), s=0.0, k=1e-3, m=0.0) for _ in range(4)),
+        # k <= 0 with alpha = q + k still positive: only a k-specific check
+        # catches it, exactly like the per-node NodePerfModel validation.
+        "neg-k": tuple(NPM(q=1e-2, s=0.0, k=-1e-4, m=0.0) for _ in range(4)),
+        # q < 0 with alpha and beta still positive: only the q-specific
+        # (alpha - k >= 0) check catches it.
+        "neg-q": tuple(NPM(q=-5e-3, s=0.0, k=1e-1, m=0.0) for _ in range(4)),
+    }
+    ok_job = make_job("ok", ["a100"] * 4, total_batch=128, b_noise=500.0)
+    for label, models in bad_node_sets.items():
+        bad_job = JobSpec(
+            name="broken",
+            node_models=models,
+            comm=CommModel(t_o=0.02, t_u=0.005, gamma=0.1),
+            total_batch=128,
+            b_noise=500.0,
+            ref_batch=64,
+        )
+        allocs = {
+            engine: allocate([bad_job, ok_job], 4, engine=engine)
+            for engine in ("batched", "scalar")
+        }
+        for engine, alloc in allocs.items():
+            assert alloc.goodputs["broken"] == 0.0, (label, engine)
+            assert alloc.goodputs["ok"] > 0.0, (label, engine)
+        assert allocs["batched"].assignment == allocs["scalar"].assignment, label
+
+
+def test_allocate_unknown_engine_raises():
+    with pytest.raises(ValueError):
+        allocate([], 4, engine="vectorised")
+
+
+def test_allocate_empty_jobs():
+    assert allocate([], 8).assignment == {}
 
 
 # ---------------------------------------------------------------------------
