@@ -11,8 +11,11 @@ Lanes, at n nodes x C candidate total batch sizes:
     coefficient drift, brackets seeded from the previous ``t_stars``
   * jax engine              — ``solve_optperf_batch_jax``: the sweep
     jit-compiled on-device (cold and warm-seeded)
-  * scheduler               — ``allocate`` at J jobs x N nodes, batched
-    stacked rounds vs the per-(job, node) scalar loop
+  * scheduler               — ``allocate`` at J jobs x N nodes: warm-started
+    stacked rounds (NumPy and stacked-jax engines) vs the per-(job, node)
+    scalar loop
+  * incremental             — ``Scheduler.add_job`` on a single-job arrival
+    vs a cold full re-allocation over the same job set
 
 Hard gates (full mode):
   * batched engine <= 1e-6 relative opt_perf gap vs the scalar oracle and
@@ -20,8 +23,10 @@ Hard gates (full mode):
   * warm-started sweep >= 5x over the cold batched sweep under small drift
     at 64x64 (and bit-equal results to ~1e-9),
   * jax engine <= 1e-5 relative gap vs the scalar oracle,
-  * batched ``allocate`` >= 10x over the scalar loop at 8 jobs x 64 nodes
-    with an identical assignment.
+  * batched AND stacked-jax ``allocate`` >= 10x over the scalar loop at
+    8 jobs x 64 nodes with assignments identical to the scalar oracle,
+  * incremental ``Scheduler.add_job`` >= 5x over the cold full re-run at
+    8 (+1 arriving) jobs x 64 nodes, emitting the identical allocation.
 
 Results land in ``artifacts/bench/sweep.json`` (uploaded per CI run so the
 perf trajectory is tracked per PR).
@@ -46,7 +51,7 @@ from repro.core.optperf import (
     solve_optperf_waterfill,
 )
 from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
-from repro.core.scheduler import allocate, random_jobs
+from repro.core.scheduler import Scheduler, allocate, random_jobs
 from repro.core.simulator import drift_model
 
 
@@ -174,8 +179,10 @@ def run_jax(n: int, num_candidates: int, repeats: int) -> dict:
     return rec
 
 
-def run_scheduler(n_jobs: int, n_nodes: int, *, assert_gate: bool) -> dict:
-    """Scheduler lane: batched stacked allocation vs the per-pair loop."""
+def run_scheduler(n_jobs: int, n_nodes: int, *, assert_gate: bool, jax_lane: bool) -> dict:
+    """Scheduler lane: warm-started stacked allocation (NumPy batched and
+    stacked-jax engines) vs the per-(job, node) scalar loop, one scalar
+    baseline shared by both engine lanes."""
     jobs = random_jobs(n_jobs, n_nodes)
 
     def timed(engine: str, repeats: int) -> float:
@@ -188,8 +195,8 @@ def run_scheduler(n_jobs: int, n_nodes: int, *, assert_gate: bool) -> dict:
 
     t_batched = timed("batched", repeats=3)
     t_scalar = timed("scalar", repeats=1)  # the slow baseline: once is enough
-    a_b = allocate(jobs, n_nodes, engine="batched")
     a_s = allocate(jobs, n_nodes, engine="scalar")
+    a_b = allocate(jobs, n_nodes, engine="batched")
     rec = {
         "jobs": n_jobs,
         "nodes": n_nodes,
@@ -199,10 +206,82 @@ def run_scheduler(n_jobs: int, n_nodes: int, *, assert_gate: bool) -> dict:
         "assignments_equal": a_b.assignment == a_s.assignment,
         "aggregate_fraction": a_b.aggregate_fraction,
     }
+    if jax_lane:
+        allocate(jobs, n_nodes, engine="jax")  # jit warmup outside the clock
+        rec["jax_us"] = timed("jax", repeats=3)
+        rec["jax_speedup"] = t_scalar / rec["jax_us"]
+        a_j = allocate(jobs, n_nodes, engine="jax")
+        rec["jax_assignments_equal"] = a_j.assignment == a_s.assignment
+        if not rec["jax_assignments_equal"]:
+            raise AssertionError(f"jax allocate diverged from scalar: {rec}")
+        if assert_gate and rec["jax_speedup"] < 10.0:
+            raise AssertionError(
+                f"stacked-jax allocate under 10x at {n_jobs}x{n_nodes}: {rec}"
+            )
     if not rec["assignments_equal"]:
         raise AssertionError(f"batched allocate diverged from scalar: {rec}")
     if assert_gate and rec["speedup"] < 10.0:
         raise AssertionError(f"batched allocate under 10x at {n_jobs}x{n_nodes}: {rec}")
+    return rec
+
+
+def run_incremental(n_jobs: int, n_nodes: int, *, assert_gate: bool) -> dict:
+    """Incremental lane: ``Scheduler.add_job`` on a single-job arrival vs a
+    cold full re-allocation over the same (n_jobs + 1)-job set."""
+    jobs = random_jobs(n_jobs, n_nodes)
+    arriving = random_jobs(n_jobs + 1, n_nodes)[n_jobs]
+    everyone = list(jobs) + [arriving]
+
+    t_full = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        full = allocate(everyone, n_nodes)
+        t_full = min(t_full, time.perf_counter() - t0)
+
+    t_inc = float("inf")
+    inc = None
+    arrival = {}
+    for _ in range(3):
+        sched = Scheduler(n_nodes)
+        for job in jobs:
+            sched.add_job(job)
+        before = (
+            sched.warm_rounds, sched.cold_rounds,
+            sched.solved_rows, sched.cached_rows,
+        )
+        t0 = time.perf_counter()
+        inc = sched.add_job(arriving)
+        t_inc = min(t_inc, time.perf_counter() - t0)
+        # Counters for the arrival alone (the setup add_jobs excluded).
+        arrival = dict(zip(
+            ("warm_rounds", "cold_rounds", "solved_rows", "cached_rows"),
+            (
+                sched.warm_rounds - before[0], sched.cold_rounds - before[1],
+                sched.solved_rows - before[2], sched.cached_rows - before[3],
+            ),
+        ))
+
+    goodput_gap = max(
+        abs(inc.goodputs[name] - full.goodputs[name])
+        / max(full.goodputs[name], 1e-12)
+        for name in full.goodputs
+    )
+    rec = {
+        "jobs": n_jobs,
+        "nodes": n_nodes,
+        "full_us": t_full * 1e6,
+        "incremental_us": t_inc * 1e6,
+        "speedup": t_full / t_inc,
+        "assignments_equal": inc.assignment == full.assignment,
+        "max_rel_goodput_gap": float(goodput_gap),
+        **arrival,
+    }
+    if not rec["assignments_equal"] or goodput_gap > 1e-12:
+        raise AssertionError(f"incremental add_job diverged from full re-run: {rec}")
+    if assert_gate and rec["speedup"] < 5.0:
+        raise AssertionError(
+            f"incremental add_job under 5x at {n_jobs}x{n_nodes}: {rec}"
+        )
     return rec
 
 
@@ -263,15 +342,37 @@ def run(smoke: bool = False) -> List[Row]:
     else:
         payload["jax"] = {"skipped": "jax unavailable"}
 
-    # Scheduler lane (gate: >= 10x at 8 jobs x 64 nodes, equal assignments).
+    # Scheduler lanes (gates: batched and stacked-jax both >= 10x at
+    # 8 jobs x 64 nodes, assignments identical to the scalar oracle).
     sj, sn = (3, 12) if smoke else (8, 64)
-    rec = run_scheduler(sj, sn, assert_gate=not smoke)
+    rec = run_scheduler(sj, sn, assert_gate=not smoke, jax_lane=HAS_JAX)
     payload["scheduler"] = rec
     rows.append(
         Row(
             f"sweep/scheduler/j{sj}xn{sn}",
             rec["batched_us"],
             f"speedup={rec['speedup']:.1f}x",
+        )
+    )
+    if "jax_us" in rec:
+        rows.append(
+            Row(
+                f"sweep/scheduler_jax/j{sj}xn{sn}",
+                rec["jax_us"],
+                f"speedup={rec['jax_speedup']:.1f}x",
+            )
+        )
+
+    # Incremental lane (gate: >= 5x over the cold full re-run on a
+    # single-job arrival, identical allocation).
+    rec = run_incremental(sj, sn, assert_gate=not smoke)
+    payload["incremental"] = rec
+    rows.append(
+        Row(
+            f"sweep/incremental/j{sj}xn{sn}",
+            rec["incremental_us"],
+            f"speedup={rec['speedup']:.1f}x;"
+            f"rows={rec['solved_rows']}solved/{rec['cached_rows']}cached",
         )
     )
 

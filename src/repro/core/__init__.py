@@ -10,6 +10,9 @@ Modules:
   goodput      — Pollux-style goodput + batch-size selection with caching
   simulator    — §3.2-exact heterogeneous cluster timing simulator
   controller   — §4.1/§4.5 Cannikin epoch controller
+  scheduler    — beyond-paper multi-job heterogeneity-aware allocator
+                 (greedy marginal goodput over stacked OptPerf rows, with
+                 incremental re-allocation on job arrival/departure)
   baselines    — DDP-even / AdaptDL-even / LB-BSP comparison policies
 """
 from repro.core.aggregation import ratios, sample_weights, weighted_aggregate
@@ -32,6 +35,7 @@ from repro.core.optperf import (
     solve_optperf_stacked,
     solve_optperf_waterfill,
 )
+from repro.core.scheduler import Allocation, JobSpec, Scheduler, allocate
 from repro.core.perf_model import (
     ClusterCoeffs,
     ClusterPerfModel,
@@ -76,6 +80,10 @@ __all__ = [
     "solve_optperf_stacked",
     "solve_optperf_waterfill",
     "StackedClusterModel",
+    "Allocation",
+    "JobSpec",
+    "Scheduler",
+    "allocate",
     "round_batches",
     "goodput_curve",
     "estimate_gns",

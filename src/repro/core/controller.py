@@ -91,6 +91,9 @@ class CannikinController:
         case — the winner is always re-solved scalar.  The array engines
         warm-start each epoch's brackets from the previous epoch's t_star
         vector (see BatchSizeSelector).
+      warm_drift_limit: maximum relative coefficient drift under which the
+        previous epoch's brackets are still trusted as warm seeds; larger
+        drift (a regime change) falls back to cold brackets.
       min_local / max_local: per-node local batch bounds (memory limits, §6).
     """
 
@@ -106,6 +109,7 @@ class CannikinController:
         adaptive: bool = True,
         solver: str = "algorithm1",
         sweep_engine: str = "batched",
+        warm_drift_limit: float = 0.25,
         gns_decay: float = 0.9,
         min_local: int = 1,
         max_local: Optional[int] = None,
@@ -125,6 +129,7 @@ class CannikinController:
             ref_batch=int(ref_batch),
             solver=solver,
             engine=sweep_engine,
+            warm_drift_limit=warm_drift_limit,
         )
         self.gns = GNSState()
         self.gns_decay = gns_decay
@@ -193,7 +198,27 @@ class CannikinController:
         self._model = ClusterPerfModel(
             nodes=nodes, comm=CommModel(t_o=t_o, t_u=t_u, gamma=gamma)
         )
+        self._prefetch_device_coeffs(self._model)
         return self._model
+
+    def _prefetch_device_coeffs(self, model: ClusterPerfModel) -> None:
+        """Fuse the device-coefficient export with the per-epoch OLS refit.
+
+        Under ``sweep_engine="jax"`` the freshly refit model's coefficient
+        arrays are shipped to the device *here*, at refit time, instead of
+        lazily inside the next sweep — so the on-device re-solve never
+        blocks on a host export (the refit already paid the transfer), and
+        a stale pre-refit export can never be what the sweep reads (the
+        cache is keyed on the frozen model instance)."""
+        if self.selector.engine != "jax":
+            return
+        try:
+            from repro.core import optperf_jax
+
+            if optperf_jax.HAS_JAX:
+                optperf_jax.device_coeffs(model)
+        except ImportError:  # pragma: no cover - jax present in CI image
+            pass
 
     def set_comm_split(self, t_o: float, t_u: float, gamma: float) -> None:
         """Override the comm model with directly measured values (used when the
@@ -205,6 +230,7 @@ class CannikinController:
         self._model = ClusterPerfModel(
             nodes=nodes, comm=CommModel(t_o=t_o, t_u=t_u, gamma=gamma)
         )
+        self._prefetch_device_coeffs(self._model)
 
     # ------------------------------------------------------------------
     # planning

@@ -220,7 +220,11 @@ class BatchSizeSelector:
     def _model_signature(model: ClusterPerfModel) -> Tuple[np.ndarray, ...]:
         c = model.coeffs
         comm = np.asarray([model.comm.t_o, model.comm.t_u, model.comm.gamma])
-        return (c.alphas, c.cs, c.betas, c.ds, comm)
+        # ks/ms are part of the regime signature even though they do not
+        # move t_star: they drive the overlap-state criterion, and a refit
+        # that changes only the backprop split must still count as drift
+        # (stale-regime brackets would otherwise be trusted blindly).
+        return (c.alphas, c.cs, c.betas, c.ds, c.ks, c.ms, comm)
 
     def _warm_start_for(self, model: ClusterPerfModel) -> Optional[np.ndarray]:
         """Previous t_stars if they are still trustworthy seeds, else None."""

@@ -72,6 +72,7 @@ __all__ = [
     "BatchedOptPerfSolution",
     "solve_optperf_algorithm1",
     "solve_optperf_waterfill",
+    "solve_optperf_waterfill_subset",
     "solve_optperf_batch",
     "solve_optperf_stacked",
     "solve_optperf",
@@ -389,13 +390,21 @@ def _problem_from_model(model: ClusterPerfModel) -> Tuple[_Problem, float]:
 
 
 def _problem_from_stack(stack: StackedClusterModel) -> Tuple[_Problem, np.ndarray]:
-    col = lambda v: v[:, None]  # noqa: E731 — broadcast against (C, n)
-    p = _make_problem(
-        stack.alphas, stack.cs, stack.betas, stack.ds, stack.ks, stack.ms,
-        col(stack.t_o), col(stack.t_u), col(stack.t_comm), col(stack.gamma),
-        stack.mask,
-    )
-    return p, _p_lo0(p)
+    """(problem view, per-row lo0) — memoized on the stack instance exactly
+    like :func:`_problem_from_model`.  Stacks must be treated as immutable
+    once solved (mutating their arrays in place would leave the cached
+    derived arrays — ``safe_betas``/``inv_alphas``/… — stale)."""
+    cached = stack.__dict__.get("_optperf_problem")
+    if cached is None:
+        col = lambda v: v[:, None]  # noqa: E731 — broadcast against (C, n)
+        p = _make_problem(
+            stack.alphas, stack.cs, stack.betas, stack.ds, stack.ks, stack.ms,
+            col(stack.t_o), col(stack.t_u), col(stack.t_comm), col(stack.gamma),
+            stack.mask,
+        )
+        cached = (p, _p_lo0(p))
+        stack.__dict__["_optperf_problem"] = cached
+    return cached
 
 
 def _p_lo0(p: _Problem) -> Union[float, np.ndarray]:
@@ -433,6 +442,19 @@ def _p_feasible(
     if p.mask is not None:
         b = np.where(p.mask, b, -np.inf)
     return b, b_compute, b_comm
+
+
+def _p_best_single_node_time(p: _Problem, totals: np.ndarray) -> np.ndarray:
+    """Upper bound on the optimum per row: the best *single* node processing
+    the whole batch.  Mask-aware (padding slots are +inf, never the min), so
+    the jax engines can clamp stale-high warm seeds on stacked problems too."""
+    t = np.asarray(totals, dtype=np.float64)[..., None]
+    nt = np.maximum(
+        p.alphas * t + p.cs + p.t_u, p.betas * t + p.ds + p.t_comm
+    )
+    if p.mask is not None:
+        nt = np.where(p.mask, nt, np.inf)
+    return nt.min(axis=-1)
 
 
 def _p_max_batches(p: _Problem, ts: np.ndarray) -> np.ndarray:
@@ -824,6 +846,56 @@ def solve_optperf_waterfill(
         model, np.asarray([total_batch], dtype=np.float64), tol=tol, max_iter=max_iter
     )
     return batch.solution(0, method="waterfill")
+
+
+def solve_optperf_waterfill_subset(
+    model: ClusterPerfModel,
+    node_ids: Sequence[int],
+    total_batch: float,
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+) -> OptPerfSolution:
+    """Water-fill over a *node subset* of ``model``.
+
+    Bit-identical to building the subset :class:`ClusterPerfModel` and
+    calling :func:`solve_optperf_waterfill` — the per-node coefficients are
+    elementwise, so gathering rows of the full model's cached ``coeffs``
+    yields the exact same floats — but without the per-call model
+    construction and re-validation.  This is the multi-job scheduler's
+    chosen-set re-solve in a loop (one call per greedy round), where the
+    construction overhead dominated the solve.
+    """
+    if total_batch <= 0:
+        raise ValueError("total batch must be positive")
+    ids = np.asarray(node_ids, dtype=np.intp)
+    if ids.size == 0:
+        raise ValueError("need at least one node")
+    c = model.coeffs
+    comm = model.comm
+    comm.validate()
+    ks = c.ks[ids]
+    alphas = c.alphas[ids]
+    # Same vectorized k > 0, q >= 0 semantics as ClusterPerfModel.validate,
+    # applied to the subset (a bad node outside the subset must not reject
+    # an otherwise valid sub-cluster — and vice versa).
+    if not (bool(np.all(ks > 0)) and bool(np.all(alphas - ks >= 0))):
+        raise ValueError("ill-posed node model")
+    p = _make_problem(
+        alphas, c.cs[ids], c.betas[ids], c.ds[ids], ks, c.ms[ids],
+        comm.t_o, comm.t_u, comm.t_comm, comm.gamma, None,
+    )
+    totals = np.asarray([float(total_batch)])
+    t_star, batches, opt_perfs, compute_mask, _ = _solve_problem(
+        p, _p_lo0(p), totals, tol=tol, max_iter=max_iter, warm_start=None
+    )
+    return OptPerfSolution(
+        total_batch=float(total_batch),
+        opt_perf=float(opt_perfs[0]),
+        batches=tuple(float(b) for b in batches[0]),
+        bottleneck=tuple("compute" if m else "comm" for m in compute_mask[0]),
+        method="waterfill",
+    )
 
 
 def solve_optperf(

@@ -19,6 +19,15 @@ This lets the controller re-solve OptPerf on-device beside the training step
 (§4–5 of the paper re-solve continuously as the gradient-noise scale drifts)
 with zero host work inside the loop.
 
+:func:`solve_optperf_stacked_jax` is the cluster-scale variant: C
+*independent* stacked rows (each row its own node subset + comm model,
+padded to a common width and masked) bisected in one jit call — the
+multi-job scheduler's per-round kernel, where J x N (job, candidate-node)
+marginal problems solve simultaneously.  Its coefficient export is cached
+on the :class:`~repro.core.perf_model.StackedClusterModel` instance
+(``stacked_device_coeffs``); in-place coefficient refreshes must call
+``invalidate_device_cache()`` or the kernel keeps solving the old regime.
+
 Warm starts seed the device brackets from the previous epoch's ``t_stars``
 (±``warm_delta`` relative) with on-device validation: a seeded bracket whose
 lower edge already over-assigns is reset to the cold lower bound, so stale
@@ -48,12 +57,13 @@ from repro.core.optperf import (
     BatchedOptPerfSolution,
     _finalize_batches,
     _p_assigned,
+    _p_best_single_node_time,
     _p_compute_mask,
-    _p_node_times,
     _problem_from_model,
+    _problem_from_stack,
     _validated_totals,
 )
-from repro.core.perf_model import ClusterPerfModel
+from repro.core.perf_model import ClusterPerfModel, StackedClusterModel
 
 try:  # pragma: no cover - import success is the covered path in this image
     import jax
@@ -67,7 +77,15 @@ except Exception:  # pragma: no cover - gated fallback for jax-less installs
     lax = None  # type: ignore[assignment]
     HAS_JAX = False
 
-__all__ = ["HAS_JAX", "DeviceCoeffs", "device_coeffs", "solve_optperf_batch_jax"]
+__all__ = [
+    "HAS_JAX",
+    "DeviceCoeffs",
+    "StackedDeviceCoeffs",
+    "device_coeffs",
+    "stacked_device_coeffs",
+    "solve_optperf_batch_jax",
+    "solve_optperf_stacked_jax",
+]
 
 _GROWTH_ITERS = 64
 
@@ -241,7 +259,7 @@ def solve_optperf_batch_jax(
         # node processing the whole batch — so a stale-high seed cannot
         # open an astronomically wide bracket the iteration bound cannot
         # close (the while_loop still converges any bracket this wide).
-        t_ub = np.min(_p_node_times(p, totals_np[:, None]), axis=-1)
+        t_ub = _p_best_single_node_time(p, totals_np)
         w = np.where(np.isfinite(w) & (w > lo0), np.minimum(w, t_ub), lo0 + 1.0)
         lo = jnp.maximum(jnp.asarray(w * (1.0 - warm_delta), dt), lo0_dev)
         hi = jnp.maximum(jnp.asarray(w * (1.0 + warm_delta), dt), lo0_dev)
@@ -280,4 +298,221 @@ def solve_optperf_batch_jax(
         method="waterfill/jax" if warm_start is None else "waterfill/jax+warm",
         t_stars=t_star,
         iterations=int(sweep_iters) + polish,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stacked rows on device — the cluster-scale scheduler kernel
+# ---------------------------------------------------------------------------
+
+
+class StackedDeviceCoeffs(NamedTuple):
+    """Device-array view of a :class:`StackedClusterModel`: C independent
+    padded problem rows, each with its own node subset (``mask``) and its
+    own communication model (the ``(C, 1)`` comm columns broadcast against
+    the ``(C, n)`` coefficient arrays)."""
+
+    alphas: "jax.Array"       # (C, n)
+    cs: "jax.Array"           # (C, n)
+    safe_betas: "jax.Array"   # (C, n) betas with 1.0 at degenerate slots
+    degenerate: "jax.Array"   # (C, n) bool: beta <= 0
+    ds: "jax.Array"           # (C, n)
+    t_u: "jax.Array"          # (C, 1)
+    t_comm: "jax.Array"       # (C, 1)
+    mask: "jax.Array"         # (C, n) bool; False = padding slot
+
+
+def stacked_device_coeffs(stack: StackedClusterModel, dtype=None) -> StackedDeviceCoeffs:
+    """Export (and cache) a stack's coefficient arrays on the device.
+
+    Cached in the stack's :meth:`~StackedClusterModel.device_cache` slot
+    keyed by dtype, so repeated solves of a persistent stack (the scheduler
+    re-runs the same seed stack on every reconcile) ship arrays once.  A
+    stack whose arrays were refreshed in place must call
+    ``invalidate_device_cache()`` first — stale exports solve the old
+    coefficient regime.
+    """
+    if not HAS_JAX:
+        raise RuntimeError("jax is not available; use the NumPy stacked engine")
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    key = np.dtype(dtype).name
+    cache = stack.device_cache()
+    sdc = cache.get(key)
+    if sdc is None:
+        dt = jnp.dtype(key)
+        degenerate = stack.betas <= 0.0
+        col = lambda v: v[:, None]  # noqa: E731
+        sdc = StackedDeviceCoeffs(
+            alphas=jnp.asarray(stack.alphas, dt),
+            cs=jnp.asarray(stack.cs, dt),
+            safe_betas=jnp.asarray(np.where(degenerate, 1.0, stack.betas), dt),
+            degenerate=jnp.asarray(degenerate),
+            ds=jnp.asarray(stack.ds, dt),
+            t_u=jnp.asarray(col(stack.t_u), dt),
+            t_comm=jnp.asarray(col(stack.t_comm), dt),
+            mask=jnp.asarray(stack.mask),
+        )
+        cache[key] = sdc
+    return sdc
+
+
+@functools.lru_cache(maxsize=8)
+def _device_stacked_sweep(max_iter: int, warm: bool):
+    """Jitted stacked sweep for a static trip count (cached per
+    (max_iter, warm); XLA re-specializes per (C, n) shape inside the jit).
+
+    Identical loop structure to :func:`_device_sweep` with three stacked
+    generalizations: the feasible-batch kernel masks padding slots out of
+    every row sum, the comm scalars are per-row ``(C, 1)`` columns, and the
+    cold lower bound ``lo0`` is a per-row vector.
+    """
+
+    def sweep(
+        lo, hi, lo0, totals, tol,
+        alphas, cs, safe_betas, degenerate, ds, t_u, t_comm, mask,
+    ):
+        def assigned(t):
+            tt = t[:, None]
+            b_compute = (tt - t_u - cs) / alphas
+            slack = tt - t_comm - ds
+            b_comm = jnp.where(
+                degenerate,
+                jnp.where(slack >= 0.0, jnp.inf, -jnp.inf),
+                slack / safe_betas,
+            )
+            b = jnp.maximum(jnp.minimum(b_compute, b_comm), 0.0)
+            return jnp.where(mask, b, 0.0).sum(axis=-1)
+
+        if warm:
+            # Warm-seeded lower edges must strictly under-assign; reset any
+            # that do not (stale warm start) to the certified cold bound.
+            lo = jnp.where(assigned(lo) >= totals, lo0, lo)
+
+        def grow_cond(state):
+            i, h = state
+            return (i < _GROWTH_ITERS) & jnp.any(assigned(h) < totals)
+
+        def grow_body(state):
+            i, h = state
+            h = jnp.where(assigned(h) < totals, lo0 + (h - lo0) * 2.0, h)
+            return i + 1, h
+
+        _, hi_grown = lax.while_loop(grow_cond, grow_body, (jnp.int32(0), hi))
+
+        def bisect_step(lo, hi):
+            mid = 0.5 * (lo + hi)
+            ge = assigned(mid) >= totals
+            return jnp.where(ge, lo, mid), jnp.where(ge, mid, hi)
+
+        if warm:
+            def cond(state):
+                i, lo, hi = state
+                unconverged = jnp.any(hi - lo > tol * jnp.maximum(1.0, jnp.abs(hi)))
+                return (i < max_iter) & unconverged
+
+            def body(state):
+                i, lo, hi = state
+                lo, hi = bisect_step(lo, hi)
+                return i + 1, lo, hi
+
+            iters, lo, hi = lax.while_loop(cond, body, (jnp.int32(0), lo, hi_grown))
+        else:
+            lo, hi = lax.fori_loop(
+                0, max_iter, lambda _, s: bisect_step(*s), (lo, hi_grown)
+            )
+            iters = jnp.int32(max_iter)
+        return lo, hi, iters
+
+    return jax.jit(sweep, donate_argnums=_donate_argnums())
+
+
+def solve_optperf_stacked_jax(
+    stack: StackedClusterModel,
+    total_batches: Sequence[float],
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 64,
+    warm_start: Optional[np.ndarray] = None,
+    warm_delta: float = 1e-3,
+    dtype=None,
+) -> BatchedOptPerfSolution:
+    """Water-fill C independent stacked rows on-device; finalize on host.
+
+    Contract-compatible with :func:`repro.core.optperf.solve_optperf_stacked`
+    (same solution type, exact-sum partitions, padding-aware extraction,
+    ``t_stars`` usable as the next round's ``warm_start``).  The whole
+    scheduler round — every (job, candidate-node) marginal problem — bisects
+    as one jit call; host float64 certification and finalization go through
+    the exact shared :func:`_finalize_batches` path, so the jax and NumPy
+    stacked engines agree to the device dtype's resolution (<= 1e-5 relative
+    in float32).
+    """
+    if not HAS_JAX:
+        raise RuntimeError("jax is not available; use the NumPy stacked engine")
+    totals_np = _validated_totals(total_batches)
+    if totals_np.shape[0] != stack.shape[0]:
+        raise ValueError("total_batches length must match stack rows")
+    stack.validate()
+    sdc = stacked_device_coeffs(stack, dtype)
+    dt = sdc.alphas.dtype
+    p, lo0 = _problem_from_stack(stack)
+
+    totals_dev = jnp.asarray(totals_np, dt)
+    lo0_dev = jnp.asarray(lo0, dt)
+    tol_dev = jnp.asarray(max(tol, 8.0 * float(jnp.finfo(dt).eps)), dt)
+    if warm_start is None:
+        lo = jnp.asarray(lo0, dt)
+        hi = lo + 1.0
+        sweep = _device_stacked_sweep(int(max_iter), False)
+    else:
+        w = np.asarray(warm_start, dtype=np.float64)
+        if w.shape != totals_np.shape:
+            raise ValueError("warm_start shape must match total_batches")
+        # Same stale-seed safeguards as the single-model engine: clamp to the
+        # per-row best-single-node ceiling (mask-aware) and reset unusable
+        # seeds to just above the cold lower bound.
+        t_ub = _p_best_single_node_time(p, totals_np)
+        w = np.where(np.isfinite(w) & (w > lo0), np.minimum(w, t_ub), lo0 + 1.0)
+        lo = jnp.maximum(jnp.asarray(w * (1.0 - warm_delta), dt), lo0_dev)
+        hi = jnp.maximum(jnp.asarray(w * (1.0 + warm_delta), dt), lo0_dev)
+        sweep = _device_stacked_sweep(int(max_iter), True)
+    _, hi_out, sweep_iters = sweep(
+        lo, hi, lo0_dev, totals_dev, tol_dev,
+        sdc.alphas, sdc.cs, sdc.safe_betas, sdc.degenerate, sdc.ds,
+        sdc.t_u, sdc.t_comm, sdc.mask,
+    )
+
+    # Host float64 certification — identical to the single-model jax path.
+    t_star = np.asarray(hi_out, dtype=np.float64)
+    nudge = 8.0 * float(np.finfo(np.dtype(dt.name)).eps)
+    polish = 0
+    for _ in range(64):
+        deficit = _p_assigned(p, t_star) < totals_np
+        polish += 1
+        if not deficit.any():
+            break
+        t_star = np.where(deficit, t_star * (1.0 + nudge) + 1e-300, t_star)
+    else:
+        raise RuntimeError("stacked jax sweep t_star failed float64 certification")
+
+    batches, node_times = _finalize_batches(p, totals_np, t_star, tol=tol)
+    opt_perfs = node_times.max(axis=-1)
+    compute_mask = _p_compute_mask(p, batches)
+    node_mask = np.array(stack.mask, dtype=bool)  # copy: stacks may be reused
+    for arr in (totals_np, t_star, opt_perfs, batches, compute_mask, node_mask):
+        arr.flags.writeable = False
+    return BatchedOptPerfSolution(
+        total_batches=totals_np,
+        opt_perfs=opt_perfs,
+        batches=batches,
+        compute_mask=compute_mask,
+        method=(
+            "waterfill/stacked-jax"
+            if warm_start is None
+            else "waterfill/stacked-jax+warm"
+        ),
+        t_stars=t_star,
+        iterations=int(sweep_iters) + polish,
+        node_mask=node_mask,
     )

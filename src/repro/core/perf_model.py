@@ -276,7 +276,38 @@ class StackedClusterModel:
     def t_comm(self) -> np.ndarray:
         return self.t_o + self.t_u
 
+    # -- derived-view caches -------------------------------------------
+    #
+    # Two expensive exports are memoized per stack instance: the solver's
+    # `_Problem` array view (repro.core.optperf) and the jax engine's
+    # device-array export (repro.core.optperf_jax `device_coeffs`).  Both
+    # key off this instance, so a stack whose coefficient arrays are
+    # refreshed IN PLACE (the scheduler's per-epoch OLS refit path) must
+    # call :meth:`invalidate_device_cache` — otherwise the solvers keep
+    # reading the old-regime coefficients from the stale export and emit
+    # brackets for a cluster that no longer exists.
+
+    def device_cache(self) -> Dict[str, object]:
+        """Per-instance slot for the jax engine's cached device exports
+        (keyed by dtype name; populated by ``optperf_jax.stacked_device_coeffs``
+        so this module never imports jax)."""
+        return self.__dict__.setdefault("_device_coeffs", {})
+
+    def invalidate_device_cache(self) -> None:
+        """Drop every derived view cached on this stack: the memoized
+        `_Problem` solver view, the jax device-coefficient export, and the
+        validation memo.  Required after any in-place coefficient refresh
+        (OLS refit)."""
+        self.__dict__.pop("_device_coeffs", None)
+        self.__dict__.pop("_optperf_problem", None)
+        self.__dict__.pop("_validated", None)
+
     def validate(self) -> None:
+        # Hot path (the scheduler solves the same stack block every round):
+        # memoized like ClusterPerfModel.validate; in-place refreshes route
+        # through invalidate_device_cache which drops the memo.
+        if self.__dict__.get("_validated", False):
+            return
         c, n = self.alphas.shape
         for name in ("cs", "betas", "ds", "ks", "ms", "mask"):
             if getattr(self, name).shape != (c, n):
@@ -306,6 +337,7 @@ class StackedClusterModel:
             raise ValueError("negative communication time")
         if not np.all((self.gamma >= 0) & (self.gamma <= 1)):
             raise ValueError("gamma out of range")
+        self.__dict__["_validated"] = True
 
     @classmethod
     def from_models(cls, models: Sequence["ClusterPerfModel"]) -> "StackedClusterModel":

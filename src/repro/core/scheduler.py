@@ -15,31 +15,51 @@ most from it.  Each job's goodput for a candidate node set comes from the
 OptPerf solver over that subset — the same machinery the controller uses,
 so scheduler decisions and runtime behaviour cannot diverge.
 
-The default ``engine="batched"`` evaluates *every* (job, candidate-node)
-marginal goodput of a greedy round as one
-:func:`~repro.core.optperf.solve_optperf_stacked` call: the per-job
-coefficient arrays are gathered into a padded
-:class:`~repro.core.perf_model.StackedClusterModel` (one row per pair, each
-row carrying that job's comm model and total batch), so allocation costs
-O(rounds) array passes instead of O(jobs x nodes x solver) Python-level
-water-fills.  ``engine="scalar"`` keeps the original per-pair loop as the
-cross-check oracle; the chosen job's goodput is re-solved scalar after every
-round in both engines, so emitted allocations carry engine-identical
+The array engines (``engine="batched"`` NumPy, ``engine="jax"`` on-device)
+keep one *fixed-layout* stacked problem per allocation run: row
+``ji * N + c`` is job ``ji``'s current node set plus candidate node ``c``,
+padded to a power-of-two width.  Between greedy rounds only the winning
+job's rows change (one appended node), so each round
+
+  * re-solves exactly those N rows — one :func:`solve_optperf_stacked` /
+    :func:`~repro.core.optperf_jax.solve_optperf_stacked_jax` call —
+  * **warm-started** from the same rows' previous ``t_stars`` (the problems
+    differ by one appended node, so the safeguarded-Newton refinement
+    certifies in a handful of array passes instead of ~50 cold bisections),
+  * and reuses every other job's marginal goodputs unchanged (their sets
+    and candidates did not move — the values are exact, not approximate).
+
+``engine="scalar"`` keeps the original per-(job, node) loop as the
+cross-check oracle; the chosen job's goodput is re-solved scalar after
+every round in all engines, so emitted allocations carry engine-identical
 numbers.
 
+:class:`Scheduler` wraps the greedy core with *incremental re-allocation*:
+``add_job``/``remove_job``/``update_job`` re-run the greedy loop but reuse
+everything the arrival/departure did not touch — cached solo goodputs,
+cached per-(job, node-set) marginal rows from the previous run (exact
+hits while the greedy trajectory replays), and warm bracket seeds once it
+diverges — so only the affected rows pay full solves.  ``update_job`` (the
+per-epoch OLS refit path) invalidates that job's cached rows and the stack
+device caches; see :meth:`~repro.core.perf_model.StackedClusterModel.invalidate_device_cache`.
+
 This is intentionally a library (allocation policy + simulation harness),
-not a daemon: launch integration would wrap `allocate` in a reconcile loop.
+not a daemon: launch integration would wrap `allocate`/`Scheduler` in a
+reconcile loop.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.goodput import statistical_efficiency
-from repro.core.optperf import solve_optperf_stacked, solve_optperf_waterfill
+from repro.core.optperf import (
+    solve_optperf_stacked,
+    solve_optperf_waterfill_subset,
+)
 from repro.core.perf_model import (
     ClusterPerfModel,
     CommModel,
@@ -47,7 +67,14 @@ from repro.core.perf_model import (
     StackedClusterModel,
 )
 
-__all__ = ["JobSpec", "Allocation", "allocate", "aggregate_goodput", "random_jobs"]
+__all__ = [
+    "JobSpec",
+    "Allocation",
+    "Scheduler",
+    "allocate",
+    "aggregate_goodput",
+    "random_jobs",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,11 +107,10 @@ class JobSpec:
     def goodput(self, node_ids: Sequence[int]) -> float:
         if len(node_ids) < self.min_nodes:
             return 0.0
-        model = ClusterPerfModel(
-            nodes=tuple(self.node_models[i] for i in node_ids), comm=self.comm
-        )
         try:
-            sol = solve_optperf_waterfill(model, self.total_batch)
+            sol = solve_optperf_waterfill_subset(
+                self.full_model, node_ids, self.total_batch
+            )
         except (ValueError, RuntimeError):
             return 0.0
         thr = self.total_batch / sol.opt_perf
@@ -106,84 +132,361 @@ class Allocation:
         return float(sum(self.fractions.values()))
 
 
-def _batched_gains(
-    jobs: Sequence[JobSpec],
-    assign: Dict[str, List[int]],
-    candidates: Sequence[int],
-    current: Dict[str, float],
-    solo: Dict[str, float],
-    healthy: Dict[str, bool],
-) -> np.ndarray:
-    """Normalized marginal gains for every (job, candidate node) pair.
+def _stacked_solver(engine: str):
+    """The stacked-row solver for an array engine: the jit on-device kernel
+    for ``engine == "jax"`` (silently falling back to the NumPy stacked
+    engine when JAX is unavailable), else the NumPy stacked engine."""
+    if engine == "jax":
+        try:
+            from repro.core import optperf_jax
 
-    Builds one padded :class:`StackedClusterModel` — row ``(ji, r)`` is job
-    ``ji``'s current node set plus candidate ``candidates[r]``, gathered from
-    the job's cached full-cluster coefficient arrays with one fancy index —
-    and water-fills all rows simultaneously.  Jobs whose fitted model failed
-    validation get goodput-0 rows directly (the scalar path's graceful 0.0)
-    instead of poisoning the shared solve.  Returns gains shaped
-    ``(len(jobs), len(candidates))``, laid out so that ``argmax`` tie-breaks
-    in (job order, ascending node id) order, exactly like the scalar loop.
+            if optperf_jax.HAS_JAX:
+                return optperf_jax.solve_optperf_stacked_jax
+        except ImportError:  # pragma: no cover - jax present in CI image
+            pass
+    return solve_optperf_stacked
+
+
+def _model_ok(job: JobSpec) -> bool:
+    try:
+        job.full_model.validate()
+        return True
+    except ValueError:
+        return False
+
+
+_INERT_FILL = (
+    ("alphas", 1.0), ("cs", 0.0), ("betas", 1.0),
+    ("ds", 0.0), ("ks", 1.0), ("ms", 0.0),
+)
+
+
+class _GreedyState:
+    """Fixed-layout stacked-problem state for one array-engine run.
+
+    Row ``ji * N + c`` is job ``ji``'s current node set (columns ``0..m-1``)
+    plus candidate node ``c`` (column ``m``), padded to a power-of-two
+    column capacity so the jax engine re-specializes on a handful of shapes
+    instead of one per round.  ``take`` updates exactly the winner's N rows
+    in place (chosen node written into column ``m``, the candidate column
+    moves to ``m+1``) and invalidates the cached device/solver views of the
+    mutated block — the warm seeds (`t_stars`) and marginal goodputs of
+    every other job carry over unchanged.
     """
-    n_jobs = len(jobs)
-    n_cand = len(candidates)
-    cand_arr = np.asarray(candidates, dtype=np.intp)
-    width = max(len(assign[j.name]) for j in jobs) + 1
-    rows = n_jobs * n_cand
-    alphas = np.ones((rows, width))
-    cs = np.zeros((rows, width))
-    betas = np.ones((rows, width))
-    ds = np.zeros((rows, width))
-    ks = np.ones((rows, width))
-    ms = np.zeros((rows, width))
-    mask = np.zeros((rows, width), dtype=bool)
-    t_o = np.empty(rows)
-    t_u = np.empty(rows)
-    gamma = np.empty(rows)
-    totals = np.empty(rows)
-    viable = np.empty(rows, dtype=bool)
-    for ji, job in enumerate(jobs):
-        cur = np.asarray(assign[job.name], dtype=np.intp)
-        m = cur.size
-        sl = slice(ji * n_cand, (ji + 1) * n_cand)
-        totals[sl] = job.total_batch
-        if not healthy[job.name]:
-            # Garbage-fit job (bad node fit or bad comm model): inert unit
-            # rows — mask True and zeroed comm keep the stack valid — with
-            # goodput forced to 0 below, same as JobSpec.goodput's graceful
-            # degradation.
-            t_o[sl] = 0.0
-            t_u[sl] = 0.0
-            gamma[sl] = 0.0
-            mask[sl, 0] = True
-            viable[sl] = False
-            continue
-        t_o[sl] = job.comm.t_o
-        t_u[sl] = job.comm.t_u
-        gamma[sl] = job.comm.gamma
-        idx = np.empty((n_cand, m + 1), dtype=np.intp)
-        idx[:, :m] = cur
-        idx[:, m] = cand_arr
-        co = job.full_model.coeffs
-        alphas[sl, : m + 1] = co.alphas[idx]
-        cs[sl, : m + 1] = co.cs[idx]
-        betas[sl, : m + 1] = co.betas[idx]
-        ds[sl, : m + 1] = co.ds[idx]
-        ks[sl, : m + 1] = co.ks[idx]
-        ms[sl, : m + 1] = co.ms[idx]
-        mask[sl, : m + 1] = True
-        viable[sl] = (m + 1) >= job.min_nodes
-    stack = StackedClusterModel(
-        alphas=alphas, cs=cs, betas=betas, ds=ds, ks=ks, ms=ms,
-        t_o=t_o, t_u=t_u, gamma=gamma, mask=mask,
+
+    def __init__(self, jobs: Sequence[JobSpec], n_nodes: int, healthy: Sequence[bool]):
+        self.jobs = list(jobs)
+        self.healthy = list(healthy)
+        self.n = n_nodes
+        self.j = len(jobs)
+        self.rows = self.j * n_nodes
+        self.width = 1
+        self.m = [0] * self.j
+        self.assign: List[List[int]] = [[] for _ in jobs]
+        self.goodputs = np.zeros((self.j, n_nodes))
+        self.t_stars = np.full((self.j, n_nodes), np.nan)
+        self.dirty = set(range(self.j))
+        self.t_o = np.zeros(self.rows)
+        self.t_u = np.zeros(self.rows)
+        self.gamma = np.zeros(self.rows)
+        self.totals = np.empty(self.rows)
+        self._alloc_arrays()
+        cand = np.arange(n_nodes, dtype=np.intp)
+        for ji, job in enumerate(jobs):
+            sl = self._block(ji)
+            self.totals[sl] = job.total_batch
+            if not self.healthy[ji]:
+                # Garbage-fit job (bad node fit or bad comm model): inert
+                # unit rows — mask True and zeroed comm keep the stack valid
+                # — with goodput forced to 0, same as JobSpec.goodput's
+                # graceful degradation.
+                self.mask[sl, 0] = True
+                continue
+            self.t_o[sl] = job.comm.t_o
+            self.t_u[sl] = job.comm.t_u
+            self.gamma[sl] = job.comm.gamma
+            co = job.full_model.coeffs
+            for name, _ in _INERT_FILL:
+                self.arrays[name][sl, 0] = getattr(co, name)[cand]
+            self.mask[sl, 0] = True
+
+    def _alloc_arrays(self) -> None:
+        """(Re)allocate the width-dependent coefficient arrays (the row
+        vectors — comm/totals — are width-independent and allocated once)."""
+        self.arrays = {
+            name: np.full((self.rows, self.width), fill) for name, fill in _INERT_FILL
+        }
+        self.mask = np.zeros((self.rows, self.width), dtype=bool)
+        self._stacks: Dict[int, StackedClusterModel] = {}
+
+    def _block(self, ji: int) -> slice:
+        return slice(ji * self.n, (ji + 1) * self.n)
+
+    def _grow(self) -> None:
+        old, old_mask, w = self.arrays, self.mask, self.width
+        self.width = w * 2
+        self._alloc_arrays()
+        for name in old:
+            self.arrays[name][:, :w] = old[name]
+        self.mask[:, :w] = old_mask
+
+    def _stack_for(self, ji: int) -> StackedClusterModel:
+        """Stacked view of one job block, cached per block so repeated
+        solves of unchanged rows reuse the memoized `_Problem` view and the
+        jax device export (``take`` invalidates the mutated block's)."""
+        stack = self._stacks.get(ji)
+        if stack is None:
+            sl = self._block(ji)
+            stack = StackedClusterModel(
+                t_o=self.t_o[sl], t_u=self.t_u[sl], gamma=self.gamma[sl],
+                mask=self.mask[sl],
+                **{name: arr[sl] for name, arr in self.arrays.items()},
+            )
+            self._stacks[ji] = stack
+        return stack
+
+    def take(self, ji: int, node: int) -> None:
+        """Append ``node`` to job ``ji``'s set, updating its rows in place."""
+        m = self.m[ji]
+        if m + 2 > self.width:
+            self._grow()
+        self.assign[ji].append(node)
+        self.m[ji] = m + 1
+        self.dirty.add(ji)
+        if self.healthy[ji]:
+            sl = self._block(ji)
+            co = self.jobs[ji].full_model.coeffs
+            cand = np.arange(self.n, dtype=np.intp)
+            for name, _ in _INERT_FILL:
+                arr = self.arrays[name]
+                arr[sl, m] = getattr(co, name)[node]
+                arr[sl, m + 1] = getattr(co, name)[cand]
+            self.mask[sl, m + 1] = True
+            # The block's arrays changed under any cached views: the memoized
+            # `_Problem` derived arrays and the jax device export are stale.
+            stack = self._stacks.get(ji)
+            if stack is not None:
+                stack.invalidate_device_cache()
+                # The new columns are gathers from this job's already-
+                # validated full model, so the validity memo may be kept —
+                # re-validating every round is pure overhead.
+                stack.__dict__["_validated"] = True
+
+    def _viable(self, ji: int) -> bool:
+        return self.healthy[ji] and (self.m[ji] + 1) >= self.jobs[ji].min_nodes
+
+    def _solve_rows(
+        self, ji: int, solver, warm: Optional[np.ndarray]
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(goodput row incl. efficiency, t_star row) for one job block."""
+        stack = self._stack_for(ji)
+        sol = solver(stack, self.totals[self._block(ji)], warm_start=warm)
+        good = np.zeros(self.n)
+        if self._viable(ji):
+            good = self.jobs[ji].total_batch / sol.opt_perfs * self.jobs[ji].efficiency
+        return good, np.asarray(sol.t_stars)
+
+    def _scalar_rows(self, ji: int) -> np.ndarray:
+        job = self.jobs[ji]
+        base = self.assign[ji]
+        return np.asarray(
+            [job.goodput(tuple(base + [c])) for c in range(self.n)]
+        )
+
+
+def _allocate_arrays(
+    jobs: Sequence[JobSpec],
+    n_nodes: int,
+    engine: str,
+    *,
+    solo: Dict[str, float],
+    round_scalar: bool = True,
+    gain_cache: Optional[Dict[str, Dict[Tuple[int, ...], Tuple[np.ndarray, np.ndarray]]]] = None,
+    take_cache: Optional[Dict[str, Dict[Tuple[int, ...], float]]] = None,
+    counters: Optional["Scheduler"] = None,
+) -> Allocation:
+    """Greedy marginal-gain assignment on the fixed-layout stacked state.
+
+    ``round_scalar=True`` (plain :func:`allocate`) re-solves the chosen set
+    with the scalar path after *every* round, so intermediate ``current``
+    values are bit-identical to the scalar oracle's.  ``round_scalar=False``
+    (the incremental :class:`Scheduler`) instead reads the chosen row's
+    certified stacked value — within solver tolerance (~1e-10 relative) of
+    the scalar re-solve — and re-solves scalar only the *final* chosen sets,
+    so emitted goodputs still match the oracle's bit-for-bit while the
+    rounds themselves stay array-only.  The two modes pick identical
+    assignments unless some round has two competing gains closer than the
+    round solver's resolution without being exactly tied (exact ties — e.g.
+    identical node models — break identically in both): ~1e-10 relative for
+    the NumPy engine, ~1e-7 for the float32 stacked-jax engine.  Real
+    clusters sit far from that degeneracy.
+    """
+    solver = _stacked_solver(engine)
+    healthy = [_model_ok(j) for j in jobs]
+    state = _GreedyState(jobs, n_nodes, healthy)
+    current = [0.0] * len(jobs)
+    remaining = n_nodes
+
+    # Long-lived Schedulers reconcile indefinitely; every distinct greedy
+    # trajectory adds cache keys, so each per-job cache is bounded (oldest
+    # entries evicted first — dicts preserve insertion order) instead of
+    # growing with the number of reallocations.
+    cache_limit = 8 * max(n_nodes, 1)
+
+    def bounded_insert(cache: Dict, key, value) -> None:
+        cache.pop(key, None)
+        cache[key] = value
+        while len(cache) > cache_limit:
+            cache.pop(next(iter(cache)))
+
+    def job_cache(ji: int):
+        if gain_cache is None:
+            return None
+        return gain_cache.setdefault(jobs[ji].name, {})
+
+    def solve_dirty() -> None:
+        """Refresh the marginal rows of every dirty job: cached exact rows
+        when the (job, node-set) was solved before, one warm-seeded stacked
+        call per block otherwise."""
+        pending = sorted(state.dirty)
+        state.dirty.clear()
+        for ji in pending:
+            cache = job_cache(ji)
+            key = tuple(state.assign[ji])
+            if cache is not None and key in cache:
+                state.goodputs[ji], state.t_stars[ji] = cache[key]
+                if counters is not None:
+                    counters.cached_rows += state.n
+                continue
+            seeds = state.t_stars[ji]
+            warm = seeds.copy() if np.isfinite(seeds).all() else None
+            try:
+                good, t_star = state._solve_rows(ji, solver, warm)
+                state.goodputs[ji], state.t_stars[ji] = good, t_star
+            except (ValueError, RuntimeError):
+                # Degenerate block: fall back to the scalar oracle for these
+                # rows (graceful 0.0 semantics included); no warm seeds.
+                state.goodputs[ji] = state._scalar_rows(ji)
+                state.t_stars[ji] = np.nan
+            if counters is not None:
+                counters.solved_rows += state.n
+                if warm is None:
+                    counters.cold_rounds += 1
+                else:
+                    counters.warm_rounds += 1
+            if cache is not None:
+                bounded_insert(
+                    cache, key, (state.goodputs[ji].copy(), state.t_stars[ji].copy())
+                )
+
+    def gains() -> np.ndarray:
+        cur = np.asarray(current)[:, None]
+        solo_v = np.asarray([solo[j.name] for j in jobs])[:, None]
+        g = (state.goodputs - cur) / solo_v
+        return np.where(taken[None, :], -np.inf, g)
+
+    def chosen_goodput(ji: int) -> float:
+        # Chosen sets are always re-solved by the scalar path so emitted
+        # goodputs are engine-identical (cached across incremental runs —
+        # the set, not the order, determines the value).
+        ids = tuple(sorted(state.assign[ji]))
+        if take_cache is None:
+            return jobs[ji].goodput(ids)
+        cache = take_cache.setdefault(jobs[ji].name, {})
+        if ids not in cache:
+            bounded_insert(cache, ids, jobs[ji].goodput(ids))
+        return cache[ids]
+
+    def take(ji: int, node: int) -> None:
+        nonlocal remaining
+        value = float(state.goodputs[ji, node])
+        state.take(ji, node)
+        taken[node] = True
+        remaining -= 1
+        current[ji] = chosen_goodput(ji) if round_scalar else value
+
+    taken = np.zeros(n_nodes, dtype=bool)
+    if n_nodes > 0 and jobs:
+        solve_dirty()
+        # Seed round: each job (in order of scarcity) takes its best node.
+        for ji in sorted(range(len(jobs)), key=lambda x: -jobs[x].min_nodes):
+            if remaining == 0:
+                break
+            solve_dirty()
+            take(ji, int(np.argmax(gains()[ji])))
+        # Greedy rounds: only the previous winner's rows are re-solved.
+        while remaining:
+            solve_dirty()
+            g = gains()
+            flat = int(np.argmax(g))
+            ji, node = divmod(flat, n_nodes)
+            if g[ji, node] <= 0:
+                break  # nobody benefits (comm-bound saturation)
+            take(ji, node)
+
+    if not round_scalar:
+        # Emit scalar-path values for the final sets (cached across runs):
+        # the same sets re-solved by the same function the round-scalar mode
+        # uses, so the emitted numbers are engine- and mode-identical.
+        for ji in range(len(jobs)):
+            if state.assign[ji]:
+                current[ji] = chosen_goodput(ji)
+    goodputs = {j.name: current[ji] for ji, j in enumerate(jobs)}
+    fractions = {j.name: goodputs[j.name] / solo[j.name] for j in jobs}
+    return Allocation(
+        assignment={
+            j.name: tuple(sorted(state.assign[ji])) for ji, j in enumerate(jobs)
+        },
+        goodputs=goodputs,
+        fractions=fractions,
     )
-    sol = solve_optperf_stacked(stack, totals)
-    goodputs = np.where(viable, totals / sol.opt_perfs, 0.0)
-    eff = np.repeat([j.efficiency for j in jobs], n_cand)
-    goodputs = goodputs * eff
-    cur_v = np.repeat([current[j.name] for j in jobs], n_cand)
-    solo_v = np.repeat([solo[j.name] for j in jobs], n_cand)
-    return ((goodputs - cur_v) / solo_v).reshape(n_jobs, n_cand)
+
+
+def _allocate_scalar(jobs: Sequence[JobSpec], n_nodes: int, solo: Dict[str, float]) -> Allocation:
+    """The per-(job, candidate-node) scalar loop — the cross-check oracle.
+    Candidates iterate in ascending node id and jobs in caller order, so
+    tie-breaking matches the array engines' fixed row layout."""
+    remaining = set(range(n_nodes))
+    assign: Dict[str, List[int]] = {j.name: [] for j in jobs}
+    current = {j.name: 0.0 for j in jobs}
+
+    def scalar_gain(job: JobSpec, node: int) -> float:
+        g = job.goodput(tuple(assign[job.name] + [node]))
+        return (g - current[job.name]) / solo[job.name]
+
+    def take(job: JobSpec, nid: int) -> None:
+        assign[job.name].append(nid)
+        current[job.name] = job.goodput(tuple(assign[job.name]))
+        remaining.discard(nid)
+
+    for job in sorted(jobs, key=lambda j: -j.min_nodes):
+        if not remaining:
+            break
+        candidates = sorted(remaining)
+        gains = [scalar_gain(job, nid) for nid in candidates]
+        take(job, candidates[int(np.argmax(gains))])
+
+    while remaining:
+        candidates = sorted(remaining)
+        gains = np.array(
+            [[scalar_gain(j, nid) for nid in candidates] for j in jobs]
+        )
+        flat = int(np.argmax(gains))
+        ji, r = divmod(flat, len(candidates))
+        if gains[ji, r] <= 0:
+            break
+        take(jobs[ji], candidates[r])
+
+    goodputs = {name: current[name] for name in assign}
+    fractions = {name: goodputs[name] / solo[name] for name in assign}
+    return Allocation(
+        assignment={k: tuple(sorted(v)) for k, v in assign.items()},
+        goodputs=goodputs,
+        fractions=fractions,
+    )
+
+
+_ENGINES = ("batched", "jax", "scalar")
 
 
 def allocate(
@@ -197,79 +500,126 @@ def allocate(
     job from starving small ones (the same normalization Pollux's fair
     goodput objective uses).
 
-    ``engine="batched"`` (default) evaluates each round's marginal gains as
-    one stacked water-fill; ``engine="scalar"`` is the per-pair loop oracle.
-    Both iterate candidates in ascending node id and jobs in caller order,
-    so tie-breaking matches across engines.
+    ``engine="batched"`` (default) keeps one fixed-layout stacked problem
+    and re-solves only the rows each round changed, warm-started from the
+    previous round's ``t_stars``; ``engine="jax"`` runs those stacked
+    solves jit-compiled on-device; ``engine="scalar"`` is the per-pair loop
+    oracle.  All engines iterate candidates in ascending node id and jobs
+    in caller order, so tie-breaking matches across engines.
     """
-    if engine not in ("batched", "scalar"):
+    if engine not in _ENGINES:
         raise ValueError(f"unknown allocate engine {engine!r}")
     if not jobs:
         return Allocation({}, {}, {})
-    remaining = set(range(n_nodes))
-    assign: Dict[str, List[int]] = {j.name: [] for j in jobs}
+    if len({j.name for j in jobs}) != len(jobs):
+        raise ValueError("job names must be unique")
     solo = {j.name: max(j.solo_goodput(), 1e-12) for j in jobs}
-    current = {j.name: 0.0 for j in jobs}
+    if engine == "scalar":
+        return _allocate_scalar(jobs, n_nodes, solo)
+    return _allocate_arrays(jobs, n_nodes, engine, solo=solo)
 
-    def model_ok(job: JobSpec) -> bool:
-        try:
-            job.full_model.validate()
-            return True
-        except ValueError:
-            return False
 
-    # Validated once up front: a single garbage-fit job must not force every
-    # round of the batched engine through the scalar fallback.
-    healthy = {j.name: model_ok(j) for j in jobs}
+class Scheduler:
+    """Stateful cluster allocator with incremental re-allocation.
 
-    def scalar_gain(job: JobSpec, node: int) -> float:
-        g = job.goodput(tuple(assign[job.name] + [node]))
-        return (g - current[job.name]) / solo[job.name]
+    Holds the live job set and the caches that make re-allocation on job
+    arrival/departure cheap: solo goodputs, per-(job, node-set) marginal
+    rows from previous runs (exact reuse while the greedy trajectory
+    replays), and chosen-set scalar goodputs.  ``add_job``/``remove_job``
+    re-run the greedy loop against those caches so only the affected rows
+    are actually solved; the emitted allocation matches a cold
+    :func:`allocate` over the same job set (exactly, barring rounds whose
+    competing gains differ by less than the round solver's resolution —
+    see ``_allocate_arrays``).
 
-    def round_gains(round_jobs: Sequence[JobSpec], candidates: List[int]) -> np.ndarray:
-        if engine == "batched":
-            try:
-                return _batched_gains(
-                    round_jobs, assign, candidates, current, solo, healthy
-                )
-            except (ValueError, RuntimeError):
-                pass  # degenerate stack: fall back to the scalar oracle
-        return np.array(
-            [[scalar_gain(j, nid) for nid in candidates] for j in round_jobs]
-        )
+    ``update_job`` is the per-epoch OLS-refit entry point: the refreshed
+    job's cached rows (and the stacked device exports behind them) are
+    invalidated before re-allocating — reusing them would solve the old
+    coefficient regime (see
+    :meth:`~repro.core.perf_model.StackedClusterModel.invalidate_device_cache`).
 
-    def take(job: JobSpec, nid: int) -> None:
-        assign[job.name].append(nid)
-        # Chosen sets are always re-solved by the scalar path so emitted
-        # goodputs are engine-identical.
-        current[job.name] = job.goodput(tuple(assign[job.name]))
-        remaining.discard(nid)
+    Observability: ``warm_rounds``/``cold_rounds`` count block solves by
+    bracket seeding, ``solved_rows``/``cached_rows`` count marginal rows
+    actually solved vs reused from cache.
+    """
 
-    # Seed round: each job (in order of scarcity) takes its best node.
-    for job in sorted(jobs, key=lambda j: -j.min_nodes):
-        if not remaining:
-            break
-        candidates = sorted(remaining)
-        gains = round_gains([job], candidates)
-        take(job, candidates[int(np.argmax(gains[0]))])
+    def __init__(self, n_nodes: int, *, engine: str = "batched"):
+        if engine not in _ENGINES:
+            raise ValueError(f"unknown allocate engine {engine!r}")
+        self.n_nodes = n_nodes
+        self.engine = engine
+        self.allocation: Optional[Allocation] = None
+        self._jobs: Dict[str, JobSpec] = {}
+        self._solo: Dict[str, float] = {}
+        self._gain_cache: Dict[str, Dict[Tuple[int, ...], Tuple[np.ndarray, np.ndarray]]] = {}
+        self._take_cache: Dict[str, Dict[Tuple[int, ...], float]] = {}
+        self.warm_rounds = 0
+        self.cold_rounds = 0
+        self.solved_rows = 0
+        self.cached_rows = 0
+        self.allocations = 0
 
-    # Greedy rounds: all (job, node) marginal gains per round in one pass.
-    while remaining:
-        candidates = sorted(remaining)
-        gains = round_gains(jobs, candidates)
-        flat = int(np.argmax(gains))
-        ji, r = divmod(flat, len(candidates))
-        if gains[ji, r] <= 0:
-            break  # nobody benefits (comm-bound saturation)
-        take(jobs[ji], candidates[r])
+    @property
+    def jobs(self) -> Tuple[JobSpec, ...]:
+        return tuple(self._jobs.values())
 
-    goodputs = {name: current[name] for name in assign}
-    fractions = {name: goodputs[name] / solo[name] for name in assign}
-    return Allocation(
-        assignment={k: tuple(sorted(v)) for k, v in assign.items()},
-        goodputs=goodputs,
-        fractions=fractions,
-    )
+    def add_job(self, job: JobSpec) -> Allocation:
+        if job.name in self._jobs:
+            raise ValueError(f"job {job.name!r} already scheduled")
+        self._jobs[job.name] = job
+        return self.reallocate()
+
+    def remove_job(self, name: str) -> Allocation:
+        if name not in self._jobs:
+            raise KeyError(name)
+        del self._jobs[name]
+        self._drop_job_state(name)
+        return self.reallocate()
+
+    def update_job(self, job: JobSpec) -> Allocation:
+        """Replace a job's spec after a coefficient refresh (OLS refit).
+
+        The refreshed job's cached marginal rows, chosen-set goodputs, and
+        solo normalizer are all stale for the new coefficient regime and
+        are dropped before re-allocating; warm bracket seeds for the other
+        jobs stay valid (their problems did not change)."""
+        if job.name not in self._jobs:
+            raise KeyError(job.name)
+        self._jobs[job.name] = job
+        self._drop_job_state(job.name)
+        return self.reallocate()
+
+    def invalidate(self) -> None:
+        """Drop every cache (cluster-membership or bulk-refresh changes)."""
+        self._solo.clear()
+        self._gain_cache.clear()
+        self._take_cache.clear()
+
+    def _drop_job_state(self, name: str) -> None:
+        self._solo.pop(name, None)
+        self._gain_cache.pop(name, None)
+        self._take_cache.pop(name, None)
+
+    def reallocate(self) -> Allocation:
+        """Re-run the greedy loop against the incremental caches."""
+        jobs = self.jobs
+        self.allocations += 1
+        if not jobs:
+            self.allocation = Allocation({}, {}, {})
+            return self.allocation
+        for job in jobs:
+            if job.name not in self._solo:
+                self._solo[job.name] = max(job.solo_goodput(), 1e-12)
+        solo = {j.name: self._solo[j.name] for j in jobs}
+        if self.engine == "scalar":
+            self.allocation = _allocate_scalar(jobs, self.n_nodes, solo)
+        else:
+            self.allocation = _allocate_arrays(
+                jobs, self.n_nodes, self.engine, solo=solo, round_scalar=False,
+                gain_cache=self._gain_cache, take_cache=self._take_cache,
+                counters=self,
+            )
+        return self.allocation
 
 
 def aggregate_goodput(jobs: Sequence[JobSpec], allocation: Allocation) -> float:

@@ -31,9 +31,14 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, arch_ids, get_api
-from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.hlo_stats import analyze_hlo, raw_cost_analysis
 from repro.sharding.context import sharding_context
-from repro.launch.mesh import make_production_mesh, make_rules, train_microbatches
+from repro.launch.mesh import (
+    enter_mesh,
+    make_production_mesh,
+    make_rules,
+    train_microbatches,
+)
 from repro.models import common
 from repro.optim import adamw, constant_schedule
 from repro.train.step import build_train_step
@@ -115,13 +120,9 @@ def _memory_analysis_dict(compiled) -> Dict[str, Any]:
 
 def _cost_analysis_dict(compiled) -> Dict[str, Any]:
     try:
-        ca = compiled.cost_analysis()
+        ca = raw_cost_analysis(compiled)
     except Exception as e:  # pragma: no cover
         return {"error": str(e)}
-    if ca is None:
-        return {}
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
     keep = ("flops", "transcendentals", "bytes accessed")
     return {
         k: float(v)
@@ -282,7 +283,7 @@ def run_one(arch_id: str, shape_name: str, mesh_kind: str, outdir: str, *, force
     t0 = time.time()
     try:
         fn, args, in_shardings, out_shardings = build_dryrun(api, shape, mesh, rules)
-        with jax.set_mesh(mesh), sharding_context(mesh, rules):
+        with enter_mesh(mesh), sharding_context(mesh, rules):
             jitted = jax.jit(
                 fn,
                 in_shardings=in_shardings,

@@ -14,12 +14,31 @@ import jax
 from repro.sharding.rules import MeshRules
 
 __all__ = [
+    "enter_mesh",
     "make_production_mesh",
     "make_rules",
     "mesh_axis_sizes",
     "FSDP_ARCHS",
     "TRAIN_MICROBATCHES",
 ]
+
+
+def enter_mesh(mesh):
+    """Version-portable mesh context manager.
+
+    ``jax.set_mesh`` (the context-manager form) only exists in newer jax
+    releases; 0.5.x has ``jax.sharding.use_mesh``; on 0.4.x neither exists
+    and the ``Mesh`` object itself is the context manager that activates
+    the global mesh for jit/with_sharding_constraint resolution.  Returns a
+    context manager for ``with enter_mesh(mesh): ...``.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
 
 # Archs whose parameter+optimizer state exceeds per-chip HBM under 16-way TP
 # alone: shard the d_model dim of large matrices over the data axis (FSDP /

@@ -9,6 +9,7 @@ from repro.core.optperf import (
     round_batches,
     solve_optperf_algorithm1,
     solve_optperf_waterfill,
+    solve_optperf_waterfill_subset,
 )
 from repro.core.perf_model import ClusterPerfModel, CommModel, NodePerfModel
 
@@ -150,3 +151,48 @@ def test_waterfill_handles_clamping():
     sol = solve_optperf_waterfill(model, 64)
     assert sol.batches[1] == 0.0
     assert sol.batches[0] == pytest.approx(64.0)
+
+
+def test_waterfill_subset_bit_identical_to_subset_model():
+    """The subset gather path (the scheduler's chosen-set re-solve) must be
+    bit-identical to building the subset ClusterPerfModel — coefficients
+    are per-node, so gathered rows are the exact same floats and the
+    bisection follows the exact same trajectory."""
+    rng = np.random.default_rng(17)
+    n = 9
+    model = make_model(
+        qs=rng.uniform(1e-4, 5e-3, n), ss=rng.uniform(0, 0.02, n),
+        ks=rng.uniform(1e-4, 8e-3, n), ms=rng.uniform(0, 0.02, n),
+        t_o=0.03, t_u=0.006, gamma=0.2,
+    )
+    for trial in range(10):
+        size = int(rng.integers(1, n + 1))
+        ids = tuple(int(i) for i in rng.choice(n, size=size, replace=False))
+        total = float(rng.uniform(16, 2048))
+        sub = solve_optperf_waterfill_subset(model, ids, total)
+        ref_model = ClusterPerfModel(
+            nodes=tuple(model.nodes[i] for i in ids), comm=model.comm
+        )
+        ref = solve_optperf_waterfill(ref_model, total)
+        assert sub.opt_perf == ref.opt_perf          # bitwise, not approx
+        assert sub.batches == ref.batches
+        assert sub.bottleneck == ref.bottleneck
+
+
+def test_waterfill_subset_validates_only_the_subset():
+    """A bad node outside the subset must not reject a valid sub-cluster
+    (and a bad node inside it must)."""
+    good = dict(q=1e-3, s=0.0, k=1e-3, m=0.0)
+    model = ClusterPerfModel(
+        nodes=(
+            NodePerfModel(**good),
+            NodePerfModel(q=1e-3, s=0.0, k=-1.0, m=0.0),  # ill-posed
+        ),
+        comm=CommModel(t_o=0.01, t_u=0.001, gamma=0.1),
+    )
+    sol = solve_optperf_waterfill_subset(model, (0,), 64)
+    assert sol.opt_perf > 0
+    with pytest.raises(ValueError):
+        solve_optperf_waterfill_subset(model, (0, 1), 64)
+    with pytest.raises(ValueError):
+        solve_optperf_waterfill_subset(model, (), 64)

@@ -5,7 +5,13 @@ import pytest
 
 from repro.core.controller import CannikinController
 from repro.core.perf_model import CommModel
-from repro.core.scheduler import Allocation, JobSpec, allocate, random_jobs
+from repro.core.scheduler import (
+    Allocation,
+    JobSpec,
+    Scheduler,
+    allocate,
+    random_jobs,
+)
 from repro.core.simulator import GPU_CATALOG, SimulatedCluster, cluster_B
 
 
@@ -153,6 +159,122 @@ def test_allocate_unknown_engine_raises():
 
 def test_allocate_empty_jobs():
     assert allocate([], 8).assignment == {}
+
+
+# ---------------------------------------------------------------------------
+# incremental Scheduler (add/remove/update_job)
+# ---------------------------------------------------------------------------
+
+
+def _goodputs_equal(a: Allocation, b: Allocation) -> None:
+    assert a.assignment == b.assignment
+    for name in b.goodputs:
+        assert a.goodputs[name] == pytest.approx(b.goodputs[name], rel=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_scheduler_add_job_matches_full_reallocation(seed):
+    """Incremental arrival: the warm/cached re-run emits the same assignment
+    and the same (scalar-path) goodputs as a cold full allocate."""
+    jobs = random_jobs(5, 14, seed)
+    sched = Scheduler(14)
+    for job in jobs[:4]:
+        sched.add_job(job)
+    _goodputs_equal(sched.allocation, allocate(jobs[:4], 14))
+    inc = sched.add_job(jobs[4])
+    _goodputs_equal(inc, allocate(jobs, 14))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_scheduler_remove_job_matches_full_reallocation(seed):
+    jobs = random_jobs(5, 14, 100 + seed)
+    sched = Scheduler(14)
+    for job in jobs:
+        sched.add_job(job)
+    gone = jobs[seed % len(jobs)].name
+    inc = sched.remove_job(gone)
+    kept = [j for j in jobs if j.name != gone]
+    _goodputs_equal(inc, allocate(kept, 14))
+    assert gone not in inc.assignment
+
+
+def test_scheduler_incremental_reuses_cached_rows():
+    """A replayed trajectory hits the per-(job, node-set) row cache: the
+    second identical reallocate solves (almost) nothing, and an arrival
+    re-solves far fewer rows than the full run did."""
+    jobs = random_jobs(4, 12, 11)
+    sched = Scheduler(12)
+    for job in jobs[:3]:
+        sched.add_job(job)
+    solved_before = sched.solved_rows
+    sched.reallocate()  # identical job set: full cache replay
+    assert sched.solved_rows == solved_before
+    assert sched.cached_rows > 0
+    sched.add_job(jobs[3])
+    arrival_solved = sched.solved_rows - solved_before
+    assert 0 < arrival_solved < solved_before
+    assert sched.warm_rounds > 0  # diverged rounds re-solve warm-seeded
+
+
+def test_scheduler_update_job_invalidates_stale_caches():
+    """Satellite regression: a coefficient refresh (per-epoch OLS refit)
+    must invalidate the refreshed job's cached rows/goodputs — serving the
+    old-regime values would emit a stale allocation."""
+    jobs = random_jobs(3, 10, 21)
+    sched = Scheduler(10)
+    for job in jobs:
+        sched.add_job(job)
+    # Refit job0 4x slower: same name, refreshed coefficients.
+    slow = JobSpec(
+        name=jobs[0].name,
+        node_models=tuple(
+            type(m)(q=m.q * 4, s=m.s * 4, k=m.k * 4, m=m.m * 4)
+            for m in jobs[0].node_models
+        ),
+        comm=jobs[0].comm,
+        total_batch=jobs[0].total_batch,
+        b_noise=jobs[0].b_noise,
+        ref_batch=jobs[0].ref_batch,
+        min_nodes=jobs[0].min_nodes,
+    )
+    updated = sched.update_job(slow)
+    _goodputs_equal(updated, allocate([slow, jobs[1], jobs[2]], 10))
+    # The refresh really changed the outcome vs the stale spec.
+    stale = allocate(jobs, 10)
+    assert (
+        updated.assignment != stale.assignment
+        or updated.goodputs[slow.name] != pytest.approx(stale.goodputs[slow.name])
+    )
+
+
+def test_scheduler_update_unknown_or_duplicate_job_raises():
+    jobs = random_jobs(2, 6, 31)
+    sched = Scheduler(6)
+    sched.add_job(jobs[0])
+    with pytest.raises(ValueError):
+        sched.add_job(jobs[0])
+    with pytest.raises(KeyError):
+        sched.update_job(jobs[1])
+    with pytest.raises(KeyError):
+        sched.remove_job("nope")
+
+
+def test_scheduler_empty_and_scalar_engine():
+    sched = Scheduler(8, engine="scalar")
+    assert sched.reallocate().assignment == {}
+    jobs = random_jobs(2, 8, 41)
+    for job in jobs:
+        sched.add_job(job)
+    _goodputs_equal(sched.allocation, allocate(jobs, 8, engine="scalar"))
+    with pytest.raises(ValueError):
+        Scheduler(8, engine="vectorised")
+
+
+def test_allocate_rejects_duplicate_job_names():
+    jobs = random_jobs(2, 6, 51)
+    dup = [jobs[0], jobs[0]]
+    with pytest.raises(ValueError):
+        allocate(dup, 6)
 
 
 # ---------------------------------------------------------------------------

@@ -117,6 +117,24 @@ print("SPMD-OK")
     assert "SPMD-OK" in out.stdout, out.stderr[-2000:]
 
 
+def test_enter_mesh_portable_context():
+    """enter_mesh works on jax versions without jax.set_mesh / use_mesh:
+    inside the context, bare-PartitionSpec sharding constraints resolve
+    against the active mesh."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import enter_mesh
+
+    mesh = jax.make_mesh((1,), ("data",))
+    with enter_mesh(mesh):
+        y = jax.jit(
+            lambda x: jax.lax.with_sharding_constraint(x, P("data"))
+        )(jnp.arange(8.0))
+    assert float(y.sum()) == 28.0
+
+
 def test_dryrun_subprocess_tiny_mesh():
     """A miniature dry-run (4x4 mesh) in a subprocess: lower+compile the
     llama3 reduced train step with the production sharding rules."""
@@ -144,13 +162,15 @@ named = lambda t: jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), t,
 bspecs = {k: NamedSharding(mesh, rules.batch_spec(extra_dims=len(v.shape)-1))
           for k, v in batch_sds.items()}
 from repro.launch.dryrun import _opt_specs
+from repro.launch.hlo_stats import raw_cost_analysis
+from repro.launch.mesh import enter_mesh
 ospecs = _opt_specs(opt_sds, pspecs)
-with jax.set_mesh(mesh):
+with enter_mesh(mesh):
     compiled = jax.jit(
         lambda p, o, b: step(p, o, b),
         in_shardings=(named(pspecs), named(ospecs), bspecs),
     ).lower(params_sds, opt_sds, batch_sds).compile()
-print("DRYRUN-OK", compiled.cost_analysis()["flops"] > 0)
+print("DRYRUN-OK", raw_cost_analysis(compiled)["flops"] > 0)
 """
     env = dict(os.environ, PYTHONPATH="src")
     out = subprocess.run(
