@@ -1,5 +1,10 @@
 """Fig. 9 reproduction: epochs to reach OptPerf from an even split, given a
-fixed total batch — Cannikin (2 learning epochs) vs LB-BSP (Δ=5/epoch)."""
+fixed total batch — Cannikin (2 learning epochs) vs LB-BSP (Δ=5/epoch).
+
+Policies and the epoch-driving loop come from the runtime's shared factory
+(``repro.runtime.make_partition_policy`` / ``drive_partition_policy``), so
+the benchmark exercises exactly the protocol the launch CLI and examples
+use."""
 from __future__ import annotations
 
 from typing import List
@@ -7,26 +12,9 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import Row, save_json, time_call
-from repro.core.baselines import EvenPartition, LBBSPPartition
-from repro.core.controller import CannikinController
 from repro.core.optperf import solve_optperf_algorithm1
 from repro.core.simulator import SimulatedCluster, cluster_A
-
-
-def _drive(policy, sim, total, epochs, steps=8):
-    times, last = [], None
-    for epoch in range(epochs):
-        if isinstance(policy, CannikinController):
-            plan = policy.plan_epoch()
-            batches = list(plan.batches)
-        else:
-            batches = policy.partition(total, epoch, last)
-        t, ms = sim.run_epoch(batches, steps)
-        last = ms[-1]
-        if isinstance(policy, CannikinController):
-            policy.observe_epoch(ms)
-        times.append(t / steps)
-    return times
+from repro.runtime import drive_partition_policy, make_partition_policy
 
 
 def run() -> List[Row]:
@@ -36,15 +24,10 @@ def run() -> List[Row]:
     curves = {}
     for name in ("cannikin", "lb-bsp", "even"):
         sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
-        if name == "cannikin":
-            policy = CannikinController(
-                sim.n, batch_candidates=[total], ref_batch=total, adaptive=False
-            )
-        elif name == "lb-bsp":
-            policy = LBBSPPartition(sim.n, delta=5)
-        else:
-            policy = EvenPartition(sim.n)
-        curves[name] = _drive(policy, sim, total, epochs)
+        policy = make_partition_policy(
+            name, sim.n, candidates=[total], ref_batch=total, adaptive=False
+        )
+        curves[name] = drive_partition_policy(policy, sim, total, epochs)
     best = solve_optperf_algorithm1(
         SimulatedCluster(profiles, comm, noise=0.0).true_model(), total
     ).opt_perf

@@ -1,6 +1,6 @@
 """Heterogeneous gradient-noise-scale estimation demo (§4.4 / Theorem 4.1).
 
-    PYTHONPATH=src python examples/gns_heterogeneous.py
+    python examples/gns_heterogeneous.py
 
 Draws synthetic per-node gradients with known |G|^2 and tr(Sigma), then
 compares three aggregations of the Eq. (10) local estimators:
@@ -9,10 +9,7 @@ compares three aggregations of the Eq. (10) local estimators:
   * the cross-term-corrected closed form w_i = (B - b_i)/((n-1)B)
     (this repo's correction — zero leading-order variance for tr(Sigma)).
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _common  # noqa: F401  (sys.path bootstrap)
 
 import numpy as np
 

@@ -1,23 +1,22 @@
 """The paper's end-to-end scenario: adaptive-batch-size training on a
 heterogeneous cluster — Cannikin vs PyTorch-DDP-even vs LB-BSP.
 
-    PYTHONPATH=src python examples/hetero_cluster_training.py
+    python examples/hetero_cluster_training.py
 
 Real JAX training of a reduced OLMo on synthetic data; per-node wall-clock
 from the calibrated cluster-B simulator (4x A100 + 4x V100 + 8x RTX6000).
-Prints per-epoch partitions, OptPerf predictions vs measurements, and the
-final simulated time-to-loss comparison (Fig. 7/8 analogue).
+Policies come from the runtime's shared partition-policy factory
+(``repro.runtime.make_partition_policy``).  Prints per-epoch partitions,
+OptPerf predictions vs measurements, and the final simulated time-to-loss
+comparison (Fig. 7/8 analogue).
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _common  # noqa: F401  (sys.path bootstrap)
 
 from repro.configs import get_api
-from repro.core import CannikinController, SimulatedCluster, cluster_B
-from repro.core.baselines import EvenPartition, LBBSPPartition
+from repro.core import SimulatedCluster, cluster_B
 from repro.data import SyntheticLM
 from repro.optim import constant_schedule, sgd
+from repro.runtime import make_partition_policy
 from repro.train import HeteroTrainer
 
 TARGET_LOSS = 3.5
@@ -29,16 +28,12 @@ def build(policy_name: str):
     profiles, comm = cluster_B()
     sim = SimulatedCluster(profiles, comm, noise=0.01, seed=0)
     data = SyntheticLM(vocab=api.cfg.vocab, seq_len=24, seed=0)
-    if policy_name == "cannikin":
-        policy = CannikinController(
-            sim.n,
-            batch_candidates=[REF_BATCH, REF_BATCH * 2, REF_BATCH * 4],
-            ref_batch=REF_BATCH,
-        )
-    elif policy_name == "lb-bsp":
-        policy = LBBSPPartition(sim.n, delta=5)
-    else:
-        policy = EvenPartition(sim.n)
+    policy = make_partition_policy(
+        policy_name,
+        sim.n,
+        candidates=[REF_BATCH, REF_BATCH * 2, REF_BATCH * 4],
+        ref_batch=REF_BATCH,
+    )
     tr = HeteroTrainer(api, sgd(constant_schedule(0.3)), sim, policy, data,
                        steps_per_epoch=4)
     tr.set_fixed_total(REF_BATCH)

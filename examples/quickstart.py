@@ -1,15 +1,18 @@
-"""Quickstart: train a reduced llama3-family model on synthetic data.
+"""Quickstart: train a reduced llama3-family model on synthetic data, then
+drive the cluster-runtime front door in ~10 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py
 
-Uses the public API end to end: config -> ModelApi -> train step -> loss
-curve -> checkpoint save/restore -> greedy decode with the KV cache.
+Part 1 uses the single-job public API end to end: config -> ModelApi ->
+train step -> loss curve -> checkpoint save/restore -> greedy decode with
+the KV cache.  Part 2 submits two jobs to the event-driven
+``repro.runtime.ClusterRuntime`` and lets the Cannikin policy partition an
+8-node heterogeneous cluster between them.
 """
 import os
-import sys
 import tempfile
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _common  # noqa: F401  (sys.path bootstrap)
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +61,25 @@ def main():
     # it for at least a few steps.
     hits = sum(out[i + 1] == int(data.rule[out[i]]) for i in range(len(out) - 1))
     print(f"rule-following transitions: {hits}/{len(out)-1}")
+
+    # Part 2: the multi-job cluster runtime in ~10 lines.  Two jobs arrive
+    # one after the other; each event incrementally re-partitions the
+    # 8-node cluster, and advance() steps the running jobs' epoch loops
+    # (bootstrap -> model fit -> OptPerf partition) on the simulator.
+    from repro.core.scheduler import random_jobs
+    from repro.runtime import ClusterRuntime
+
+    rt = ClusterRuntime(8, policy="cannikin")
+    for i, job in enumerate(random_jobs(2, 8, seed=0)):
+        rt.submit(job, at=float(i))
+    rt.run()
+    rt.advance(epochs=3, steps=2)
+    print("\ncluster runtime:")
+    for h in rt.jobs("running"):
+        print(f"  {h.name}: nodes={h.nodes} epochs={h.epochs_run} "
+              f"phase={h.last_plan.phase}")
+    print(f"  aggregate goodput={rt.allocation.aggregate_goodput:.1f} "
+          f"(fraction {rt.allocation.aggregate_fraction:.3f})")
 
 
 if __name__ == "__main__":

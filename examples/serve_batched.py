@@ -2,13 +2,11 @@
 zoo's serving-relevant families (dense ring-cache, MLA latent cache, RWKV
 O(1) state).
 
-    PYTHONPATH=src python examples/serve_batched.py
+    python examples/serve_batched.py
 """
-import os
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _common  # noqa: F401  (sys.path bootstrap)
 
 import jax
 import jax.numpy as jnp

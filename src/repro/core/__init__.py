@@ -12,8 +12,12 @@ Modules:
   controller   — §4.1/§4.5 Cannikin epoch controller
   scheduler    — beyond-paper multi-job heterogeneity-aware allocator
                  (greedy marginal goodput over stacked OptPerf rows, with
-                 incremental re-allocation on job arrival/departure)
+                 incremental re-allocation on job arrival/departure and
+                 node availability masking for churn)
   baselines    — DDP-even / AdaptDL-even / LB-BSP comparison policies
+
+The event-driven front door over these pieces — ClusterRuntime, JobHandle,
+allocation policies, trace replay — lives in :mod:`repro.runtime`.
 """
 from repro.core.aggregation import ratios, sample_weights, weighted_aggregate
 from repro.core.controller import CannikinController, EpochPlan
@@ -35,7 +39,13 @@ from repro.core.optperf import (
     solve_optperf_stacked,
     solve_optperf_waterfill,
 )
-from repro.core.scheduler import Allocation, JobSpec, Scheduler, allocate
+from repro.core.scheduler import (
+    Allocation,
+    JobSpec,
+    Scheduler,
+    aggregate_goodput,
+    allocate,
+)
 from repro.core.perf_model import (
     ClusterCoeffs,
     ClusterPerfModel,
@@ -83,6 +93,7 @@ __all__ = [
     "Allocation",
     "JobSpec",
     "Scheduler",
+    "aggregate_goodput",
     "allocate",
     "round_batches",
     "goodput_curve",

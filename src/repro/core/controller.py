@@ -220,6 +220,23 @@ class CannikinController:
         except ImportError:  # pragma: no cover - jax present in CI image
             pass
 
+    def _evict_device_export(self) -> None:
+        """Drop the *current* model's cached device-coefficient export.
+
+        Membership changes (`add_nodes`/`remove_nodes`) orphan `self._model`;
+        its prefetched coefficient stack must be evicted — not merely
+        dereferenced — so a stale export can never be reused (and never
+        stays pinned in device memory) after the cluster changed shape."""
+        if self._model is None:
+            return
+        try:
+            from repro.core import optperf_jax
+
+            if optperf_jax.HAS_JAX:
+                optperf_jax.evict_device_coeffs(self._model)
+        except ImportError:  # pragma: no cover - jax present in CI image
+            pass
+
     def set_comm_split(self, t_o: float, t_u: float, gamma: float) -> None:
         """Override the comm model with directly measured values (used when the
         runtime can observe bucket boundaries, e.g. the simulator's oracle or
@@ -346,6 +363,7 @@ class CannikinController:
             raise ValueError("cannot remove every node")
         self.fitters = {new: self.fitters[old] for new, old in enumerate(keep)}
         self.n = len(keep)
+        self._evict_device_export()
         self._model = None
         # Cluster membership changed: cached solutions AND the warm-start
         # bracket state are both stale.
@@ -360,6 +378,7 @@ class CannikinController:
         for i in range(self.n, self.n + count):
             self.fitters[i] = OnlineNodeFitter()
         self.n += count
+        self._evict_device_export()
         self._model = None
         self.selector.invalidate()
 

@@ -48,6 +48,7 @@ to the NumPy batched engine.
 """
 from __future__ import annotations
 
+import collections
 import functools
 from typing import NamedTuple, Optional, Sequence, Tuple
 
@@ -82,6 +83,7 @@ __all__ = [
     "DeviceCoeffs",
     "StackedDeviceCoeffs",
     "device_coeffs",
+    "evict_device_coeffs",
     "stacked_device_coeffs",
     "solve_optperf_batch_jax",
     "solve_optperf_stacked_jax",
@@ -102,12 +104,27 @@ class DeviceCoeffs(NamedTuple):
     t_comm: "jax.Array"       # scalar
 
 
-@functools.lru_cache(maxsize=128)
+# LRU-bounded single-model export cache.  A plain dict (not functools.
+# lru_cache) so that membership changes can *evict* a model's entries —
+# an elastic controller that drops/adds nodes must not leave the dead
+# cluster's coefficient stack pinned on the device (see
+# CannikinController.add_nodes/remove_nodes).
+_DEVICE_COEFFS_LIMIT = 128
+_DEVICE_COEFFS: "collections.OrderedDict[Tuple[ClusterPerfModel, str], DeviceCoeffs]" = (
+    collections.OrderedDict()
+)
+
+
 def _device_coeffs_cached(model: ClusterPerfModel, dtype_name: str) -> DeviceCoeffs:
+    key = (model, dtype_name)
+    hit = _DEVICE_COEFFS.get(key)
+    if hit is not None:
+        _DEVICE_COEFFS.move_to_end(key)
+        return hit
     c = model.coeffs
     dt = jnp.dtype(dtype_name)
     degenerate = c.betas <= 0.0
-    return DeviceCoeffs(
+    dc = DeviceCoeffs(
         alphas=jnp.asarray(c.alphas, dt),
         cs=jnp.asarray(c.cs, dt),
         safe_betas=jnp.asarray(np.where(degenerate, 1.0, c.betas), dt),
@@ -116,6 +133,23 @@ def _device_coeffs_cached(model: ClusterPerfModel, dtype_name: str) -> DeviceCoe
         t_u=jnp.asarray(model.comm.t_u, dt),
         t_comm=jnp.asarray(model.comm.t_comm, dt),
     )
+    _DEVICE_COEFFS[key] = dc
+    while len(_DEVICE_COEFFS) > _DEVICE_COEFFS_LIMIT:
+        _DEVICE_COEFFS.popitem(last=False)
+    return dc
+
+
+def evict_device_coeffs(model: ClusterPerfModel) -> int:
+    """Drop every cached device export of ``model`` (all dtypes).
+
+    Called on cluster-membership changes: the old membership's coefficient
+    stack must neither stay pinned in device memory nor be served to a
+    later sweep over the same (stale) model object.  Returns the number of
+    entries evicted."""
+    stale = [key for key in _DEVICE_COEFFS if key[0] == model]
+    for key in stale:
+        del _DEVICE_COEFFS[key]
+    return len(stale)
 
 
 def device_coeffs(model: ClusterPerfModel, dtype=None) -> DeviceCoeffs:

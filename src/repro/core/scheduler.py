@@ -51,7 +51,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -121,6 +122,13 @@ class JobSpec:
         return self.goodput(tuple(range(len(self.node_models))))
 
 
+def _finite_sum(values: Iterable[float]) -> float:
+    """Sum treating non-finite entries as 0.0 — an empty or zero-node
+    allocation (or a garbage-fit job whose solo normalizer degenerated to
+    NaN) must aggregate to 0.0, never poison the total with NaN."""
+    return float(sum(v for v in values if math.isfinite(v)))
+
+
 @dataclasses.dataclass(frozen=True)
 class Allocation:
     assignment: Dict[str, Tuple[int, ...]]   # job -> node ids
@@ -129,7 +137,11 @@ class Allocation:
 
     @property
     def aggregate_fraction(self) -> float:
-        return float(sum(self.fractions.values()))
+        return _finite_sum(self.fractions.values())
+
+    @property
+    def aggregate_goodput(self) -> float:
+        return _finite_sum(self.goodputs.values())
 
 
 def _stacked_solver(engine: str):
@@ -304,6 +316,8 @@ def _allocate_arrays(
     gain_cache: Optional[Dict[str, Dict[Tuple[int, ...], Tuple[np.ndarray, np.ndarray]]]] = None,
     take_cache: Optional[Dict[str, Dict[Tuple[int, ...], float]]] = None,
     counters: Optional["Scheduler"] = None,
+    unavailable: Sequence[int] = (),
+    cache_limit: Optional[int] = None,
 ) -> Allocation:
     """Greedy marginal-gain assignment on the fixed-layout stacked state.
 
@@ -325,13 +339,20 @@ def _allocate_arrays(
     healthy = [_model_ok(j) for j in jobs]
     state = _GreedyState(jobs, n_nodes, healthy)
     current = [0.0] * len(jobs)
-    remaining = n_nodes
+    # Down nodes are pre-marked taken: the fixed row layout (and with it
+    # every cached marginal row and warm bracket seed) is preserved across
+    # node churn — the greedy loop simply never assigns a masked node.
+    taken = np.zeros(n_nodes, dtype=bool)
+    for nid in unavailable:
+        taken[int(nid)] = True
+    remaining = n_nodes - int(taken.sum())
 
     # Long-lived Schedulers reconcile indefinitely; every distinct greedy
     # trajectory adds cache keys, so each per-job cache is bounded (oldest
     # entries evicted first — dicts preserve insertion order) instead of
     # growing with the number of reallocations.
-    cache_limit = 8 * max(n_nodes, 1)
+    if cache_limit is None:
+        cache_limit = 8 * max(n_nodes, 1)
 
     def bounded_insert(cache: Dict, key, value) -> None:
         cache.pop(key, None)
@@ -405,8 +426,7 @@ def _allocate_arrays(
         remaining -= 1
         current[ji] = chosen_goodput(ji) if round_scalar else value
 
-    taken = np.zeros(n_nodes, dtype=bool)
-    if n_nodes > 0 and jobs:
+    if remaining > 0 and jobs:
         solve_dirty()
         # Seed round: each job (in order of scarcity) takes its best node.
         for ji in sorted(range(len(jobs)), key=lambda x: -jobs[x].min_nodes):
@@ -442,11 +462,16 @@ def _allocate_arrays(
     )
 
 
-def _allocate_scalar(jobs: Sequence[JobSpec], n_nodes: int, solo: Dict[str, float]) -> Allocation:
+def _allocate_scalar(
+    jobs: Sequence[JobSpec],
+    n_nodes: int,
+    solo: Dict[str, float],
+    unavailable: Sequence[int] = (),
+) -> Allocation:
     """The per-(job, candidate-node) scalar loop — the cross-check oracle.
     Candidates iterate in ascending node id and jobs in caller order, so
     tie-breaking matches the array engines' fixed row layout."""
-    remaining = set(range(n_nodes))
+    remaining = set(range(n_nodes)) - {int(i) for i in unavailable}
     assign: Dict[str, List[int]] = {j.name: [] for j in jobs}
     current = {j.name: 0.0 for j in jobs}
 
@@ -490,7 +515,11 @@ _ENGINES = ("batched", "jax", "scalar")
 
 
 def allocate(
-    jobs: Sequence[JobSpec], n_nodes: int, *, engine: str = "batched"
+    jobs: Sequence[JobSpec],
+    n_nodes: int,
+    *,
+    engine: str = "batched",
+    unavailable: Sequence[int] = (),
 ) -> Allocation:
     """Greedy marginal-gain node assignment.
 
@@ -506,17 +535,26 @@ def allocate(
     solves jit-compiled on-device; ``engine="scalar"`` is the per-pair loop
     oracle.  All engines iterate candidates in ascending node id and jobs
     in caller order, so tie-breaking matches across engines.
+
+    ``unavailable`` lists node ids that must not be assigned (down/drained
+    nodes).  The stacked row layout is unchanged — masked nodes are simply
+    pre-marked taken — so warm seeds and cached rows survive node churn.
     """
     if engine not in _ENGINES:
         raise ValueError(f"unknown allocate engine {engine!r}")
+    bad = [i for i in unavailable if not 0 <= int(i) < n_nodes]
+    if bad:
+        # Without this check the engines would diverge: negative ids alias
+        # real rows in the array engine but are ignored by the scalar one.
+        raise ValueError(f"unavailable node ids out of range: {sorted(bad)}")
     if not jobs:
         return Allocation({}, {}, {})
     if len({j.name for j in jobs}) != len(jobs):
         raise ValueError("job names must be unique")
     solo = {j.name: max(j.solo_goodput(), 1e-12) for j in jobs}
     if engine == "scalar":
-        return _allocate_scalar(jobs, n_nodes, solo)
-    return _allocate_arrays(jobs, n_nodes, engine, solo=solo)
+        return _allocate_scalar(jobs, n_nodes, solo, unavailable)
+    return _allocate_arrays(jobs, n_nodes, engine, solo=solo, unavailable=unavailable)
 
 
 class Scheduler:
@@ -543,13 +581,25 @@ class Scheduler:
     actually solved vs reused from cache.
     """
 
-    def __init__(self, n_nodes: int, *, engine: str = "batched"):
+    def __init__(
+        self,
+        n_nodes: int,
+        *,
+        engine: str = "batched",
+        cache_limit: Optional[int] = None,
+    ):
         if engine not in _ENGINES:
             raise ValueError(f"unknown allocate engine {engine!r}")
+        if cache_limit is not None and cache_limit < 1:
+            raise ValueError("cache_limit must be >= 1")
         self.n_nodes = n_nodes
         self.engine = engine
+        # Per-job bound on cached marginal rows / chosen-set goodputs (FIFO
+        # eviction); None = the 8*n_nodes default of `_allocate_arrays`.
+        self.cache_limit = cache_limit
         self.allocation: Optional[Allocation] = None
         self._jobs: Dict[str, JobSpec] = {}
+        self._down: Set[int] = set()
         self._solo: Dict[str, float] = {}
         self._gain_cache: Dict[str, Dict[Tuple[int, ...], Tuple[np.ndarray, np.ndarray]]] = {}
         self._take_cache: Dict[str, Dict[Tuple[int, ...], float]] = {}
@@ -589,6 +639,34 @@ class Scheduler:
         self._drop_job_state(job.name)
         return self.reallocate()
 
+    def node_leave(self, node_ids: Sequence[int]) -> Allocation:
+        """Mark nodes unavailable (failure/drain) and re-allocate.
+
+        The stacked row layout is indexed by the *full* cluster, so a down
+        node does not shift any rows: cached marginal rows and warm bracket
+        seeds (which depend only on (job, node set), never on availability)
+        replay exactly — node churn costs an incremental re-run, not a cold
+        one.  Down nodes are simply never assigned."""
+        ids = {int(i) for i in node_ids}
+        bad = [i for i in ids if not 0 <= i < self.n_nodes]
+        if bad:
+            raise ValueError(f"node ids out of range: {sorted(bad)}")
+        self._down |= ids
+        return self.reallocate()
+
+    def node_join(self, node_ids: Sequence[int]) -> Allocation:
+        """Mark previously-down nodes available again and re-allocate."""
+        self._down -= {int(i) for i in node_ids}
+        return self.reallocate()
+
+    @property
+    def down_nodes(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._down))
+
+    @property
+    def available_nodes(self) -> int:
+        return self.n_nodes - len(self._down)
+
     def invalidate(self) -> None:
         """Drop every cache (cluster-membership or bulk-refresh changes)."""
         self._solo.clear()
@@ -611,19 +689,22 @@ class Scheduler:
             if job.name not in self._solo:
                 self._solo[job.name] = max(job.solo_goodput(), 1e-12)
         solo = {j.name: self._solo[j.name] for j in jobs}
+        down = tuple(sorted(self._down))
         if self.engine == "scalar":
-            self.allocation = _allocate_scalar(jobs, self.n_nodes, solo)
+            self.allocation = _allocate_scalar(jobs, self.n_nodes, solo, down)
         else:
             self.allocation = _allocate_arrays(
                 jobs, self.n_nodes, self.engine, solo=solo, round_scalar=False,
                 gain_cache=self._gain_cache, take_cache=self._take_cache,
-                counters=self,
+                counters=self, unavailable=down, cache_limit=self.cache_limit,
             )
         return self.allocation
 
 
 def aggregate_goodput(jobs: Sequence[JobSpec], allocation: Allocation) -> float:
-    return float(sum(allocation.goodputs.values()))
+    """Sum of per-job goodputs, with non-finite entries treated as 0.0 (a
+    zero-node or garbage-fit job must not poison the aggregate with NaN)."""
+    return allocation.aggregate_goodput
 
 
 def random_jobs(n_jobs: int, n_nodes: int, seed: int = 42) -> List[JobSpec]:

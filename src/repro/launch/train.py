@@ -1,6 +1,6 @@
 """Training driver CLI.
 
-Two modes:
+Three modes:
 
 * ``hetero`` (default) — the paper's end-to-end scenario: real JAX training
   of a reduced-config model on this host, with per-node timing supplied by
@@ -11,10 +11,17 @@ Two modes:
 * ``spmd`` — single-process pjit training of a reduced config on the local
   device(s): the quickstart path (examples/quickstart.py wraps it).
 
+* ``trace`` — multi-job cluster simulation through the
+  ``repro.runtime.ClusterRuntime`` front door: a seeded synthetic churn
+  trace (arrivals, a departure, a node failure) replayed under all three
+  allocation policies (cannikin / static / fair-share), one JSON summary.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --policy cannikin \
       --cluster B --epochs 12 --steps-per-epoch 8
   PYTHONPATH=src python -m repro.launch.train --mode spmd --arch rwkv6-7b --steps 20
+  PYTHONPATH=src python -m repro.launch.train --mode trace --trace-jobs 3 \
+      --trace-nodes 12 --epochs-per-event 2
 """
 from __future__ import annotations
 
@@ -27,24 +34,13 @@ import numpy as np
 
 
 def make_policy(name: str, n_nodes: int, *, candidates, ref_batch: int, adaptive: bool):
-    from repro.core.baselines import EvenPartition, LBBSPPartition
-    from repro.core.controller import CannikinController
+    """Deprecated shim — use :func:`repro.runtime.make_partition_policy`
+    (the shared factory this now delegates to)."""
+    from repro.runtime import make_partition_policy
 
-    if name == "cannikin":
-        return CannikinController(
-            n_nodes,
-            batch_candidates=candidates,
-            ref_batch=ref_batch,
-            adaptive=adaptive,
-        )
-    if name in ("even", "ddp", "adaptdl"):
-        # AdaptDL's per-node split in heterogeneous clusters equals DDP's
-        # (§5.2.2); its total-batch adaptivity is modeled by pairing this
-        # partition with the Cannikin GNS engine in benchmarks/convergence.
-        return EvenPartition(n_nodes)
-    if name == "lb-bsp":
-        return LBBSPPartition(n_nodes, delta=5)
-    raise ValueError(f"unknown policy {name!r}")
+    return make_partition_policy(
+        name, n_nodes, candidates=candidates, ref_batch=ref_batch, adaptive=adaptive
+    )
 
 
 def run_hetero(args) -> int:
@@ -61,8 +57,10 @@ def run_hetero(args) -> int:
     profiles, comm = cluster_fn()
     sim = SimulatedCluster(profiles, comm, noise=args.noise, seed=args.seed)
     data = SyntheticLM(vocab=api.cfg.vocab, seq_len=args.seq_len, seed=args.seed)
+    from repro.runtime import make_partition_policy
+
     candidates = [args.ref_batch * m for m in (1, 2, 4, 8)]
-    policy = make_policy(
+    policy = make_partition_policy(
         args.policy,
         sim.n,
         candidates=candidates,
@@ -129,9 +127,31 @@ def run_spmd(args) -> int:
     return 0
 
 
+def run_trace(args) -> int:
+    from repro.runtime import compare_policies, format_summary, synthetic_trace
+
+    trace, jobs = synthetic_trace(args.trace_jobs, args.trace_nodes, seed=args.seed)
+    reports = compare_policies(
+        trace,
+        args.trace_nodes,
+        epochs_per_event=args.epochs_per_event,
+        steps=args.steps_per_epoch,
+        noise=args.noise,
+        seed=args.seed,
+    )
+    print(f"# trace: {len(trace)} events, jobs={[j.name for j in jobs]}, "
+          f"nodes={args.trace_nodes}")
+    print(format_summary(reports))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({name: rep.summary() for name, rep in reports.items()},
+                      f, indent=1)
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", default="hetero", choices=["hetero", "spmd"])
+    ap.add_argument("--mode", default="hetero", choices=["hetero", "spmd", "trace"])
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--policy", default="cannikin",
                     choices=["cannikin", "even", "ddp", "adaptdl", "lb-bsp"])
@@ -148,9 +168,14 @@ def main() -> int:
     ap.add_argument("--fixed-batch", action="store_true")
     ap.add_argument("--target-loss", type=float, default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace-jobs", type=int, default=3)
+    ap.add_argument("--trace-nodes", type=int, default=12)
+    ap.add_argument("--epochs-per-event", type=int, default=2)
     args = ap.parse_args()
     if args.mode == "hetero":
         return run_hetero(args)
+    if args.mode == "trace":
+        return run_trace(args)
     return run_spmd(args)
 
 

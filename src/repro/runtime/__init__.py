@@ -1,0 +1,103 @@
+"""repro.runtime — the event-driven cluster runtime: one front door over
+controller, scheduler, simulator, and trainer.
+
+The paper's Cannikin system is a *runtime* loop: observe steps, refit the
+performance model, re-plan batch sizes, reallocate nodes as jobs and
+hardware come and go.  This package exposes that loop as one API:
+
+* :class:`ClusterRuntime` — deterministic reconcile loop over an event
+  queue (:class:`JobArrival`, :class:`JobCompletion`, :class:`NodeJoin`/
+  :class:`NodeLeave`, :class:`ModelRefit`, :class:`Preemption`), wrapping
+  the incremental :class:`~repro.core.scheduler.Scheduler` so allocations
+  are recomputed incrementally per event, never cold.
+* :class:`JobHandle` — per-job lifecycle (pending → running ⇄ preempted →
+  done) owning a :class:`~repro.core.controller.CannikinController`;
+  surfaces :class:`~repro.core.controller.EpochPlan`s and
+  :class:`~repro.core.controller.ControllerStats`.
+* :class:`Policy` — pluggable allocation policies: ``cannikin`` (the
+  paper-derived allocator), ``static``, and ``fair-share`` baselines, all
+  scored on the same goodput scale.
+* :class:`Trace` / :func:`replay` / :func:`compare_policies` — synthetic
+  multi-job churn workloads over :class:`~repro.core.simulator.
+  SimulatedCluster` (the Pollux/Sia-style cluster simulation).
+* :func:`make_partition_policy` / :func:`drive_partition_policy` — the
+  single-job batch-partition factory + epoch-driving loop shared by the
+  launch CLI, examples, and benchmarks.
+
+Quick start::
+
+    from repro.core.scheduler import random_jobs
+    from repro.runtime import ClusterRuntime
+
+    rt = ClusterRuntime(n_nodes=8, policy="cannikin")
+    for i, job in enumerate(random_jobs(2, 8, seed=0)):
+        rt.submit(job, at=float(i))
+    rt.run()                 # reconcile queued events
+    rt.advance(epochs=3)     # step the running jobs' training loops
+    print(rt.allocation.aggregate_goodput, rt.counters())
+"""
+from repro.runtime.events import (
+    Event,
+    JobArrival,
+    JobCompletion,
+    ModelRefit,
+    NodeJoin,
+    NodeLeave,
+    Preemption,
+    describe,
+)
+from repro.runtime.policy import (
+    POLICIES,
+    CannikinPolicy,
+    FairSharePolicy,
+    Policy,
+    StaticPolicy,
+    drive_partition_policy,
+    make_partition_policy,
+    make_policy,
+)
+from repro.runtime.runtime import (
+    ClusterRuntime,
+    JobHandle,
+    JobState,
+    ReconcileRecord,
+    drift_spec,
+)
+from repro.runtime.trace import (
+    Trace,
+    TraceReport,
+    compare_policies,
+    format_summary,
+    replay,
+    synthetic_trace,
+)
+
+__all__ = [
+    "Event",
+    "JobArrival",
+    "JobCompletion",
+    "ModelRefit",
+    "NodeJoin",
+    "NodeLeave",
+    "Preemption",
+    "describe",
+    "Policy",
+    "POLICIES",
+    "CannikinPolicy",
+    "StaticPolicy",
+    "FairSharePolicy",
+    "make_policy",
+    "make_partition_policy",
+    "drive_partition_policy",
+    "ClusterRuntime",
+    "JobHandle",
+    "JobState",
+    "ReconcileRecord",
+    "drift_spec",
+    "Trace",
+    "TraceReport",
+    "replay",
+    "compare_policies",
+    "synthetic_trace",
+    "format_summary",
+]

@@ -1,0 +1,463 @@
+"""ClusterRuntime: the event-driven reconcile loop over scheduler,
+controller, and simulator.
+
+The paper's Cannikin system is a *runtime*: it observes steps, refits the
+performance model, re-plans batch sizes, and reallocates nodes as jobs and
+hardware come and go.  :class:`ClusterRuntime` is that loop as one object:
+
+* events (:mod:`repro.runtime.events`) enter a single queue and are
+  reconciled deterministically in ``(time, post-order)`` order;
+* each event maps onto exactly one incremental entry point of the active
+  allocation :class:`~repro.runtime.policy.Policy` (for ``cannikin``, the
+  incremental :class:`~repro.core.scheduler.Scheduler` — cached rows and
+  warm bracket seeds make every event an incremental re-allocation, never
+  a cold solve);
+* the resulting :class:`~repro.core.scheduler.Allocation` is pushed down
+  to per-job :class:`JobHandle` lifecycle objects, each owning its own
+  :class:`~repro.core.controller.CannikinController` (the paper's elastic
+  ``add_nodes``/``remove_nodes`` reconfiguration runs on every node-set
+  change) and a per-job :class:`~repro.core.simulator.SimulatedCluster`
+  built from the job's own ground-truth node models;
+* :meth:`ClusterRuntime.advance` steps every running job's epoch loop
+  (plan → simulate → observe), so a replayed trace yields both allocation
+  decisions *and* simulated training behaviour (bootstrap → optperf,
+  EpochPlans, ControllerStats).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.controller import CannikinController, ControllerStats, EpochPlan
+from repro.core.scheduler import Allocation, JobSpec
+from repro.core.simulator import NodeProfile, SimulatedCluster, drift_model
+from repro.runtime.events import (
+    Event,
+    JobArrival,
+    JobCompletion,
+    ModelRefit,
+    NodeJoin,
+    NodeLeave,
+    Preemption,
+    describe,
+)
+from repro.runtime.policy import Policy, make_policy
+
+__all__ = [
+    "JobState",
+    "JobHandle",
+    "ReconcileRecord",
+    "ClusterRuntime",
+    "drift_spec",
+]
+
+
+class JobState:
+    """Job lifecycle: submit → PENDING → RUNNING ⇄ PREEMPTED → DONE."""
+
+    PENDING = "pending"       # submitted, currently holds no nodes
+    RUNNING = "running"       # holds >= 1 node
+    PREEMPTED = "preempted"   # pulled off the cluster; resumable
+    DONE = "done"             # completed; terminal
+
+
+def drift_spec(spec: JobSpec, rel: float, seed: int) -> JobSpec:
+    """A job spec whose node coefficients drifted by ~``rel`` (the seeded
+    lognormal jitter of :func:`repro.core.simulator.drift_model`) — the
+    deterministic payload behind :class:`ModelRefit` events."""
+    drifted = drift_model(spec.full_model, rel, seed)
+    return dataclasses.replace(spec, node_models=drifted.nodes)
+
+
+class JobHandle:
+    """Lifecycle object for one submitted job.
+
+    Owns the job's :class:`CannikinController` (created when the job first
+    receives nodes; *kept* across preemption and node churn so learned
+    models survive, exactly the paper's §6 elastic semantics) and a
+    ground-truth :class:`SimulatedCluster` over the job's currently
+    assigned nodes (built from the job's own ``node_models`` — per-job
+    heterogeneity included).  Surfaces :class:`EpochPlan`s and
+    :class:`ControllerStats` for observability.
+    """
+
+    def __init__(
+        self,
+        spec: JobSpec,
+        *,
+        submitted_at: float = 0.0,
+        noise: float = 0.0,
+        seed: int = 0,
+    ) -> None:
+        self.spec = spec
+        self.state = JobState.PENDING
+        self.nodes: Tuple[int, ...] = ()
+        self.controller: Optional[CannikinController] = None
+        self.submitted_at = submitted_at
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.epochs_run = 0
+        self.sim_time = 0.0
+        self.reallocations = 0
+        self.preemptions = 0
+        self._ctl_nodes: Tuple[int, ...] = ()  # node ids behind controller idx 0..n-1
+        self._sim: Optional[SimulatedCluster] = None
+        self._noise = noise
+        self._seed = seed
+
+    # -- observability ---------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def stats(self) -> Optional[ControllerStats]:
+        return self.controller.stats if self.controller is not None else None
+
+    @property
+    def last_plan(self) -> Optional[EpochPlan]:
+        return self.controller.last_plan if self.controller is not None else None
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"JobHandle({self.name!r}, state={self.state}, nodes={self.nodes}, "
+            f"epochs={self.epochs_run})"
+        )
+
+    # -- reconcile surface (driven by ClusterRuntime) --------------------
+
+    def _new_controller(self, n: int) -> CannikinController:
+        # Trace jobs train at the spec's fixed total batch: the runtime
+        # optimizes the *split* (OptPerf partition) and the allocation;
+        # total-batch adaptivity needs real gradients (HeteroTrainer).
+        return CannikinController(
+            n,
+            batch_candidates=[self.spec.total_batch],
+            ref_batch=self.spec.total_batch,
+            adaptive=False,
+        )
+
+    def set_nodes(self, nodes: Sequence[int], *, now: float = 0.0) -> None:
+        """Apply a new node assignment, resizing the controller elastically.
+
+        Node ids kept across the change keep their fitted models
+        (``remove_nodes`` semantics); new ids bootstrap for two epochs
+        (``add_nodes``).  Controller index ``i`` always corresponds to
+        ``self._ctl_nodes[i]``; the per-job simulator follows that order.
+        """
+        nodes = tuple(int(n) for n in nodes)
+        if nodes == self.nodes:
+            return
+        self.reallocations += 1
+        self.nodes = nodes
+        if not nodes:
+            self._sim = None
+            if self.state == JobState.RUNNING:
+                self.state = JobState.PENDING
+            return
+        new_set = set(nodes)
+        if self.controller is None:
+            self.controller = self._new_controller(len(nodes))
+            self._ctl_nodes = nodes
+        else:
+            old = self._ctl_nodes
+            dropped_idx = [i for i, nid in enumerate(old) if nid not in new_set]
+            if old and len(dropped_idx) == len(old):
+                # Total replacement: nothing learned carries over.
+                self.controller = self._new_controller(len(nodes))
+                self._ctl_nodes = nodes
+            else:
+                if dropped_idx:
+                    self.controller.remove_nodes(dropped_idx)
+                kept = tuple(nid for nid in old if nid in new_set)
+                added = tuple(nid for nid in nodes if nid not in set(old))
+                if added:
+                    self.controller.add_nodes(len(added))
+                self._ctl_nodes = kept + added
+        self._rebuild_sim()
+        if self.state in (JobState.PENDING, JobState.PREEMPTED):
+            self.state = JobState.RUNNING
+            if self.started_at is None:
+                self.started_at = now
+
+    def _rebuild_sim(self) -> None:
+        """Per-job ground truth over the currently held nodes: the job's own
+        fitted/true node models converted back to timing profiles."""
+        profiles = []
+        for nid in self._ctl_nodes:
+            m = self.spec.node_models[nid]
+            profiles.append(
+                NodeProfile(name=f"{self.name}:n{nid}", q=m.q, s=m.s, k=m.k, m=m.m)
+            )
+        self._sim = SimulatedCluster(
+            profiles,
+            self.spec.comm,
+            noise=self._noise,
+            seed=self._seed + self.reallocations,
+        )
+
+    def apply_refit(self, spec: JobSpec) -> None:
+        """Swap in a refreshed spec (ModelRefit): the ground truth drifts;
+        the controller keeps its fitters and re-learns from the next
+        epoch's measurements — the per-epoch OLS loop of §4.5."""
+        if spec.name != self.name:
+            raise ValueError(f"refit spec {spec.name!r} does not match {self.name!r}")
+        self.spec = spec
+        if self.nodes:
+            self._rebuild_sim()
+
+    def preempt(self) -> None:
+        self.state = JobState.PREEMPTED
+        self.preemptions += 1
+        self.nodes = ()
+        self._sim = None
+
+    def finish(self, now: float) -> None:
+        self.state = JobState.DONE
+        self.finished_at = now
+        self.nodes = ()
+        self._sim = None
+
+    # -- epoch loop ------------------------------------------------------
+
+    def advance(self, epochs: int = 1, *, steps: int = 4) -> List[EpochPlan]:
+        """Run ``epochs`` plan → simulate → observe cycles on the held
+        nodes.  No-op unless RUNNING."""
+        if self.state != JobState.RUNNING or self._sim is None:
+            return []
+        assert self.controller is not None
+        plans = []
+        for _ in range(epochs):
+            plan = self.controller.plan_epoch()
+            t, ms = self._sim.run_epoch(list(plan.batches), steps)
+            self.controller.observe_epoch(ms)
+            self.sim_time += t
+            self.epochs_run += 1
+            plans.append(plan)
+        return plans
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconcileRecord:
+    """One reconcile step: the event, what the policy decided, and the
+    aggregate score — the trace log's unit entry."""
+
+    time: float
+    event: Event
+    allocation: Allocation
+
+    @property
+    def aggregate_goodput(self) -> float:
+        return self.allocation.aggregate_goodput
+
+    @property
+    def aggregate_fraction(self) -> float:
+        return self.allocation.aggregate_fraction
+
+    @property
+    def label(self) -> str:
+        return describe(self.event)
+
+
+class ClusterRuntime:
+    """The single front door: an event-driven cluster runtime.
+
+    >>> rt = ClusterRuntime(8, policy="cannikin")
+    >>> handle = rt.submit(spec)            # JobArrival at rt.clock
+    >>> rt.run()                            # reconcile queued events
+    >>> rt.advance(epochs=2)                # step running jobs' epoch loops
+    >>> rt.allocation.aggregate_goodput
+
+    ``policy`` is an allocation-policy name (``cannikin`` / ``static`` /
+    ``fair-share``) or a :class:`Policy` instance; ``engine`` selects the
+    stacked-solver engine for the Cannikin policy.  ``noise``/``seed``
+    configure the per-job measurement simulators.
+    """
+
+    def __init__(
+        self,
+        n_nodes: int,
+        *,
+        policy: Union[str, Policy] = "cannikin",
+        engine: str = "batched",
+        noise: float = 0.0,
+        seed: int = 0,
+    ) -> None:
+        self.n_nodes = n_nodes
+        self.policy: Policy = (
+            make_policy(policy, n_nodes, engine=engine)
+            if isinstance(policy, str)
+            else policy
+        )
+        self.handles: Dict[str, JobHandle] = {}
+        self.clock = 0.0
+        self.allocation = Allocation({}, {}, {})
+        self.records: List[ReconcileRecord] = []
+        self.down_nodes: set = set()
+        self._noise = noise
+        self._seed = seed
+        self._queue: List[Tuple[float, int, Event]] = []
+        self._seq = itertools.count()
+
+    # -- event intake ----------------------------------------------------
+
+    def post(self, event: Event) -> None:
+        """Enqueue an event; reconciled by :meth:`step`/:meth:`run` in
+        ``(time, post-order)`` order."""
+        heapq.heappush(self._queue, (event.time, next(self._seq), event))
+
+    def _get_or_create_handle(self, spec: JobSpec, submitted_at: float) -> JobHandle:
+        handle = self.handles.get(spec.name)
+        if handle is None:
+            handle = JobHandle(
+                spec,
+                submitted_at=submitted_at,
+                noise=self._noise,
+                seed=self._seed + len(self.handles),
+            )
+            self.handles[spec.name] = handle
+        return handle
+
+    def submit(self, spec: JobSpec, *, at: Optional[float] = None) -> JobHandle:
+        """Create (or fetch) the job's handle and post its arrival."""
+        when = self.clock if at is None else at
+        handle = self._get_or_create_handle(spec, when)
+        self.post(JobArrival(time=when, spec=spec))
+        return handle
+
+    def complete(self, name: str, *, at: Optional[float] = None) -> None:
+        self.post(JobCompletion(time=self.clock if at is None else at, job=name))
+
+    def preempt(self, name: str, *, at: Optional[float] = None) -> None:
+        self.post(Preemption(time=self.clock if at is None else at, job=name))
+
+    def refit(
+        self, name: str, *, rel: float = 0.1, seed: int = 0, at: Optional[float] = None
+    ) -> None:
+        self.post(
+            ModelRefit(time=self.clock if at is None else at, job=name, rel=rel, seed=seed)
+        )
+
+    def node_leave(self, nodes: Sequence[int], *, at: Optional[float] = None) -> None:
+        self.post(NodeLeave(time=self.clock if at is None else at, nodes=tuple(nodes)))
+
+    def node_join(self, nodes: Sequence[int], *, at: Optional[float] = None) -> None:
+        self.post(NodeJoin(time=self.clock if at is None else at, nodes=tuple(nodes)))
+
+    @property
+    def pending_events(self) -> int:
+        return len(self._queue)
+
+    # -- reconcile loop --------------------------------------------------
+
+    def step(self) -> Optional[ReconcileRecord]:
+        """Reconcile the earliest queued event; returns its record (None if
+        the queue is empty)."""
+        if not self._queue:
+            return None
+        t, _, event = heapq.heappop(self._queue)
+        self.clock = max(self.clock, t)
+        self.allocation = self._apply(event)
+        self._apply_allocation(self.allocation)
+        record = ReconcileRecord(time=self.clock, event=event, allocation=self.allocation)
+        self.records.append(record)
+        return record
+
+    def run(self) -> List[ReconcileRecord]:
+        """Drain the event queue; returns the records appended."""
+        start = len(self.records)
+        while self._queue:
+            self.step()
+        return self.records[start:]
+
+    def advance(self, epochs: int = 1, *, steps: int = 4) -> None:
+        """Step every RUNNING job's epoch loop ``epochs`` times."""
+        for handle in self.handles.values():
+            handle.advance(epochs, steps=steps)
+
+    # -- event dispatch --------------------------------------------------
+
+    def _handle(self, name: str) -> JobHandle:
+        try:
+            return self.handles[name]
+        except KeyError:
+            raise KeyError(f"unknown job {name!r}") from None
+
+    @staticmethod
+    def _scheduled(handle: JobHandle) -> bool:
+        """Whether the handle's job is currently known to the allocation
+        policy (arrival adds it; preemption/completion remove it)."""
+        return handle.state in (JobState.PENDING, JobState.RUNNING)
+
+    def _apply(self, event: Event) -> Allocation:
+        if isinstance(event, JobArrival):
+            spec = event.spec
+            handle = self._get_or_create_handle(spec, self.clock)
+            if handle.state == JobState.DONE:
+                raise ValueError(f"job {spec.name!r} already completed")
+            if handle.state == JobState.PREEMPTED:
+                handle.state = JobState.PENDING  # resume
+            handle.spec = spec
+            return self.policy.add_job(spec)
+        if isinstance(event, JobCompletion):
+            handle = self._handle(event.job)
+            # A preempted job holds no nodes and is unknown to the policy:
+            # completing (cancelling) it only closes the handle.
+            alloc = (
+                self.policy.remove_job(event.job)
+                if self._scheduled(handle)
+                else self.allocation
+            )
+            handle.finish(self.clock)
+            return alloc
+        if isinstance(event, Preemption):
+            handle = self._handle(event.job)
+            alloc = (
+                self.policy.remove_job(event.job)
+                if self._scheduled(handle)
+                else self.allocation  # idempotent: already off the cluster
+            )
+            handle.preempt()
+            return alloc
+        if isinstance(event, NodeLeave):
+            self.down_nodes |= set(event.nodes)
+            return self.policy.node_leave(event.nodes)
+        if isinstance(event, NodeJoin):
+            self.down_nodes -= set(event.nodes)
+            return self.policy.node_join(event.nodes)
+        if isinstance(event, ModelRefit):
+            handle = self._handle(event.job)
+            new_spec = event.spec or drift_spec(handle.spec, event.rel, event.seed)
+            # Policy first: if it rejects (e.g. unknown job), the handle
+            # must not be left half-mutated.  A preempted job refits its
+            # handle only — the refreshed spec takes effect on resume.
+            alloc = (
+                self.policy.update_job(new_spec)
+                if self._scheduled(handle)
+                else self.allocation
+            )
+            handle.apply_refit(new_spec)
+            return alloc
+        raise TypeError(f"unknown event type {type(event).__name__}")
+
+    def _apply_allocation(self, alloc: Allocation) -> None:
+        for name, handle in self.handles.items():
+            if handle.state in (JobState.PENDING, JobState.RUNNING):
+                handle.set_nodes(alloc.assignment.get(name, ()), now=self.clock)
+
+    # -- observability ---------------------------------------------------
+
+    def jobs(self, *states: str) -> List[JobHandle]:
+        """Handles, optionally filtered by state(s)."""
+        if not states:
+            return list(self.handles.values())
+        return [h for h in self.handles.values() if h.state in states]
+
+    def counters(self) -> Dict[str, int]:
+        """The allocation policy's solve/reuse counters ({} for policies
+        without them)."""
+        fn = getattr(self.policy, "counters", None)
+        return fn() if callable(fn) else {}

@@ -1,0 +1,230 @@
+"""Trace building + replay: synthetic multi-job workloads over the runtime.
+
+A :class:`Trace` is an ordered bag of events (built fluently or passed
+in), replayable through a fresh :class:`ClusterRuntime` per policy — the
+Pollux/Sia-style cluster simulation: job arrivals and departures, node
+churn, model refits, preemptions, with simulated training epochs between
+events.  :func:`compare_policies` replays one trace under every
+allocation policy and returns comparable :class:`TraceReport`s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.scheduler import JobSpec, random_jobs
+from repro.runtime.events import (
+    Event,
+    JobArrival,
+    JobCompletion,
+    ModelRefit,
+    NodeJoin,
+    NodeLeave,
+    Preemption,
+    describe,
+)
+from repro.runtime.runtime import ClusterRuntime, ReconcileRecord
+
+__all__ = [
+    "Trace",
+    "TraceReport",
+    "replay",
+    "compare_policies",
+    "synthetic_trace",
+    "format_summary",
+]
+
+
+class Trace:
+    """Fluent builder over the event alphabet.
+
+    >>> trace = (Trace()
+    ...          .arrive(spec_a, at=0.0)
+    ...          .arrive(spec_b, at=1.0)
+    ...          .complete("a", at=3.0)
+    ...          .node_leave([7], at=4.0))
+
+    Events are immutable and the builder holds no runtime state, so one
+    trace replays under any number of runtimes/policies.
+    """
+
+    def __init__(self, events: Sequence[Event] = ()) -> None:
+        self.events: List[Event] = list(events)
+
+    def post(self, event: Event) -> "Trace":
+        self.events.append(event)
+        return self
+
+    def arrive(self, spec: JobSpec, at: float = 0.0) -> "Trace":
+        return self.post(JobArrival(time=at, spec=spec))
+
+    def complete(self, job: str, at: float) -> "Trace":
+        return self.post(JobCompletion(time=at, job=job))
+
+    def preempt(self, job: str, at: float) -> "Trace":
+        return self.post(Preemption(time=at, job=job))
+
+    def refit(self, job: str, at: float, *, rel: float = 0.1, seed: int = 0) -> "Trace":
+        return self.post(ModelRefit(time=at, job=job, rel=rel, seed=seed))
+
+    def node_leave(self, nodes: Sequence[int], at: float) -> "Trace":
+        return self.post(NodeLeave(time=at, nodes=tuple(nodes)))
+
+    def node_join(self, nodes: Sequence[int], at: float) -> "Trace":
+        return self.post(NodeJoin(time=at, nodes=tuple(nodes)))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+
+@dataclasses.dataclass
+class TraceReport:
+    """What one policy did with one trace — the comparable unit."""
+
+    policy: str
+    records: List[ReconcileRecord]
+    runtime: ClusterRuntime
+
+    @property
+    def aggregate_goodput(self) -> float:
+        return self.runtime.allocation.aggregate_goodput
+
+    @property
+    def aggregate_fraction(self) -> float:
+        return self.runtime.allocation.aggregate_fraction
+
+    @property
+    def job_states(self) -> Dict[str, str]:
+        return {name: h.state for name, h in self.runtime.handles.items()}
+
+    @property
+    def epochs(self) -> Dict[str, int]:
+        return {name: h.epochs_run for name, h in self.runtime.handles.items()}
+
+    def summary(self) -> Dict[str, object]:
+        """JSON-able one-policy summary (assignment, scores, counters)."""
+        return {
+            "policy": self.policy,
+            "events": [describe(r.event) for r in self.records],
+            "aggregate_goodput": self.aggregate_goodput,
+            "aggregate_fraction": self.aggregate_fraction,
+            "assignment": {
+                k: list(v) for k, v in self.runtime.allocation.assignment.items()
+            },
+            "job_states": self.job_states,
+            "epochs": self.epochs,
+            "counters": self.runtime.counters(),
+        }
+
+
+def replay(
+    trace: Trace,
+    n_nodes: int,
+    *,
+    policy: str = "cannikin",
+    engine: str = "batched",
+    epochs_per_event: int = 0,
+    steps: int = 4,
+    noise: float = 0.0,
+    seed: int = 0,
+) -> TraceReport:
+    """Replay ``trace`` through a fresh :class:`ClusterRuntime`.
+
+    Events reconcile in time order; with ``epochs_per_event > 0`` every
+    running job additionally advances that many simulated training epochs
+    after each event (plan → simulate → observe — so controllers learn,
+    bootstrap, and reach the optperf phase mid-trace)."""
+    rt = ClusterRuntime(n_nodes, policy=policy, engine=engine, noise=noise, seed=seed)
+    for event in trace:
+        rt.post(event)
+    records: List[ReconcileRecord] = []
+    while rt.pending_events:
+        record = rt.step()
+        assert record is not None
+        if epochs_per_event:
+            rt.advance(epochs_per_event, steps=steps)
+        records.append(record)
+    return TraceReport(policy=policy, records=records, runtime=rt)
+
+
+def compare_policies(
+    trace: Trace,
+    n_nodes: int,
+    *,
+    policies: Sequence[str] = ("cannikin", "static", "fair-share"),
+    engine: str = "batched",
+    epochs_per_event: int = 0,
+    steps: int = 4,
+    noise: float = 0.0,
+    seed: int = 0,
+) -> Dict[str, TraceReport]:
+    """Replay one trace under several allocation policies (fresh runtime
+    each) and return the per-policy reports — baselines and Cannikin
+    become comparable in one run."""
+    return {
+        name: replay(
+            trace,
+            n_nodes,
+            policy=name,
+            engine=engine,
+            epochs_per_event=epochs_per_event,
+            steps=steps,
+            noise=noise,
+            seed=seed,
+        )
+        for name in policies
+    }
+
+
+def synthetic_trace(
+    n_jobs: int = 3,
+    n_nodes: int = 12,
+    seed: int = 0,
+    *,
+    arrival_spacing: float = 1.0,
+    departure: bool = True,
+    node_leave: bool = True,
+    refit: bool = False,
+) -> Tuple[Trace, List[JobSpec]]:
+    """The canonical churn scenario over the seeded random job mix.
+
+    Jobs arrive ``arrival_spacing`` apart; optionally the first job departs
+    after the last arrival, one node fails after that, and the last job's
+    model is refit at the end — i.e. the acceptance scenario (arrivals,
+    one departure, one node leave) in one call.  Returns ``(trace, jobs)``
+    so callers can also drive the same jobs by hand."""
+    jobs = random_jobs(n_jobs, n_nodes, seed)
+    trace = Trace()
+    t = 0.0
+    for job in jobs:
+        trace.arrive(job, at=t)
+        t += arrival_spacing
+    if departure and n_jobs > 1:
+        trace.complete(jobs[0].name, at=t)
+        t += arrival_spacing
+    if node_leave and n_nodes > 1:
+        trace.node_leave([n_nodes - 1], at=t)
+        t += arrival_spacing
+    if refit:
+        trace.refit(jobs[-1].name, at=t, rel=0.2, seed=seed + 1)
+    return trace, jobs
+
+
+def format_summary(reports: Dict[str, TraceReport]) -> str:
+    """Fixed-width comparison table over :func:`compare_policies` output."""
+    lines = [
+        f"{'policy':<11} {'agg goodput':>12} {'agg fraction':>13} "
+        f"{'jobs':>5}  states"
+    ]
+    for name, rep in reports.items():
+        states = ",".join(
+            f"{job}:{state}" for job, state in sorted(rep.job_states.items())
+        )
+        lines.append(
+            f"{name:<11} {rep.aggregate_goodput:>12.1f} "
+            f"{rep.aggregate_fraction:>13.3f} {len(rep.job_states):>5}  {states}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,348 @@
+"""ClusterRuntime acceptance tests: the event-driven front door must be a
+faithful (and incremental) veneer over the scheduler/controller/simulator
+machinery it wraps."""
+import pytest
+
+from repro.core.scheduler import Scheduler, allocate, random_jobs
+from repro.runtime import (
+    ClusterRuntime,
+    JobState,
+    ModelRefit,
+    Trace,
+    compare_policies,
+    drift_spec,
+    make_policy,
+    replay,
+    synthetic_trace,
+)
+
+N_NODES = 12
+
+
+def _cold_solved_rows(jobs, n_nodes, down=()):
+    """Marginal rows a COLD full re-allocation of this job set solves (fresh
+    scheduler, no caches) — the baseline the incremental runtime must beat."""
+    sched = Scheduler(n_nodes)
+    for job in jobs:
+        sched._jobs[job.name] = job  # noqa: SLF001 (install without allocating)
+    sched._down = set(down)  # noqa: SLF001
+    sched.reallocate()
+    return sched.solved_rows
+
+
+# ---------------------------------------------------------------------------
+# acceptance: trace replay == hand-driven incremental Scheduler, warm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_trace_replay_matches_hand_driven_scheduler(seed):
+    """The seeded 3-job trace (arrivals, one departure, one node leave)
+    through ``policy="cannikin"`` produces allocations identical to driving
+    the incremental Scheduler by hand — events map 1:1 onto its entry
+    points, so goodputs and counters agree exactly."""
+    trace, jobs = synthetic_trace(3, N_NODES, seed=seed)
+    report = replay(trace, N_NODES, policy="cannikin")
+
+    sched = Scheduler(N_NODES)
+    hand = [
+        sched.add_job(jobs[0]),
+        sched.add_job(jobs[1]),
+        sched.add_job(jobs[2]),
+        sched.remove_job(jobs[0].name),
+        sched.node_leave([N_NODES - 1]),
+    ]
+    assert len(report.records) == len(hand)
+    for record, expected in zip(report.records, hand):
+        assert record.allocation.assignment == expected.assignment
+        assert record.allocation.goodputs == expected.goodputs
+        assert record.allocation.fractions == expected.fractions
+    rt_counters = report.runtime.counters()
+    assert rt_counters["warm_rounds"] == sched.warm_rounds
+    assert rt_counters["solved_rows"] == sched.solved_rows
+    assert rt_counters["cached_rows"] == sched.cached_rows
+
+
+def test_trace_replay_is_incremental_never_cold():
+    """After the first event every reconcile reuses cached rows / warm
+    seeds: each event solves strictly fewer rows than a cold full re-run of
+    the same post-event job set would."""
+    trace, jobs = synthetic_trace(3, N_NODES, seed=0)
+    rt = ClusterRuntime(N_NODES, policy="cannikin")
+    for event in trace:
+        rt.post(event)
+
+    live = []
+    down = set()
+    deltas = []
+    colds = []
+    prev_solved = 0
+    while rt.pending_events:
+        record = rt.step()
+        label = record.label
+        if label.startswith("arrive"):
+            live.append(next(j for j in jobs if f"({j.name})" in label))
+        elif label.startswith("complete"):
+            live = [j for j in live if f"({j.name})" not in label]
+        elif label.startswith("node_leave"):
+            down.add(N_NODES - 1)
+        solved = rt.counters()["solved_rows"]
+        deltas.append(solved - prev_solved)
+        prev_solved = solved
+        colds.append(_cold_solved_rows(live, N_NODES, down))
+
+    # Every post-first event re-solved fewer rows than a cold run would.
+    for delta, cold in zip(deltas[1:], colds[1:]):
+        assert delta < cold, (delta, cold)
+    counters = rt.counters()
+    assert counters["cached_rows"] > 0          # trajectories replayed
+    assert counters["warm_rounds"] > 0          # diverged rounds warm-seeded
+    # Cold block solves only ever happen for a job's *first* rows (no warm
+    # seeds exist yet) — never once per event per job.
+    assert counters["cold_rounds"] <= len(jobs)
+
+
+def test_node_leave_keeps_caches_and_excludes_node():
+    """Node churn must not cold-restart the scheduler: the row layout is
+    preserved, the down node is simply never assigned, and a rejoin restores
+    it — all incrementally."""
+    jobs = random_jobs(3, 8, seed=3)
+    rt = ClusterRuntime(8, policy="cannikin")
+    for i, job in enumerate(jobs):
+        rt.submit(job, at=float(i))
+    rt.run()
+    before = rt.counters()["solved_rows"]
+
+    rt.node_leave([7], at=10.0)
+    rt.run()
+    assert all(7 not in ids for ids in rt.allocation.assignment.values())
+    assert rt.down_nodes == {7}
+    leave_delta = rt.counters()["solved_rows"] - before
+    assert leave_delta < _cold_solved_rows(jobs, 8)
+
+    rt.node_join([7], at=11.0)
+    rt.run()
+    assert rt.down_nodes == set()
+    # Rejoin replays the original trajectory entirely from cache.
+    assert rt.allocation.assignment == allocate(jobs, 8).assignment
+
+
+# ---------------------------------------------------------------------------
+# policy comparison
+# ---------------------------------------------------------------------------
+
+
+def test_policies_run_same_trace_comparably():
+    trace, jobs = synthetic_trace(3, N_NODES, seed=0)
+    reports = compare_policies(trace, N_NODES)
+    assert set(reports) == {"cannikin", "static", "fair-share"}
+    for name, rep in reports.items():
+        assert rep.aggregate_goodput > 0, name
+        assert rep.aggregate_fraction > 0, name
+        # disjoint assignments, no down nodes
+        assigned = [n for ids in rep.runtime.allocation.assignment.values() for n in ids]
+        assert len(assigned) == len(set(assigned)), name
+        assert N_NODES - 1 not in assigned, name  # left at the end of the trace
+        assert rep.job_states[jobs[0].name] == JobState.DONE
+        summary = rep.summary()
+        assert summary["policy"] == name
+    # The heterogeneity-aware allocator wins the fairness objective it
+    # optimizes on this seeded mix.
+    assert (
+        reports["cannikin"].aggregate_fraction
+        >= max(r.aggregate_fraction for r in reports.values()) - 1e-9
+    )
+
+
+def test_replay_is_deterministic():
+    trace, _ = synthetic_trace(3, 10, seed=5)
+    a = replay(trace, 10, policy="cannikin", epochs_per_event=1, steps=2)
+    b = replay(trace, 10, policy="cannikin", epochs_per_event=1, steps=2)
+    assert a.summary() == b.summary()
+
+
+def test_static_and_fair_share_assignment_shapes():
+    jobs = random_jobs(2, 8, seed=1)
+    static = make_policy("static", 8)
+    fair = make_policy("fair-share", 8)
+    for job in jobs:
+        s_alloc = static.add_job(job)
+        f_alloc = fair.add_job(job)
+    # static: contiguous equal blocks in arrival order
+    assert s_alloc.assignment[jobs[0].name] == (0, 1, 2, 3)
+    assert s_alloc.assignment[jobs[1].name] == (4, 5, 6, 7)
+    # fair-share: round-robin deal across the id range
+    assert f_alloc.assignment[jobs[0].name] == (0, 2, 4, 6)
+    assert f_alloc.assignment[jobs[1].name] == (1, 3, 5, 7)
+    # node churn respected by baselines too
+    s_alloc = static.node_leave([0])
+    assert all(0 not in ids for ids in s_alloc.assignment.values())
+    with pytest.raises(ValueError):
+        make_policy("optimal", 8)
+
+
+# ---------------------------------------------------------------------------
+# job lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_job_lifecycle_preempt_resume_complete():
+    jobs = random_jobs(2, 6, seed=2)
+    rt = ClusterRuntime(6, policy="cannikin")
+    h0 = rt.submit(jobs[0], at=0.0)
+    h1 = rt.submit(jobs[1], at=1.0)
+    assert h0.state == JobState.PENDING  # not reconciled yet
+    rt.run()
+    assert h0.state == JobState.RUNNING and h1.state == JobState.RUNNING
+    assert h0.nodes and h1.nodes
+
+    rt.preempt(jobs[1].name, at=2.0)
+    rt.run()
+    assert h1.state == JobState.PREEMPTED
+    assert h1.nodes == ()
+    assert h1.preemptions == 1
+    # Preempted job's nodes went back to the pool.
+    assert len(rt.allocation.assignment[jobs[0].name]) == 6
+
+    rt.submit(jobs[1], at=3.0)  # resume
+    rt.run()
+    assert h1.state == JobState.RUNNING
+    assert rt.handles[jobs[1].name] is h1  # same handle, models retained
+
+    rt.complete(jobs[1].name, at=4.0)
+    rt.run()
+    assert h1.state == JobState.DONE
+    assert h1.finished_at == 4.0
+    with pytest.raises(ValueError):
+        rt.submit(jobs[1], at=5.0)
+        rt.run()
+    with pytest.raises(KeyError):
+        rt.complete("ghost", at=6.0)
+        rt.run()
+
+
+def test_preempted_job_can_complete_refit_and_repreempt():
+    """Lifecycle edges off the cluster: a preempted job is unknown to the
+    policy, so completing (cancelling) it, refitting it, or preempting it
+    again must not touch the policy — and must not crash or half-mutate."""
+    jobs = random_jobs(3, 6, seed=12)
+    rt = ClusterRuntime(6, policy="cannikin")
+    for job in jobs:
+        rt.submit(job)
+    rt.run()
+
+    rt.preempt(jobs[0].name, at=1.0)
+    rt.run()
+    h0 = rt.handles[jobs[0].name]
+    assert h0.state == JobState.PREEMPTED
+    alloc_after_preempt = rt.allocation
+
+    # Refit while preempted: handle spec refreshed, allocation untouched.
+    rt.refit(jobs[0].name, rel=0.3, seed=3, at=2.0)
+    rt.run()
+    assert h0.spec == drift_spec(jobs[0], 0.3, 3)
+    assert rt.allocation is alloc_after_preempt
+
+    # Double preemption is idempotent.
+    rt.preempt(jobs[0].name, at=3.0)
+    rt.run()
+    assert h0.state == JobState.PREEMPTED and h0.preemptions == 2
+
+    # Cancelling the preempted job closes the handle without a policy call.
+    rt.complete(jobs[0].name, at=4.0)
+    rt.run()
+    assert h0.state == JobState.DONE
+    assert rt.allocation is alloc_after_preempt
+    # The remaining jobs' allocation is still the live two-job split.
+    assert set(rt.allocation.assignment) == {jobs[1].name, jobs[2].name}
+
+
+def test_advance_runs_controllers_to_optperf():
+    """JobHandles own real CannikinControllers: epochs bootstrap, fit, and
+    reach the optperf phase; stats and plans are surfaced."""
+    jobs = random_jobs(2, 6, seed=4)
+    rt = ClusterRuntime(6, policy="cannikin")
+    for job in jobs:
+        rt.submit(job)
+    rt.run()
+    rt.advance(epochs=3, steps=2)
+    for handle in rt.jobs(JobState.RUNNING):
+        assert handle.epochs_run == 3
+        assert handle.sim_time > 0
+        assert handle.last_plan is not None
+        if len(handle.nodes) > 1:
+            assert handle.last_plan.phase == "optperf"
+        else:
+            # A 1-node job can never observe two distinct batch sizes at a
+            # fixed total, so it stays in bootstrap — whose plan (the whole
+            # batch on the one node) is already optimal.
+            assert handle.last_plan.batches == (handle.spec.total_batch,)
+        assert handle.last_plan.total_batch == handle.spec.total_batch
+        assert len(handle.last_plan.batches) == len(handle.nodes)
+        assert handle.stats.epochs_planned == 3
+
+
+def test_reallocation_resizes_controller_elastically():
+    """When an event changes a job's node set, its controller keeps fitted
+    models for surviving nodes (remove_nodes) and bootstraps new ones
+    (add_nodes) — the paper's §6 elastic semantics, automated."""
+    jobs = random_jobs(2, 6, seed=6)
+    rt = ClusterRuntime(6, policy="cannikin")
+    h0 = rt.submit(jobs[0], at=0.0)
+    rt.run()
+    rt.advance(epochs=3, steps=2)          # job0 alone: learn all 6 nodes
+    assert h0.last_plan.phase == "optperf"
+    assert len(h0.nodes) == 6
+
+    rt.submit(jobs[1], at=1.0)             # arrival shrinks job0's set
+    rt.run()
+    assert 0 < len(h0.nodes) < 6
+    rt.advance(epochs=1, steps=2)
+    # Surviving nodes kept their models: no re-bootstrap for job0.
+    assert h0.last_plan.phase == "optperf"
+    assert len(h0.last_plan.batches) == len(h0.nodes)
+
+
+def test_model_refit_event_matches_update_job():
+    """ModelRefit drives Scheduler.update_job with a deterministic drifted
+    spec: stale caches are dropped, and the post-event allocation equals a
+    cold allocate over the refreshed specs."""
+    jobs = random_jobs(3, 10, seed=8)
+    rt = ClusterRuntime(10, policy="cannikin")
+    for job in jobs:
+        rt.submit(job)
+    rt.run()
+    rt.post(ModelRefit(time=5.0, job=jobs[0].name, rel=0.5, seed=9))
+    rt.run()
+    refitted = drift_spec(jobs[0], 0.5, 9)
+    expected = allocate([refitted, jobs[1], jobs[2]], 10)
+    assert rt.allocation.assignment == expected.assignment
+    for name in expected.goodputs:
+        assert rt.allocation.goodputs[name] == pytest.approx(
+            expected.goodputs[name], rel=1e-12
+        )
+    assert rt.handles[jobs[0].name].spec == refitted
+
+
+# ---------------------------------------------------------------------------
+# trace builder
+# ---------------------------------------------------------------------------
+
+
+def test_trace_builder_event_order_and_reuse():
+    jobs = random_jobs(2, 6, seed=10)
+    trace = (
+        Trace()
+        .arrive(jobs[0], at=0.0)
+        .arrive(jobs[1], at=1.0)
+        .preempt(jobs[0].name, at=2.0)
+        .arrive(jobs[0], at=3.0)
+        .refit(jobs[1].name, at=4.0, rel=0.1, seed=1)
+        .complete(jobs[0].name, at=5.0)
+    )
+    assert len(trace) == 6
+    first = replay(trace, 6)
+    second = replay(trace, 6)  # traces are stateless: reusable
+    assert first.summary() == second.summary()
+    assert first.job_states[jobs[0].name] == JobState.DONE
+    assert first.job_states[jobs[1].name] == JobState.RUNNING

@@ -278,6 +278,139 @@ def test_allocate_rejects_duplicate_job_names():
 
 
 # ---------------------------------------------------------------------------
+# aggregate guards (empty / zero-node / NaN allocations)
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_guards_empty_and_nan():
+    """Empty and NaN-poisoned allocations aggregate to finite values, never
+    NaN — a zero-node or garbage-normalized job must not break the trace
+    summary arithmetic."""
+    empty = Allocation({}, {}, {})
+    assert empty.aggregate_fraction == 0.0
+    assert empty.aggregate_goodput == 0.0
+
+    nan = float("nan")
+    poisoned = Allocation(
+        assignment={"ok": (0, 1), "broken": ()},
+        goodputs={"ok": 10.0, "broken": nan},
+        fractions={"ok": 0.5, "broken": nan},
+    )
+    assert poisoned.aggregate_fraction == pytest.approx(0.5)
+    assert poisoned.aggregate_goodput == pytest.approx(10.0)
+    from repro.core.scheduler import aggregate_goodput
+
+    assert aggregate_goodput([], poisoned) == pytest.approx(10.0)
+    assert aggregate_goodput([], empty) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# node availability (down/drained nodes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["batched", "scalar"])
+def test_allocate_unavailable_nodes_excluded(engine):
+    jobs = random_jobs(3, 10, seed=61)
+    alloc = allocate(jobs, 10, engine=engine, unavailable=[0, 9])
+    assigned = {n for ids in alloc.assignment.values() for n in ids}
+    assert not assigned & {0, 9}
+    # Equivalent to the same jobs on the available sub-pool: masked engines
+    # still agree with each other.
+    other = allocate(jobs, 10, engine="scalar" if engine == "batched" else "batched",
+                     unavailable=[0, 9])
+    assert alloc.assignment == other.assignment
+    # Out-of-range ids must raise identically in every engine (negative ids
+    # would alias real rows in the array engine but not the scalar one).
+    for bad in ([-1], [10]):
+        with pytest.raises(ValueError):
+            allocate(jobs, 10, engine=engine, unavailable=bad)
+
+
+def test_scheduler_node_leave_join_incremental_and_correct():
+    """node_leave/node_join re-allocate incrementally (row layout and caches
+    preserved) and match a cold allocate with the same availability."""
+    jobs = random_jobs(3, 8, seed=71)
+    sched = Scheduler(8)
+    for job in jobs:
+        sched.add_job(job)
+    solved_before = sched.solved_rows
+
+    left = sched.node_leave([7])
+    assert all(7 not in ids for ids in left.assignment.values())
+    assert sched.down_nodes == (7,)
+    assert sched.available_nodes == 7
+    _goodputs_equal(left, allocate(jobs, 8, unavailable=[7]))
+    # Incremental: the leave re-run cost less than the three arrivals did.
+    assert sched.solved_rows - solved_before < solved_before
+    assert sched.cached_rows > 0
+
+    back = sched.node_join([7])
+    assert sched.down_nodes == ()
+    _goodputs_equal(back, allocate(jobs, 8))
+    with pytest.raises(ValueError):
+        sched.node_leave([8])
+
+
+# ---------------------------------------------------------------------------
+# bounded per-job cache eviction (FIFO) under long churn
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_cache_eviction_fifo_under_long_churn():
+    """Long arrival/departure sequences overflow the bounded per-job caches;
+    FIFO eviction must keep every cache at/under its limit while allocations
+    stay identical to a cold reallocate() — evicted entries are a perf
+    matter, never a correctness one."""
+    n_nodes, limit = 6, 4
+    pool = random_jobs(7, n_nodes, seed=81)
+    sched = Scheduler(n_nodes, cache_limit=limit)
+    live = {}
+    saw_full_cache = False
+    for step in range(40):
+        job = pool[step % len(pool)]
+        if job.name in live:
+            sched.remove_job(job.name)
+            del live[job.name]
+        else:
+            sched.add_job(job)
+            live[job.name] = job
+        for cache in list(sched._gain_cache.values()) + list(sched._take_cache.values()):
+            assert len(cache) <= limit
+            saw_full_cache = saw_full_cache or len(cache) == limit
+        if live and step % 5 == 0:
+            cold = allocate(list(live.values()), n_nodes)
+            assert sched.allocation.assignment == cold.assignment
+            for name in cold.goodputs:
+                assert sched.allocation.goodputs[name] == pytest.approx(
+                    cold.goodputs[name], rel=1e-12
+                )
+    # The churn really overflowed the bound (otherwise this test proves
+    # nothing about eviction).
+    assert saw_full_cache
+    assert live
+    final_cold = allocate(list(live.values()), n_nodes)
+    assert sched.reallocate().assignment == final_cold.assignment
+    with pytest.raises(ValueError):
+        Scheduler(4, cache_limit=0)
+
+
+def test_scheduler_cache_fifo_evicts_oldest_first():
+    """The bounded insert is FIFO: once a per-job cache is full, the oldest
+    trajectory key is the one dropped.  A solo job's greedy run inserts its
+    trajectory prefixes in take order — (), (a), (a, b), ... — so with a
+    limit of 2 only the two *longest* prefixes may survive."""
+    jobs = random_jobs(1, 6, seed=91)
+    sched = Scheduler(6, cache_limit=2)
+    sched.add_job(jobs[0])
+    cache = sched._gain_cache[jobs[0].name]
+    assert len(cache) == 2
+    lens = sorted(len(key) for key in cache)
+    assert lens[1] == lens[0] + 1   # the two most recent prefixes, in order
+    assert () not in cache          # the oldest (empty-set) key went first
+
+
+# ---------------------------------------------------------------------------
 # elastic controller
 # ---------------------------------------------------------------------------
 
@@ -330,3 +463,29 @@ def test_add_nodes_triggers_bootstrap():
         plan = ctrl.plan_epoch()
     assert plan.phase == "optperf"
     assert len(plan.batches) == 18
+
+
+@pytest.mark.parametrize("change", ["remove", "add"])
+def test_membership_change_evicts_device_coeff_export(change):
+    """Satellite regression: add_nodes/remove_nodes must evict the current
+    model's cached device-coefficient export — the orphaned membership's
+    stack must neither stay pinned on the device nor be reusable."""
+    pytest.importorskip("jax")
+    from repro.core import optperf_jax
+
+    if not optperf_jax.HAS_JAX:
+        pytest.skip("jax unavailable")
+    profiles, comm = cluster_B()
+    sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
+    ctrl = CannikinController(
+        sim.n, batch_candidates=[256], ref_batch=256, adaptive=False,
+        sweep_engine="jax",
+    )
+    _learn(ctrl, sim, epochs=3)
+    model = ctrl.cluster_model()  # prefetches the device export (jax engine)
+    assert any(key[0] == model for key in optperf_jax._DEVICE_COEFFS)
+    if change == "remove":
+        ctrl.remove_nodes([sim.n - 1])
+    else:
+        ctrl.add_nodes(1)
+    assert not any(key[0] == model for key in optperf_jax._DEVICE_COEFFS)
