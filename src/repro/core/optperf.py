@@ -73,6 +73,7 @@ __all__ = [
     "solve_optperf_algorithm1",
     "solve_optperf_waterfill",
     "solve_optperf_waterfill_subset",
+    "solve_optperf_waterfill_subsets",
     "solve_optperf_batch",
     "solve_optperf_stacked",
     "solve_optperf",
@@ -543,19 +544,33 @@ def _bisect(
     *,
     tol: float,
     max_iter: int,
+    freeze: bool = False,
 ) -> Tuple[np.ndarray, int]:
     """Standard simultaneous bisection; returns (t_star = hi, eval count).
     The upper-bracket invariant assigned(hi) >= B holds throughout: hi only
-    ever moves to midpoints verified >= B."""
+    ever moves to midpoints verified >= B.
+
+    ``freeze=True`` stops updating a row once *it* has converged instead of
+    halving it until every row converges.  Each frozen row then traces
+    exactly the (lo, hi) sequence a solo single-row solve of that row would
+    — the bit-identity contract of :func:`solve_optperf_waterfill_subsets`
+    rests on this.  The default (shared halving) is kept for the engines
+    whose emitted t_stars existing callers already depend on.
+    """
     evals = 0
     for _ in range(max_iter):
-        if np.all(hi - lo <= tol * np.maximum(1.0, np.abs(hi))):
+        done = hi - lo <= tol * np.maximum(1.0, np.abs(hi))
+        if done.all():
             break
         mid = 0.5 * (lo + hi)
         ge = _p_assigned(p, mid) >= totals
         evals += 1
-        hi = np.where(ge, mid, hi)
-        lo = np.where(ge, lo, mid)
+        if freeze:
+            hi = np.where(~done & ge, mid, hi)
+            lo = np.where(~done & ~ge, mid, lo)
+        else:
+            hi = np.where(ge, mid, hi)
+            lo = np.where(ge, lo, mid)
     return hi, evals
 
 
@@ -871,18 +886,10 @@ def solve_optperf_waterfill_subset(
     ids = np.asarray(node_ids, dtype=np.intp)
     if ids.size == 0:
         raise ValueError("need at least one node")
-    c = model.coeffs
     comm = model.comm
     comm.validate()
-    ks = c.ks[ids]
-    alphas = c.alphas[ids]
-    # Same vectorized k > 0, q >= 0 semantics as ClusterPerfModel.validate,
-    # applied to the subset (a bad node outside the subset must not reject
-    # an otherwise valid sub-cluster — and vice versa).
-    if not (bool(np.all(ks > 0)) and bool(np.all(alphas - ks >= 0))):
-        raise ValueError("ill-posed node model")
     p = _make_problem(
-        alphas, c.cs[ids], c.betas[ids], c.ds[ids], ks, c.ms[ids],
+        *_subset_problem_row(model, ids),
         comm.t_o, comm.t_u, comm.t_comm, comm.gamma, None,
     )
     totals = np.asarray([float(total_batch)])
@@ -896,6 +903,102 @@ def solve_optperf_waterfill_subset(
         bottleneck=tuple("compute" if m else "comm" for m in compute_mask[0]),
         method="waterfill",
     )
+
+
+def _subset_problem_row(
+    model: ClusterPerfModel, ids: np.ndarray
+) -> Tuple[np.ndarray, ...]:
+    """Gathered (alphas, cs, betas, ds, ks, ms) rows for one node subset —
+    THE shared gather+validation behind the solo and stacked subset solvers
+    (comm is validated by the caller, once per distinct model).
+
+    Validation applies the same vectorized k > 0, q >= 0 semantics as
+    ``ClusterPerfModel.validate`` to the subset only: a bad node outside
+    the subset must not reject an otherwise valid sub-cluster — and vice
+    versa."""
+    c = model.coeffs
+    ks = c.ks[ids]
+    alphas = c.alphas[ids]
+    if not (bool(np.all(ks > 0)) and bool(np.all(alphas - ks >= 0))):
+        raise ValueError("ill-posed node model")
+    return alphas, c.cs[ids], c.betas[ids], c.ds[ids], ks, c.ms[ids]
+
+
+def solve_optperf_waterfill_subsets(
+    models: Sequence[ClusterPerfModel],
+    node_id_sets: Sequence[Sequence[int]],
+    total_batches: Sequence[float],
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+) -> List[OptPerfSolution]:
+    """Batch of :func:`solve_optperf_waterfill_subset` calls as stacked
+    array solves — **bit-identical** to the scalar per-subset loop.
+
+    ``models[r]`` / ``node_id_sets[r]`` / ``total_batches[r]`` describe row
+    ``r`` (models may repeat; each row carries its model's own comm model as
+    a per-row column).  Rows are grouped by subset size and each group is
+    solved as one stacked water-fill — *without padding*, so every row's
+    feasible-batch reductions see exactly the floats the solo solve sees,
+    and with per-row frozen bisection (see :func:`_bisect`), so every row
+    traces the solo solve's bracket sequence exactly.  This is the
+    scheduler's chosen-set re-solve path: one stacked call per distinct
+    chosen-set size per ``allocate`` instead of one scalar solve per greedy
+    round, with the oracle-parity contract preserved bit-for-bit.
+
+    Raises :class:`ValueError` on any ill-posed row, exactly like the
+    scalar subset solver does for that row.
+    """
+    rows = len(node_id_sets)
+    if not (len(models) == rows == len(total_batches)):
+        raise ValueError("models, node_id_sets, total_batches length mismatch")
+    out: List[Optional[OptPerfSolution]] = [None] * rows
+    validated = set()
+    groups: dict = {}
+    for r in range(rows):
+        ids = np.asarray(node_id_sets[r], dtype=np.intp)
+        if ids.size == 0:
+            raise ValueError("need at least one node")
+        if float(total_batches[r]) <= 0:
+            raise ValueError("total batch must be positive")
+        if id(models[r].comm) not in validated:
+            models[r].comm.validate()
+            validated.add(id(models[r].comm))
+        groups.setdefault(int(ids.size), []).append((r, ids))
+    for m, members in groups.items():
+        g = len(members)
+        coeff_rows = [_subset_problem_row(models[r], ids) for r, ids in members]
+        stacked = [np.stack([cr[i] for cr in coeff_rows]) for i in range(6)]
+        col = lambda vals: np.asarray(vals, dtype=np.float64)[:, None]  # noqa: E731
+        comms = [models[r].comm for r, _ in members]
+        p = _make_problem(
+            *stacked,
+            col([cm.t_o for cm in comms]),
+            col([cm.t_u for cm in comms]),
+            col([cm.t_comm for cm in comms]),
+            col([cm.gamma for cm in comms]),
+            None,
+        )
+        totals = np.asarray([float(total_batches[r]) for r, _ in members])
+        lo0 = _p_lo0(p)
+        lo = np.broadcast_to(np.asarray(lo0, dtype=np.float64), totals.shape).copy()
+        hi, _ = _grow_bracket(p, totals, lo0, lo + 1.0)
+        t_star, _ = _bisect(p, totals, lo, hi, tol=tol, max_iter=max_iter, freeze=True)
+        batches, node_times = _finalize_batches(p, totals, t_star, tol=tol)
+        opt_perfs = node_times.max(axis=-1)
+        compute_mask = _p_compute_mask(p, batches)
+        for gi, (r, _) in enumerate(members):
+            out[r] = OptPerfSolution(
+                total_batch=float(totals[gi]),
+                opt_perf=float(opt_perfs[gi]),
+                batches=tuple(float(b) for b in batches[gi]),
+                bottleneck=tuple(
+                    "compute" if mk else "comm" for mk in compute_mask[gi]
+                ),
+                method="waterfill",
+            )
+    assert all(s is not None for s in out)
+    return out  # type: ignore[return-value]
 
 
 def solve_optperf(

@@ -30,9 +30,12 @@ job's rows change (one appended node), so each round
     and candidates did not move — the values are exact, not approximate).
 
 ``engine="scalar"`` keeps the original per-(job, node) loop as the
-cross-check oracle; the chosen job's goodput is re-solved scalar after
-every round in all engines, so emitted allocations carry engine-identical
-numbers.
+cross-check oracle; the final chosen sets are re-solved through the
+*bit-identical* stacked subset solver (one
+:func:`~repro.core.optperf.solve_optperf_waterfill_subsets` call per
+distinct set size per allocation run, replacing the old one-scalar-solve-
+per-greedy-round serial tail), so emitted allocations carry
+engine-identical numbers.
 
 :class:`Scheduler` wraps the greedy core with *incremental re-allocation*:
 ``add_job``/``remove_job``/``update_job`` re-run the greedy loop but reuse
@@ -60,6 +63,7 @@ from repro.core.goodput import statistical_efficiency
 from repro.core.optperf import (
     solve_optperf_stacked,
     solve_optperf_waterfill_subset,
+    solve_optperf_waterfill_subsets,
 )
 from repro.core.perf_model import (
     ClusterPerfModel,
@@ -84,7 +88,10 @@ class JobSpec:
 
     ``node_models[i]`` is THIS job's fitted model for cluster node i (compute
     coefficients are job-dependent; §4.2).  ``comm`` is the job's fitted
-    communication model.
+    communication model.  ``backend`` names the execution engine the runtime
+    drives the job's epochs through (``"sim"`` — timing simulator only, or
+    ``"real"`` — real JAX gradients via
+    :class:`~repro.runtime.backend.RealBackend`).
     """
 
     name: str
@@ -94,6 +101,7 @@ class JobSpec:
     b_noise: float
     ref_batch: int
     min_nodes: int = 1
+    backend: str = "sim"
 
     @functools.cached_property
     def full_model(self) -> ClusterPerfModel:
@@ -142,6 +150,43 @@ class Allocation:
     @property
     def aggregate_goodput(self) -> float:
         return _finite_sum(self.goodputs.values())
+
+
+def _chosen_goodput_batch(
+    pairs: Sequence[Tuple[JobSpec, Tuple[int, ...]]]
+) -> List[float]:
+    """:meth:`JobSpec.goodput` for many (job, chosen node set) pairs, solved
+    as stacked subset water-fills — one
+    :func:`~repro.core.optperf.solve_optperf_waterfill_subsets` call per
+    distinct set size instead of one scalar solve per pair.  Values are
+    bit-identical to ``job.goodput(ids)`` (the stacked path freezes each
+    row's bisection at its solo convergence point), so the oracle-parity
+    contract on emitted goodputs is preserved exactly.  A degenerate row
+    falls the whole batch back to the per-pair scalar path, which carries
+    the graceful-0.0 semantics row by row."""
+    values = [0.0] * len(pairs)
+    models, sets, totals, idx = [], [], [], []
+    for i, (job, ids) in enumerate(pairs):
+        if len(ids) < job.min_nodes:
+            continue
+        models.append(job.full_model)
+        sets.append(ids)
+        totals.append(job.total_batch)
+        idx.append(i)
+    if not idx:
+        return values
+    try:
+        sols = solve_optperf_waterfill_subsets(models, sets, totals)
+    except (ValueError, RuntimeError):
+        for i in idx:
+            job, ids = pairs[i]
+            values[i] = job.goodput(ids)
+        return values
+    for i, sol in zip(idx, sols):
+        job = pairs[i][0]
+        thr = job.total_batch / sol.opt_perf
+        values[i] = thr * job.efficiency
+    return values
 
 
 def _stacked_solver(engine: str):
@@ -312,7 +357,7 @@ def _allocate_arrays(
     engine: str,
     *,
     solo: Dict[str, float],
-    round_scalar: bool = True,
+    round_scalar: bool = False,
     gain_cache: Optional[Dict[str, Dict[Tuple[int, ...], Tuple[np.ndarray, np.ndarray]]]] = None,
     take_cache: Optional[Dict[str, Dict[Tuple[int, ...], float]]] = None,
     counters: Optional["Scheduler"] = None,
@@ -321,19 +366,22 @@ def _allocate_arrays(
 ) -> Allocation:
     """Greedy marginal-gain assignment on the fixed-layout stacked state.
 
-    ``round_scalar=True`` (plain :func:`allocate`) re-solves the chosen set
-    with the scalar path after *every* round, so intermediate ``current``
-    values are bit-identical to the scalar oracle's.  ``round_scalar=False``
-    (the incremental :class:`Scheduler`) instead reads the chosen row's
-    certified stacked value — within solver tolerance (~1e-10 relative) of
-    the scalar re-solve — and re-solves scalar only the *final* chosen sets,
-    so emitted goodputs still match the oracle's bit-for-bit while the
-    rounds themselves stay array-only.  The two modes pick identical
-    assignments unless some round has two competing gains closer than the
-    round solver's resolution without being exactly tied (exact ties — e.g.
-    identical node models — break identically in both): ~1e-10 relative for
-    the NumPy engine, ~1e-7 for the float32 stacked-jax engine.  Real
-    clusters sit far from that degeneracy.
+    ``round_scalar=False`` (the default mode: plain :func:`allocate` and the
+    incremental :class:`Scheduler`) reads the chosen row's certified stacked
+    value during the rounds — within solver tolerance (~1e-10 relative) of a
+    scalar re-solve — and re-solves only the *final* chosen sets, batched
+    through the bit-identical stacked subset solver (one
+    :func:`~repro.core.optperf.solve_optperf_waterfill_subsets` call per
+    distinct set size per run), so emitted goodputs match the scalar
+    oracle's bit-for-bit while the rounds themselves stay array-only.
+    ``round_scalar=True`` is the debug/cross-check mode that re-solves the
+    chosen set with the scalar path after *every* round, making the
+    intermediate ``current`` values oracle-bit-identical too.  The two modes
+    pick identical assignments unless some round has two competing gains
+    closer than the round solver's resolution without being exactly tied
+    (exact ties — e.g. identical node models — break identically in both):
+    ~1e-10 relative for the NumPy engine, ~1e-7 for the float32 stacked-jax
+    engine.  Real clusters sit far from that degeneracy.
     """
     solver = _stacked_solver(engine)
     healthy = [_model_ok(j) for j in jobs]
@@ -445,12 +493,32 @@ def _allocate_arrays(
             take(ji, node)
 
     if not round_scalar:
-        # Emit scalar-path values for the final sets (cached across runs):
-        # the same sets re-solved by the same function the round-scalar mode
-        # uses, so the emitted numbers are engine- and mode-identical.
+        # Emit oracle-path values for the final sets (cached across runs):
+        # the same sets re-solved through the bit-identical stacked subset
+        # solver — one call per distinct set size per allocate, instead of
+        # one scalar solve per greedy round — so the emitted numbers are
+        # engine- and mode-identical to the scalar oracle's.
+        pending: List[Tuple[int, Tuple[int, ...]]] = []
         for ji in range(len(jobs)):
-            if state.assign[ji]:
-                current[ji] = chosen_goodput(ji)
+            if not state.assign[ji]:
+                continue
+            ids = tuple(sorted(state.assign[ji]))
+            if take_cache is not None:
+                cache = take_cache.setdefault(jobs[ji].name, {})
+                if ids in cache:
+                    current[ji] = cache[ids]
+                    continue
+            pending.append((ji, ids))
+        if pending:
+            values = _chosen_goodput_batch(
+                [(jobs[ji], ids) for ji, ids in pending]
+            )
+            for (ji, ids), value in zip(pending, values):
+                if take_cache is not None:
+                    bounded_insert(
+                        take_cache.setdefault(jobs[ji].name, {}), ids, value
+                    )
+                current[ji] = value
     goodputs = {j.name: current[ji] for ji, j in enumerate(jobs)}
     fractions = {j.name: goodputs[j.name] / solo[j.name] for j in jobs}
     return Allocation(
@@ -554,7 +622,10 @@ def allocate(
     solo = {j.name: max(j.solo_goodput(), 1e-12) for j in jobs}
     if engine == "scalar":
         return _allocate_scalar(jobs, n_nodes, solo, unavailable)
-    return _allocate_arrays(jobs, n_nodes, engine, solo=solo, unavailable=unavailable)
+    return _allocate_arrays(
+        jobs, n_nodes, engine, solo=solo, round_scalar=False,
+        unavailable=unavailable,
+    )
 
 
 class Scheduler:

@@ -1,33 +1,44 @@
 """Training driver CLI.
 
-Three modes:
+Three modes, each supporting ``--backend {real,sim}`` where it applies:
 
-* ``hetero`` (default) — the paper's end-to-end scenario: real JAX training
-  of a reduced-config model on this host, with per-node timing supplied by
-  the calibrated heterogeneous-cluster simulator; the chosen policy
-  (cannikin / even / lb-bsp / adaptdl) controls the batch partition and,
-  for the adaptive policies, the total batch size.
+* ``hetero`` (default) — the paper's end-to-end scenario driven through
+  the shared ``EpochLoop``: with ``--backend real`` (default), real JAX
+  training of a reduced-config model on this host with per-node timing
+  supplied by the calibrated heterogeneous-cluster simulator; with
+  ``--backend sim``, the identical loop over the timing simulator alone
+  (no gradients — losses are NaN, useful for fast policy/timing studies).
+  The chosen policy (cannikin / even / lb-bsp / adaptdl) controls the
+  batch partition and, for the adaptive policies, the total batch size.
 
 * ``spmd`` — single-process pjit training of a reduced config on the local
   device(s): the quickstart path (examples/quickstart.py wraps it).
 
-* ``trace`` — multi-job cluster simulation through the
-  ``repro.runtime.ClusterRuntime`` front door: a seeded synthetic churn
-  trace (arrivals, a departure, a node failure) replayed under all three
-  allocation policies (cannikin / static / fair-share), one JSON summary.
+* ``trace`` — multi-job cluster churn through the
+  ``repro.runtime.ClusterRuntime`` front door: a seeded synthetic trace
+  (arrivals, a departure, a node failure) replayed with training epochs
+  between events.  ``--backend sim`` (default) compares all three
+  allocation policies; ``--backend real`` runs the cannikin policy with
+  every job training real gradients (totals clamped to ``--ref-batch``),
+  checkpointing to ``--checkpoint-dir`` on preemption.  ``--arrival
+  poisson`` / ``--size-dist lognormal`` sample the arrival process and the
+  heavy-tailed job-size skew.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --policy cannikin \
       --cluster B --epochs 12 --steps-per-epoch 8
   PYTHONPATH=src python -m repro.launch.train --mode spmd --arch rwkv6-7b --steps 20
   PYTHONPATH=src python -m repro.launch.train --mode trace --trace-jobs 3 \
-      --trace-nodes 12 --epochs-per-event 2
+      --trace-nodes 12 --epochs-per-event 2 --arrival poisson
+  PYTHONPATH=src python -m repro.launch.train --mode trace --backend real \
+      --trace-jobs 1 --trace-nodes 3 --epochs-per-event 2 --ref-batch 16
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+import warnings
 from typing import Any, Optional
 
 import numpy as np
@@ -36,6 +47,12 @@ import numpy as np
 def make_policy(name: str, n_nodes: int, *, candidates, ref_batch: int, adaptive: bool):
     """Deprecated shim — use :func:`repro.runtime.make_partition_policy`
     (the shared factory this now delegates to)."""
+    warnings.warn(
+        "repro.launch.train.make_policy is deprecated; use "
+        "repro.runtime.make_partition_policy instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from repro.runtime import make_partition_policy
 
     return make_partition_policy(
@@ -44,20 +61,12 @@ def make_policy(name: str, n_nodes: int, *, candidates, ref_batch: int, adaptive
 
 
 def run_hetero(args) -> int:
-    import jax
-
-    from repro.configs import get_api
     from repro.core.simulator import SimulatedCluster, cluster_A, cluster_B, cluster_C
-    from repro.data import SyntheticLM
-    from repro.optim import constant_schedule, sgd
-    from repro.train import HeteroTrainer
+    from repro.runtime import EpochLoop, SimBackend, make_partition_policy
 
-    api = get_api(args.arch, reduced=True)
     cluster_fn = {"A": cluster_A, "B": cluster_B, "C": cluster_C}[args.cluster]
     profiles, comm = cluster_fn()
     sim = SimulatedCluster(profiles, comm, noise=args.noise, seed=args.seed)
-    data = SyntheticLM(vocab=api.cfg.vocab, seq_len=args.seq_len, seed=args.seed)
-    from repro.runtime import make_partition_policy
 
     candidates = [args.ref_batch * m for m in (1, 2, 4, 8)]
     policy = make_partition_policy(
@@ -65,38 +74,54 @@ def run_hetero(args) -> int:
         sim.n,
         candidates=candidates,
         ref_batch=args.ref_batch,
-        adaptive=not args.fixed_batch,
+        # The sim backend produces no gradients, so the GNS tracker would
+        # sit at b_noise=inf and "adaptive" selection would escalate the
+        # total batch on throughput alone — force the fixed-batch mode the
+        # runtime's own sim-backend controllers use.
+        adaptive=not args.fixed_batch and args.backend == "real",
     )
-    trainer = HeteroTrainer(
-        api,
-        sgd(constant_schedule(args.lr)),
-        sim,
-        policy,
-        data,
-        steps_per_epoch=args.steps_per_epoch,
-        seed=args.seed,
+    if args.backend == "real":
+        from repro.configs import get_api
+        from repro.data import SyntheticLM
+        from repro.optim import constant_schedule, sgd
+        from repro.runtime import RealBackend
+
+        api = get_api(args.arch, reduced=True)
+        data = SyntheticLM(vocab=api.cfg.vocab, seq_len=args.seq_len, seed=args.seed)
+        backend = RealBackend(
+            api, sgd(constant_schedule(args.lr)), data, cluster=sim, seed=args.seed
+        )
+    else:
+        backend = SimBackend(cluster=sim, noise=args.noise)
+    loop = EpochLoop(
+        policy, backend,
+        steps_per_epoch=args.steps_per_epoch, fixed_total=args.ref_batch,
     )
-    trainer.set_fixed_total(args.ref_batch)
     print(f"# arch={args.arch} policy={args.policy} cluster={args.cluster} "
-          f"nodes={sim.n}")
+          f"nodes={sim.n} backend={args.backend}")
     for _ in range(args.epochs):
-        r = trainer.run_epoch()
+        r = loop.run_epoch()
         pred = "-" if r.predicted_batch_time is None else f"{r.predicted_batch_time*1e3:.1f}ms"
         print(
             f"epoch {r.epoch:3d} [{r.phase:9s}] B={r.total_batch:4d} "
             f"split={list(r.batches)} loss={r.mean_loss:.4f} "
             f"batch_time={r.measured_batch_time*1e3:.1f}ms pred={pred} "
-            f"sim_total={trainer.sim_time:.2f}s",
+            f"sim_total={loop.sim_time:.2f}s",
             flush=True,
         )
         if args.target_loss and r.mean_loss <= args.target_loss:
             print(f"# reached target loss {args.target_loss} at sim time "
-                  f"{trainer.sim_time:.2f}s")
+                  f"{loop.sim_time:.2f}s")
             break
     if args.out:
+        # Keep the historical EpochResult record schema (sim_seconds etc.)
+        # that existing consumers of --out parse.
+        from repro.train.hetero import EpochResult
+
         with open(args.out, "w") as f:
             json.dump(
-                [r.__dict__ for r in trainer.history], f, indent=1, default=str
+                [EpochResult.from_record(r).__dict__ for r in loop.history],
+                f, indent=1, default=str,
             )
     return 0
 
@@ -128,16 +153,39 @@ def run_spmd(args) -> int:
 
 
 def run_trace(args) -> int:
-    from repro.runtime import compare_policies, format_summary, synthetic_trace
+    from repro.runtime import (
+        RealBackendConfig,
+        compare_policies,
+        format_summary,
+        synthetic_trace,
+    )
 
-    trace, jobs = synthetic_trace(args.trace_jobs, args.trace_nodes, seed=args.seed)
+    real = args.backend == "real"
+    trace, jobs = synthetic_trace(
+        args.trace_jobs,
+        args.trace_nodes,
+        seed=args.seed,
+        arrival=args.arrival,
+        size_dist=args.size_dist,
+        backend=args.backend,
+        # Real gradients on this host: clamp the trace's sampled totals to
+        # a CPU-sized batch.
+        total_batch=args.ref_batch if real else None,
+    )
     reports = compare_policies(
         trace,
         args.trace_nodes,
+        # Real-backend traces train actual models per job per policy; keep
+        # the comparison to the cannikin policy unless simulating.
+        policies=("cannikin",) if real else ("cannikin", "static", "fair-share"),
         epochs_per_event=args.epochs_per_event,
         steps=args.steps_per_epoch,
         noise=args.noise,
         seed=args.seed,
+        real_backend=RealBackendConfig(
+            arch=args.arch, seq_len=args.seq_len, lr=args.lr
+        ) if real else None,
+        checkpoint_dir=args.checkpoint_dir,
     )
     print(f"# trace: {len(trace)} events, jobs={[j.name for j in jobs]}, "
           f"nodes={args.trace_nodes}")
@@ -168,10 +216,19 @@ def main() -> int:
     ap.add_argument("--fixed-batch", action="store_true")
     ap.add_argument("--target-loss", type=float, default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--backend", default=None, choices=["sim", "real"],
+                    help="execution backend (default: real for --mode hetero, "
+                         "sim for --mode trace)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for preemption checkpoints (trace mode)")
     ap.add_argument("--trace-jobs", type=int, default=3)
     ap.add_argument("--trace-nodes", type=int, default=12)
     ap.add_argument("--epochs-per-event", type=int, default=2)
+    ap.add_argument("--arrival", default="fixed", choices=["fixed", "poisson"])
+    ap.add_argument("--size-dist", default="fixed", choices=["fixed", "lognormal"])
     args = ap.parse_args()
+    if args.backend is None:
+        args.backend = "real" if args.mode == "hetero" else "sim"
     if args.mode == "hetero":
         return run_hetero(args)
     if args.mode == "trace":

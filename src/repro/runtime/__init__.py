@@ -14,6 +14,12 @@ hardware come and go.  This package exposes that loop as one API:
   done) owning a :class:`~repro.core.controller.CannikinController`;
   surfaces :class:`~repro.core.controller.EpochPlan`s and
   :class:`~repro.core.controller.ControllerStats`.
+* :class:`ExecutionBackend` — the plan → execute → observe engine behind
+  ``JobHandle.advance``: :class:`SimBackend` (timing simulator) and
+  :class:`RealBackend` (real JAX gradients + Theorem-4.1 GNS tracking,
+  preemption checkpoint/restore) are swappable per :class:`JobSpec`;
+  :class:`EpochLoop`/:func:`run_backend_epoch` are the same loop
+  standalone, surfacing unified :class:`EpochRecord` telemetry.
 * :class:`Policy` — pluggable allocation policies: ``cannikin`` (the
   paper-derived allocator), ``static``, and ``fair-share`` baselines, all
   scored on the same goodput scale.
@@ -36,6 +42,19 @@ Quick start::
     rt.advance(epochs=3)     # step the running jobs' training loops
     print(rt.allocation.aggregate_goodput, rt.counters())
 """
+from repro.runtime.backend import (
+    BACKENDS,
+    EpochLoop,
+    EpochRecord,
+    ExecutionBackend,
+    ExecutionResult,
+    GradObservation,
+    RealBackend,
+    RealBackendConfig,
+    SimBackend,
+    make_backend,
+    run_backend_epoch,
+)
 from repro.runtime.events import (
     Event,
     JobArrival,
@@ -73,6 +92,17 @@ from repro.runtime.trace import (
 )
 
 __all__ = [
+    "BACKENDS",
+    "EpochLoop",
+    "EpochRecord",
+    "ExecutionBackend",
+    "ExecutionResult",
+    "GradObservation",
+    "RealBackend",
+    "RealBackendConfig",
+    "SimBackend",
+    "make_backend",
+    "run_backend_epoch",
     "Event",
     "JobArrival",
     "JobCompletion",

@@ -1,0 +1,601 @@
+"""ExecutionBackend: the plan → execute → observe engine behind JobHandle.
+
+The paper's Cannikin system is a *runtime* that observes training steps,
+refits performance models, and adapts batch sizes.  What produces the
+observations — real JAX gradient steps or the calibrated timing simulator —
+is an implementation detail the loop must not care about.  This module is
+that seam:
+
+* :class:`ExecutionBackend` — the protocol: ``configure`` (follow node-set
+  changes), ``execute`` (run one epoch of ``steps`` batches with a given
+  partition, returning :class:`ExecutionResult` — per-node
+  ``NodeObservation`` measurements plus loss/GNS telemetry), and
+  ``snapshot``/``load_snapshot`` (preemption checkpoint state).
+* :class:`SimBackend` — :class:`~repro.core.simulator.SimulatedCluster`
+  behind the protocol: timing measurements only, no gradients (losses are
+  NaN).  The default for trace replay.
+* :class:`RealBackend` — the gradient engine extracted from the old
+  ``HeteroTrainer``: one vmapped per-node backward over the padded
+  ``(n, b_max)`` layout, Eq. (9) weighted aggregation, a Theorem-4.1 GNS
+  tracker, and a simulated cluster clock (the paper's own separation:
+  statistical behaviour is real, per-node timing is simulated).  Its state
+  (params / opt-state / GNS / stream counters) round-trips bit-exactly
+  through :mod:`repro.train.checkpoint` for preemption/resume.
+* :func:`run_backend_epoch` / :class:`EpochLoop` — the policy loop the
+  runtime owns: plan (CannikinController or a baseline partition policy) →
+  ``backend.execute`` → observe (measurements + gradient telemetry), each
+  epoch surfacing one unified :class:`EpochRecord` (merging the old
+  ``EpochResult``/``EpochPlan`` telemetry split).
+
+``JobHandle.advance`` and ``HeteroTrainer`` are both thin shells over this
+module, so scheduler decisions, simulated traces, and real training can
+never diverge in protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    runtime_checkable,
+)
+
+import numpy as np
+
+from repro.core.aggregation import ratios
+from repro.core.controller import CannikinController, EpochPlan
+from repro.core.gns import GNSState, estimate_gns, gns_update
+from repro.core.scheduler import JobSpec
+from repro.core.simulator import NodeProfile, SimulatedCluster, StepMeasurement
+
+__all__ = [
+    "GradObservation",
+    "ExecutionResult",
+    "EpochRecord",
+    "ExecutionBackend",
+    "SimBackend",
+    "RealBackend",
+    "RealBackendConfig",
+    "BACKENDS",
+    "make_backend",
+    "run_backend_epoch",
+    "EpochLoop",
+]
+
+
+# ---------------------------------------------------------------------------
+# telemetry records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GradObservation:
+    """One step's gradient telemetry — the Theorem-4.1 GNS ingredients:
+    per-node gradient square-norms |g_i|^2, the aggregated |g|^2, and the
+    local batch sizes that produced them."""
+
+    local_sqnorms: Tuple[float, ...]
+    global_sqnorm: float
+    batches: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionResult:
+    """What one backend epoch produced.
+
+    ``measurements`` carry the per-node :class:`NodeObservation` timing the
+    performance-model fitters consume; ``losses``/``grad_observations`` are
+    the statistical telemetry (empty on :class:`SimBackend`); ``b_noise``
+    is the backend's own GNS tracker estimate after the epoch (NaN when the
+    backend computes no gradients).
+    """
+
+    epoch_seconds: float
+    measurements: Tuple[StepMeasurement, ...]
+    losses: Tuple[float, ...]
+    grad_observations: Tuple[GradObservation, ...]
+    b_noise: float
+
+    @property
+    def mean_loss(self) -> float:
+        return float(np.mean(self.losses)) if self.losses else float("nan")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochRecord:
+    """Unified per-epoch telemetry: plan + execution in one record (the old
+    ``EpochResult``/``EpochPlan`` split, merged).  ``mean_loss`` is NaN and
+    ``b_noise`` non-finite for backends that compute no gradients."""
+
+    epoch: int
+    backend: str                           # ExecutionBackend.kind
+    total_batch: int
+    batches: Tuple[int, ...]
+    lr_scale: float
+    phase: str                             # "bootstrap" | "optperf" | baseline name
+    predicted_batch_time: Optional[float]
+    measured_batch_time: float
+    epoch_seconds: float                   # simulated cluster wall-clock
+    mean_loss: float
+    b_noise: float
+    plan: Optional[EpochPlan] = None
+
+
+# ---------------------------------------------------------------------------
+# the backend protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """What the runtime's epoch loop needs from an execution engine.
+
+    ``configure`` rebinds the backend to a job's current node set (called on
+    every reallocation; the timing model follows the nodes, any learned
+    statistical state — params, optimizer, GNS — survives).  ``execute``
+    runs one epoch.  ``snapshot``/``load_snapshot`` expose the state that
+    must survive preemption as a checkpointable pytree (``{}`` when there is
+    nothing worth persisting).
+    """
+
+    kind: str
+
+    def configure(
+        self, spec: JobSpec, node_ids: Sequence[int], *, seed: int = 0
+    ) -> None: ...
+
+    def execute(
+        self, batches: Sequence[int], steps: int, *, lr_scale: float = 1.0
+    ) -> ExecutionResult: ...
+
+    def snapshot(self) -> Dict[str, Any]: ...
+
+    def load_snapshot(self, state: Dict[str, Any]) -> None: ...
+
+
+def _profiles_for(spec: JobSpec, node_ids: Sequence[int]) -> List[NodeProfile]:
+    """The job's own ground-truth node models over its held nodes, as timing
+    profiles (identical to the old ``JobHandle._rebuild_sim`` construction)."""
+    profiles = []
+    for nid in node_ids:
+        m = spec.node_models[nid]
+        profiles.append(
+            NodeProfile(name=f"{spec.name}:n{nid}", q=m.q, s=m.s, k=m.k, m=m.m)
+        )
+    return profiles
+
+
+class SimBackend:
+    """:class:`SimulatedCluster` behind the :class:`ExecutionBackend`
+    protocol: per-node timing measurements with optional multiplicative
+    noise, no gradients.  ``configure`` rebuilds the cluster from the job
+    spec's own node models (per-job heterogeneity included), exactly as the
+    pre-refactor ``JobHandle`` did — replayed traces are bit-identical."""
+
+    kind = "sim"
+
+    def __init__(
+        self, cluster: Optional[SimulatedCluster] = None, *, noise: float = 0.0
+    ) -> None:
+        self.cluster = cluster
+        self.noise = noise
+        self.sim_time = 0.0
+        self.epochs_run = 0
+
+    def configure(
+        self, spec: JobSpec, node_ids: Sequence[int], *, seed: int = 0
+    ) -> None:
+        self.cluster = SimulatedCluster(
+            _profiles_for(spec, node_ids), spec.comm, noise=self.noise, seed=seed
+        )
+
+    def execute(
+        self, batches: Sequence[int], steps: int, *, lr_scale: float = 1.0
+    ) -> ExecutionResult:
+        if self.cluster is None:
+            raise RuntimeError("SimBackend not configured with a cluster")
+        t, ms = self.cluster.run_epoch(list(batches), steps)
+        self.sim_time += t
+        self.epochs_run += 1
+        return ExecutionResult(
+            epoch_seconds=t,
+            measurements=tuple(ms),
+            losses=(),
+            grad_observations=(),
+            b_noise=float("nan"),
+        )
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {}  # nothing statistical to persist: the sim is rebuilt on resume
+
+    def load_snapshot(self, state: Dict[str, Any]) -> None:
+        del state
+
+
+def _quantize(b: int, q: int = 8) -> int:
+    """Quantize the padded per-node width so epoch-to-epoch repartitioning
+    reuses compiled steps (recompilation hygiene; EXPERIMENTS.md §Perf)."""
+    return max(q, ((b + q - 1) // q) * q)
+
+
+class RealBackend:
+    """The real-gradient engine (extracted from the old ``HeteroTrainer``).
+
+    Per step: partition the global batch by the planned local batch sizes,
+    run one vmapped per-node backward over the padded ``(n, b_max)`` layout,
+    aggregate g = sum r_i g_i (Eq. 9), update params once, feed
+    (|g_i|^2, |g|^2, b) to the Theorem-4.1 GNS tracker, and advance the
+    simulated cluster clock by the heterogeneous batch time.
+
+    Only the *timing* is simulated (``cluster`` — rebound by ``configure``
+    on every node-set change); params, optimizer state, GNS state, and the
+    data-stream position are real and round-trip bit-exactly through
+    ``snapshot``/``load_snapshot`` (and :meth:`checkpoint`/:meth:`restore`
+    via :mod:`repro.train.checkpoint`) for preemption/resume.
+    """
+
+    kind = "real"
+
+    def __init__(
+        self,
+        api: Any,                        # ModelApi
+        optimizer: Any,                  # repro.optim Optimizer
+        data: Any,                       # SyntheticLM-compatible stream
+        *,
+        cluster: Optional[SimulatedCluster] = None,
+        noise: float = 0.0,
+        seed: int = 0,
+        gns_decay: float = 0.9,
+    ) -> None:
+        import jax
+
+        self.api = api
+        self.optimizer = optimizer
+        self.data = data
+        self.cluster = cluster
+        self.noise = noise
+        self.params = api.init(jax.random.PRNGKey(seed))
+        self.opt_state = optimizer.init(self.params)
+        self.gns = GNSState()
+        self.gns_decay = gns_decay
+        self.sim_time = 0.0
+        self.steps_done = 0
+        self._step_cache: Dict[int, Callable] = {}
+
+    # -- node-set binding ------------------------------------------------
+
+    def configure(
+        self, spec: JobSpec, node_ids: Sequence[int], *, seed: int = 0
+    ) -> None:
+        self.cluster = SimulatedCluster(
+            _profiles_for(spec, node_ids), spec.comm, noise=self.noise, seed=seed
+        )
+
+    # -- gradient engine -------------------------------------------------
+
+    def _node_grad_fn(self, b_max: int) -> Callable:
+        """Jitted: per-node grads + sq-norms + Eq.(9) aggregate + update."""
+        if b_max in self._step_cache:
+            return self._step_cache[b_max]
+        import jax
+        import jax.numpy as jnp
+
+        from repro.optim.optimizers import global_norm
+
+        api, optimizer = self.api, self.optimizer
+
+        def node_loss(params, tokens, labels, mask):
+            # mean over the node's real samples (pads weighted 0).
+            loss, _ = api.loss(
+                params,
+                {"tokens": tokens, "labels": labels, "weights": mask},
+            )
+            return loss
+
+        grad_fn = jax.grad(node_loss)
+
+        def step(params, opt_state, tokens, labels, mask, r, lr_scale):
+            # tokens/labels: (n, b_max, S); mask: (n, b_max); r: (n,)
+            grads = jax.vmap(grad_fn, in_axes=(None, 0, 0, 0))(
+                params, tokens, labels, mask
+            )
+            sq_i = jax.vmap(lambda g: global_norm(g) ** 2)(grads)
+            agg = jax.tree_util.tree_map(
+                lambda g: jnp.tensordot(r.astype(jnp.float32), g.astype(jnp.float32), axes=1).astype(g.dtype),
+                grads,
+            )
+            sq_g = global_norm(agg) ** 2
+            loss, _ = api.loss(
+                params,
+                {
+                    "tokens": tokens.reshape((-1,) + tokens.shape[2:]),
+                    "labels": labels.reshape((-1,) + labels.shape[2:]),
+                    "weights": mask.reshape(-1),
+                },
+            )
+            new_params, new_opt = optimizer.update(agg, opt_state, params, lr_scale)
+            return new_params, new_opt, loss, sq_i, sq_g
+
+        fn = jax.jit(step)
+        self._step_cache[b_max] = fn
+        return fn
+
+    def execute(
+        self, batches: Sequence[int], steps: int, *, lr_scale: float = 1.0
+    ) -> ExecutionResult:
+        if self.cluster is None:
+            raise RuntimeError("RealBackend not configured with a cluster")
+        import jax.numpy as jnp
+
+        from repro.data.pipeline import HeteroBatchPartitioner
+
+        batches = [int(b) for b in batches]
+        b_arr = np.asarray(batches, np.int64)
+        b_max = _quantize(int(b_arr.max()))
+        n = len(batches)
+        r = jnp.asarray(ratios(batches), jnp.float32)
+        step_fn = self._node_grad_fn(b_max)
+
+        losses: List[float] = []
+        grad_obs: List[GradObservation] = []
+        for _ in range(steps):
+            raw = self.data.batch(self.steps_done, int(b_arr.sum()))
+            self.steps_done += 1
+            padded, _ = HeteroBatchPartitioner.padded(raw, batches)
+            seq = padded["tokens"].shape[-1]
+            tok = np.zeros((n, b_max, seq), np.int32)
+            lab = np.zeros((n, b_max, seq), np.int32)
+            msk = np.zeros((n, b_max), np.float32)
+            w = padded["tokens"].shape[1]
+            tok[:, :w], lab[:, :w] = padded["tokens"], padded["labels"]
+            for i, b in enumerate(batches):
+                msk[i, :b] = 1.0
+            self.params, self.opt_state, loss, sq_i, sq_g = step_fn(
+                self.params,
+                self.opt_state,
+                jnp.asarray(tok),
+                jnp.asarray(lab),
+                jnp.asarray(msk),
+                r,
+                jnp.float32(lr_scale),
+            )
+            losses.append(float(loss))
+            obs = GradObservation(
+                local_sqnorms=tuple(float(x) for x in np.asarray(sq_i)),
+                global_sqnorm=float(sq_g),
+                batches=tuple(batches),
+            )
+            grad_obs.append(obs)
+            self._track_gns(obs)
+
+        epoch_seconds, measurements = self.cluster.run_epoch(batches, steps)
+        self.sim_time += epoch_seconds
+        return ExecutionResult(
+            epoch_seconds=epoch_seconds,
+            measurements=tuple(measurements),
+            losses=tuple(losses),
+            grad_observations=tuple(grad_obs),
+            b_noise=self.gns.b_noise,
+        )
+
+    def _track_gns(self, obs: GradObservation) -> None:
+        """Theorem-4.1 tracker (same guarded update the controller uses).
+
+        Deliberately independent of any controller's tracker: the backend's
+        ``b_noise`` serves baseline policies and standalone use, while a
+        CannikinController re-ingests the same observations into its own
+        state for planning.  The duplicate estimate is a host-side
+        least-squares on an n-vector per step — noise next to the jitted
+        training step."""
+        try:
+            _, g, s = estimate_gns(obs.local_sqnorms, obs.global_sqnorm, obs.batches)
+        except (ValueError, np.linalg.LinAlgError):
+            return
+        self.gns = gns_update(self.gns, g, s, decay=self.gns_decay)
+
+    # -- preemption state ------------------------------------------------
+
+    def snapshot(self) -> Dict[str, Any]:
+        """The checkpointable pytree: everything that must survive
+        preemption (params, opt-state, GNS state, stream counters)."""
+        return {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "gns": {
+                "ema_g": np.float64(self.gns.ema_g),
+                "ema_s": np.float64(self.gns.ema_s),
+                "count": np.int64(self.gns.count),
+            },
+            "counters": {
+                "steps_done": np.int64(self.steps_done),
+                "sim_time": np.float64(self.sim_time),
+            },
+        }
+
+    def load_snapshot(self, state: Dict[str, Any]) -> None:
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        g = state["gns"]
+        self.gns = GNSState(
+            ema_g=float(g["ema_g"]), ema_s=float(g["ema_s"]), count=int(g["count"])
+        )
+        c = state["counters"]
+        self.steps_done = int(c["steps_done"])
+        self.sim_time = float(c["sim_time"])
+
+    def checkpoint(self, path: str) -> None:
+        from repro.train import checkpoint as ckpt  # lazy: avoids import cycle
+
+        ckpt.save(path, self.snapshot())
+
+    def restore(self, path: str) -> None:
+        from repro.train import checkpoint as ckpt  # lazy: avoids import cycle
+
+        self.load_snapshot(ckpt.restore(path, self.snapshot()))
+
+
+# ---------------------------------------------------------------------------
+# backend factory
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RealBackendConfig:
+    """Recipe the runtime uses to build a :class:`RealBackend` for each job
+    whose :class:`JobSpec` names ``backend="real"`` (model/data/optimizer
+    are runtime-level concerns, not per-job spec payload)."""
+
+    arch: str = "olmo-1b"
+    seq_len: int = 32
+    lr: float = 0.3
+    gns_decay: float = 0.9
+
+    def build(self, *, noise: float = 0.0, seed: int = 0) -> RealBackend:
+        from repro.configs import get_api
+        from repro.data.pipeline import SyntheticLM
+        from repro.optim.optimizers import constant_schedule, sgd
+
+        api = get_api(self.arch, reduced=True)
+        data = SyntheticLM(vocab=api.cfg.vocab, seq_len=self.seq_len, seed=seed)
+        return RealBackend(
+            api,
+            sgd(constant_schedule(self.lr)),
+            data,
+            noise=noise,
+            seed=seed,
+            gns_decay=self.gns_decay,
+        )
+
+
+BACKENDS = ("sim", "real")
+
+
+def make_backend(
+    kind: str,
+    *,
+    noise: float = 0.0,
+    seed: int = 0,
+    real_config: Optional[RealBackendConfig] = None,
+) -> "ExecutionBackend":
+    """Build an execution backend by the name a :class:`JobSpec` carries."""
+    if kind == "sim":
+        return SimBackend(noise=noise)
+    if kind == "real":
+        return (real_config or RealBackendConfig()).build(noise=noise, seed=seed)
+    raise ValueError(f"unknown execution backend {kind!r}; choose from {BACKENDS}")
+
+
+# ---------------------------------------------------------------------------
+# the policy loop (runtime-owned)
+# ---------------------------------------------------------------------------
+
+
+def run_backend_epoch(
+    policy: Any,
+    backend: "ExecutionBackend",
+    *,
+    steps: int,
+    epoch_index: int = 0,
+    last_measurement: Optional[StepMeasurement] = None,
+    fixed_total: Optional[int] = None,
+) -> Tuple[EpochRecord, ExecutionResult]:
+    """One plan → execute → observe cycle over any backend.
+
+    ``policy`` is a :class:`CannikinController` (plans epochs, ingests
+    measurement + gradient telemetry) or a baseline partition policy
+    (``partition(total, epoch, last_measurement)``).  Returns the unified
+    :class:`EpochRecord` plus the raw :class:`ExecutionResult` (callers that
+    loop feed ``result.measurements[-1]`` back as ``last_measurement``).
+    """
+    if isinstance(policy, CannikinController):
+        plan = policy.plan_epoch()
+        epoch = plan.epoch
+        batches = list(plan.batches)
+        total = plan.total_batch
+        lr_scale = plan.lr_scale
+        predicted = plan.predicted_batch_time
+        phase = plan.phase
+    else:
+        plan = None
+        epoch = epoch_index
+        total = getattr(policy, "total_batch", None) or fixed_total or 64
+        batches = policy.partition(total, epoch, last_measurement)
+        lr_scale, predicted, phase = 1.0, None, policy.name
+    result = backend.execute(batches, steps, lr_scale=lr_scale)
+    if isinstance(policy, CannikinController):
+        policy.observe_execution(result)
+        b_noise = policy.gns.b_noise
+    else:
+        b_noise = result.b_noise
+    record = EpochRecord(
+        epoch=epoch,
+        backend=getattr(backend, "kind", "?"),
+        total_batch=int(total),
+        batches=tuple(int(b) for b in batches),
+        lr_scale=float(lr_scale),
+        phase=phase,
+        predicted_batch_time=predicted,
+        measured_batch_time=result.epoch_seconds / max(steps, 1),
+        epoch_seconds=result.epoch_seconds,
+        mean_loss=result.mean_loss,
+        b_noise=b_noise,
+        plan=plan,
+    )
+    return record, result
+
+
+class EpochLoop:
+    """The standalone policy loop: drive one (policy, backend) pair epoch by
+    epoch, accumulating :class:`EpochRecord` history.  ``HeteroTrainer`` and
+    the launch CLI are shells over this; ``JobHandle.advance`` runs the same
+    :func:`run_backend_epoch` cycle under runtime lifecycle control."""
+
+    def __init__(
+        self,
+        policy: Any,
+        backend: "ExecutionBackend",
+        *,
+        steps_per_epoch: int = 8,
+        fixed_total: Optional[int] = None,
+    ) -> None:
+        self.policy = policy
+        self.backend = backend
+        self.steps_per_epoch = steps_per_epoch
+        self.fixed_total = fixed_total
+        self.epoch = 0
+        self.history: List[EpochRecord] = []
+        self._last_measurement: Optional[StepMeasurement] = None
+
+    @property
+    def sim_time(self) -> float:
+        return self.backend.sim_time  # type: ignore[attr-defined]
+
+    def run_epoch(self) -> EpochRecord:
+        record, result = run_backend_epoch(
+            self.policy,
+            self.backend,
+            steps=self.steps_per_epoch,
+            epoch_index=self.epoch,
+            last_measurement=self._last_measurement,
+            fixed_total=self.fixed_total,
+        )
+        self.epoch += 1
+        if result.measurements:
+            self._last_measurement = result.measurements[-1]
+        self.history.append(record)
+        return record
+
+    def run(
+        self, epochs: int, *, target_loss: Optional[float] = None
+    ) -> List[EpochRecord]:
+        for _ in range(epochs):
+            record = self.run_epoch()
+            if target_loss is not None and record.mean_loss <= target_loss:
+                break
+        return self.history

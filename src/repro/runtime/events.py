@@ -13,7 +13,10 @@ simulation needs exactly these six):
   resumes: arrivals are idempotent on the handle, keyed by job name).
 * :class:`JobCompletion` — a job finishes and releases its nodes.
 * :class:`Preemption`    — the operator/policy pulls a job off the cluster;
-  its handle survives (models retained) and a later arrival resumes it.
+  its handle survives (models retained), its execution backend's
+  statistical state is checkpointed (params/opt-state/GNS for a real
+  backend — to ``<checkpoint_dir>/<job>.ckpt.npz`` when the runtime has
+  one), and a later arrival resumes it with that state restored bit-exactly.
 * :class:`NodeJoin` / :class:`NodeLeave` — cluster membership churn.  Node
   ids are stable: a leave marks the id unavailable, a join brings it back.
 * :class:`ModelRefit`    — a job's per-node performance coefficients were

@@ -16,23 +16,39 @@ hardware come and go.  :class:`ClusterRuntime` is that loop as one object:
   to per-job :class:`JobHandle` lifecycle objects, each owning its own
   :class:`~repro.core.controller.CannikinController` (the paper's elastic
   ``add_nodes``/``remove_nodes`` reconfiguration runs on every node-set
-  change) and a per-job :class:`~repro.core.simulator.SimulatedCluster`
-  built from the job's own ground-truth node models;
+  change) and a per-job
+  :class:`~repro.runtime.backend.ExecutionBackend` — the timing simulator
+  (``backend="sim"``, built from the job's own ground-truth node models)
+  or real JAX gradients (``backend="real"``), whichever the
+  :class:`JobSpec` names;
 * :meth:`ClusterRuntime.advance` steps every running job's epoch loop
-  (plan → simulate → observe), so a replayed trace yields both allocation
-  decisions *and* simulated training behaviour (bootstrap → optperf,
-  EpochPlans, ControllerStats).
+  (plan → execute → observe over its backend), so a replayed trace yields
+  both allocation decisions *and* training behaviour (bootstrap → optperf,
+  unified :class:`~repro.runtime.backend.EpochRecord` telemetry,
+  ControllerStats);
+* :class:`Preemption` is checkpointed for real backends: params/opt-state/
+  GNS state are snapshotted (and written via :mod:`repro.train.checkpoint`
+  when the runtime has a ``checkpoint_dir``) on preempt and restored
+  bit-exactly on re-admission.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
+import os
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.controller import CannikinController, ControllerStats, EpochPlan
 from repro.core.scheduler import Allocation, JobSpec
-from repro.core.simulator import NodeProfile, SimulatedCluster, drift_model
+from repro.core.simulator import drift_model
+from repro.runtime.backend import (
+    EpochRecord,
+    ExecutionBackend,
+    RealBackendConfig,
+    make_backend,
+    run_backend_epoch,
+)
 from repro.runtime.events import (
     Event,
     JobArrival,
@@ -76,11 +92,20 @@ class JobHandle:
 
     Owns the job's :class:`CannikinController` (created when the job first
     receives nodes; *kept* across preemption and node churn so learned
-    models survive, exactly the paper's §6 elastic semantics) and a
-    ground-truth :class:`SimulatedCluster` over the job's currently
-    assigned nodes (built from the job's own ``node_models`` — per-job
-    heterogeneity included).  Surfaces :class:`EpochPlan`s and
-    :class:`ControllerStats` for observability.
+    models survive, exactly the paper's §6 elastic semantics) and the
+    job's :class:`~repro.runtime.backend.ExecutionBackend` — whichever
+    engine ``spec.backend`` names (``"sim"``: the job's own ground-truth
+    node models as a timing simulator; ``"real"``: real JAX gradients).
+    ``advance`` is one plan → execute → observe loop over that backend.
+    Surfaces unified :class:`~repro.runtime.backend.EpochRecord` telemetry
+    (``records``), :class:`EpochPlan`s, and :class:`ControllerStats`.
+
+    Preemption checkpoints the backend's statistical state (params,
+    opt-state, GNS state, stream counters for a real backend; nothing for
+    the sim): in memory always, and to ``<checkpoint_dir>/<job>.ckpt.npz``
+    when the runtime has a checkpoint directory.  Re-admission restores it
+    — from the file when one exists (the cross-process semantics), else
+    from the in-memory snapshot — before the first post-resume epoch.
     """
 
     def __init__(
@@ -90,11 +115,14 @@ class JobHandle:
         submitted_at: float = 0.0,
         noise: float = 0.0,
         seed: int = 0,
+        real_config: Optional[RealBackendConfig] = None,
+        checkpoint_dir: Optional[str] = None,
     ) -> None:
         self.spec = spec
         self.state = JobState.PENDING
         self.nodes: Tuple[int, ...] = ()
         self.controller: Optional[CannikinController] = None
+        self.backend: Optional[ExecutionBackend] = None
         self.submitted_at = submitted_at
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
@@ -102,10 +130,15 @@ class JobHandle:
         self.sim_time = 0.0
         self.reallocations = 0
         self.preemptions = 0
+        self.records: List[EpochRecord] = []
+        self.checkpoint_path: Optional[str] = None
         self._ctl_nodes: Tuple[int, ...] = ()  # node ids behind controller idx 0..n-1
-        self._sim: Optional[SimulatedCluster] = None
         self._noise = noise
         self._seed = seed
+        self._real_config = real_config
+        self._ckpt_dir = checkpoint_dir
+        self._snapshot: Optional[dict] = None
+        self._resume_pending = False
 
     # -- observability ---------------------------------------------------
 
@@ -121,6 +154,10 @@ class JobHandle:
     def last_plan(self) -> Optional[EpochPlan]:
         return self.controller.last_plan if self.controller is not None else None
 
+    @property
+    def last_record(self) -> Optional[EpochRecord]:
+        return self.records[-1] if self.records else None
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (
             f"JobHandle({self.name!r}, state={self.state}, nodes={self.nodes}, "
@@ -130,9 +167,20 @@ class JobHandle:
     # -- reconcile surface (driven by ClusterRuntime) --------------------
 
     def _new_controller(self, n: int) -> CannikinController:
-        # Trace jobs train at the spec's fixed total batch: the runtime
-        # optimizes the *split* (OptPerf partition) and the allocation;
-        # total-batch adaptivity needs real gradients (HeteroTrainer).
+        if self.spec.backend == "real":
+            # Real gradients feed the GNS tracker, so total-batch adaptivity
+            # is live: the controller sweeps {B, 2B} against the measured
+            # gradient noise scale (§4.4).
+            total = self.spec.total_batch
+            return CannikinController(
+                n,
+                batch_candidates=sorted({total, 2 * total}),
+                ref_batch=self.spec.ref_batch,
+                adaptive=True,
+            )
+        # Sim-backend trace jobs train at the spec's fixed total batch: no
+        # gradients exist, so the runtime optimizes the *split* (OptPerf
+        # partition) and the allocation only.
         return CannikinController(
             n,
             batch_candidates=[self.spec.total_batch],
@@ -154,7 +202,6 @@ class JobHandle:
         self.reallocations += 1
         self.nodes = nodes
         if not nodes:
-            self._sim = None
             if self.state == JobState.RUNNING:
                 self.state = JobState.PENDING
             return
@@ -177,27 +224,48 @@ class JobHandle:
                 if added:
                     self.controller.add_nodes(len(added))
                 self._ctl_nodes = kept + added
-        self._rebuild_sim()
+        self._bind_backend()
+        if self._resume_pending:
+            self._restore_backend()
+            self._resume_pending = False
         if self.state in (JobState.PENDING, JobState.PREEMPTED):
             self.state = JobState.RUNNING
             if self.started_at is None:
                 self.started_at = now
 
-    def _rebuild_sim(self) -> None:
-        """Per-job ground truth over the currently held nodes: the job's own
-        fitted/true node models converted back to timing profiles."""
-        profiles = []
-        for nid in self._ctl_nodes:
-            m = self.spec.node_models[nid]
-            profiles.append(
-                NodeProfile(name=f"{self.name}:n{nid}", q=m.q, s=m.s, k=m.k, m=m.m)
+    def _bind_backend(self) -> None:
+        """(Build and) bind the spec's execution backend to the currently
+        held nodes.  The backend object itself persists across node churn
+        and preemption — only its timing cluster follows the node set — so
+        learned statistical state (params, opt-state, GNS) survives.  A
+        re-arrival whose spec names a *different* backend kind gets a fresh
+        engine (its statistical state necessarily starts over)."""
+        if self.backend is None or self.backend.kind != self.spec.backend:
+            self.backend = make_backend(
+                self.spec.backend,
+                noise=self._noise,
+                seed=self._seed,
+                real_config=self._real_config,
             )
-        self._sim = SimulatedCluster(
-            profiles,
-            self.spec.comm,
-            noise=self._noise,
-            seed=self._seed + self.reallocations,
+        self.backend.configure(
+            self.spec, self._ctl_nodes, seed=self._seed + self.reallocations
         )
+
+    def _restore_backend(self) -> None:
+        """Restore the preemption checkpoint into the backend: from the
+        checkpoint file when one was written (the file is the source of
+        truth — in a real cluster the preempted process died), else from
+        the in-memory snapshot."""
+        if self.backend is None:
+            return
+        if self.checkpoint_path is not None and os.path.exists(self.checkpoint_path):
+            from repro.train import checkpoint as ckpt
+
+            self.backend.load_snapshot(
+                ckpt.restore(self.checkpoint_path, self.backend.snapshot())
+            )
+        elif self._snapshot is not None:
+            self.backend.load_snapshot(self._snapshot)
 
     def apply_refit(self, spec: JobSpec) -> None:
         """Swap in a refreshed spec (ModelRefit): the ground truth drifts;
@@ -207,37 +275,54 @@ class JobHandle:
             raise ValueError(f"refit spec {spec.name!r} does not match {self.name!r}")
         self.spec = spec
         if self.nodes:
-            self._rebuild_sim()
+            self._bind_backend()
 
     def preempt(self) -> None:
+        # Snapshot only on the RUNNING->PREEMPTED edge: a duplicate
+        # Preemption event must not re-serialize post-preemption live state
+        # over the only good checkpoint (the file models a process that
+        # already died).  The preemptions counter still counts every event,
+        # matching the reconcile loop's idempotent-event semantics.
+        if self.backend is not None and self.state != JobState.PREEMPTED:
+            snap = self.backend.snapshot()
+            if snap:
+                self._snapshot = snap
+                if self._ckpt_dir is not None:
+                    from repro.train import checkpoint as ckpt
+
+                    os.makedirs(self._ckpt_dir, exist_ok=True)
+                    self.checkpoint_path = os.path.join(
+                        self._ckpt_dir, f"{self.name}.ckpt.npz"
+                    )
+                    ckpt.save(self.checkpoint_path, snap)
+                self._resume_pending = True
         self.state = JobState.PREEMPTED
         self.preemptions += 1
         self.nodes = ()
-        self._sim = None
 
     def finish(self, now: float) -> None:
         self.state = JobState.DONE
         self.finished_at = now
         self.nodes = ()
-        self._sim = None
+        self._snapshot = None
+        self._resume_pending = False
 
     # -- epoch loop ------------------------------------------------------
 
-    def advance(self, epochs: int = 1, *, steps: int = 4) -> List[EpochPlan]:
-        """Run ``epochs`` plan → simulate → observe cycles on the held
-        nodes.  No-op unless RUNNING."""
-        if self.state != JobState.RUNNING or self._sim is None:
+    def advance(self, epochs: int = 1, *, steps: int = 4) -> List[EpochRecord]:
+        """Run ``epochs`` plan → execute → observe cycles over the job's
+        backend on the held nodes.  No-op unless RUNNING."""
+        if self.state != JobState.RUNNING or self.backend is None:
             return []
         assert self.controller is not None
-        plans = []
+        out: List[EpochRecord] = []
         for _ in range(epochs):
-            plan = self.controller.plan_epoch()
-            t, ms = self._sim.run_epoch(list(plan.batches), steps)
-            self.controller.observe_epoch(ms)
-            self.sim_time += t
+            record, _ = run_backend_epoch(self.controller, self.backend, steps=steps)
+            self.sim_time += record.epoch_seconds
             self.epochs_run += 1
-            plans.append(plan)
-        return plans
+            self.records.append(record)
+            out.append(record)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,7 +359,10 @@ class ClusterRuntime:
     ``policy`` is an allocation-policy name (``cannikin`` / ``static`` /
     ``fair-share``) or a :class:`Policy` instance; ``engine`` selects the
     stacked-solver engine for the Cannikin policy.  ``noise``/``seed``
-    configure the per-job measurement simulators.
+    configure the per-job measurement simulators.  ``real_backend`` is the
+    :class:`~repro.runtime.backend.RealBackendConfig` recipe used for jobs
+    whose spec names ``backend="real"``; ``checkpoint_dir`` enables on-disk
+    preemption checkpoints (``<dir>/<job>.ckpt.npz``).
     """
 
     def __init__(
@@ -285,6 +373,8 @@ class ClusterRuntime:
         engine: str = "batched",
         noise: float = 0.0,
         seed: int = 0,
+        real_backend: Optional[RealBackendConfig] = None,
+        checkpoint_dir: Optional[str] = None,
     ) -> None:
         self.n_nodes = n_nodes
         self.policy: Policy = (
@@ -299,6 +389,8 @@ class ClusterRuntime:
         self.down_nodes: set = set()
         self._noise = noise
         self._seed = seed
+        self._real_backend = real_backend
+        self._checkpoint_dir = checkpoint_dir
         self._queue: List[Tuple[float, int, Event]] = []
         self._seq = itertools.count()
 
@@ -317,6 +409,8 @@ class ClusterRuntime:
                 submitted_at=submitted_at,
                 noise=self._noise,
                 seed=self._seed + len(self.handles),
+                real_config=self._real_backend,
+                checkpoint_dir=self._checkpoint_dir,
             )
             self.handles[spec.name] = handle
         return handle

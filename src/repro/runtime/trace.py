@@ -10,9 +10,12 @@ allocation policy and returns comparable :class:`TraceReport`s.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.scheduler import JobSpec, random_jobs
+from repro.runtime.backend import RealBackendConfig
 from repro.runtime.events import (
     Event,
     JobArrival,
@@ -130,14 +133,21 @@ def replay(
     steps: int = 4,
     noise: float = 0.0,
     seed: int = 0,
+    real_backend: Optional[RealBackendConfig] = None,
+    checkpoint_dir: Optional[str] = None,
 ) -> TraceReport:
     """Replay ``trace`` through a fresh :class:`ClusterRuntime`.
 
     Events reconcile in time order; with ``epochs_per_event > 0`` every
-    running job additionally advances that many simulated training epochs
-    after each event (plan → simulate → observe — so controllers learn,
-    bootstrap, and reach the optperf phase mid-trace)."""
-    rt = ClusterRuntime(n_nodes, policy=policy, engine=engine, noise=noise, seed=seed)
+    running job additionally advances that many training epochs after each
+    event (plan → execute → observe over each job's execution backend — so
+    controllers learn, bootstrap, and reach the optperf phase mid-trace).
+    ``real_backend``/``checkpoint_dir`` plumb through to the runtime for
+    traces whose specs name ``backend="real"``."""
+    rt = ClusterRuntime(
+        n_nodes, policy=policy, engine=engine, noise=noise, seed=seed,
+        real_backend=real_backend, checkpoint_dir=checkpoint_dir,
+    )
     for event in trace:
         rt.post(event)
     records: List[ReconcileRecord] = []
@@ -160,6 +170,8 @@ def compare_policies(
     steps: int = 4,
     noise: float = 0.0,
     seed: int = 0,
+    real_backend: Optional[RealBackendConfig] = None,
+    checkpoint_dir: Optional[str] = None,
 ) -> Dict[str, TraceReport]:
     """Replay one trace under several allocation policies (fresh runtime
     each) and return the per-policy reports — baselines and Cannikin
@@ -174,6 +186,8 @@ def compare_policies(
             steps=steps,
             noise=noise,
             seed=seed,
+            real_backend=real_backend,
+            checkpoint_dir=checkpoint_dir,
         )
         for name in policies
     }
@@ -188,26 +202,72 @@ def synthetic_trace(
     departure: bool = True,
     node_leave: bool = True,
     refit: bool = False,
+    arrival: str = "fixed",
+    size_dist: str = "fixed",
+    size_sigma: float = 1.0,
+    backend: Optional[str] = None,
+    total_batch: Optional[int] = None,
 ) -> Tuple[Trace, List[JobSpec]]:
     """The canonical churn scenario over the seeded random job mix.
 
-    Jobs arrive ``arrival_spacing`` apart; optionally the first job departs
-    after the last arrival, one node fails after that, and the last job's
-    model is refit at the end — i.e. the acceptance scenario (arrivals,
-    one departure, one node leave) in one call.  Returns ``(trace, jobs)``
-    so callers can also drive the same jobs by hand."""
+    Jobs arrive one after another; optionally the first job departs after
+    the last arrival, one node fails after that, and the last job's model
+    is refit at the end — i.e. the acceptance scenario (arrivals, one
+    departure, one node leave) in one call.  Returns ``(trace, jobs)`` so
+    callers can also drive the same jobs by hand.
+
+    ``arrival`` selects the arrival process: ``"fixed"`` (the default —
+    exactly ``arrival_spacing`` apart, unchanged from earlier releases) or
+    ``"poisson"`` (exponential inter-arrival times with mean
+    ``arrival_spacing``, i.e. a Poisson process of rate
+    ``1/arrival_spacing``).  ``size_dist`` selects the job-size law:
+    ``"fixed"`` keeps :func:`random_jobs`'s categorical total batches;
+    ``"lognormal"`` multiplies each job's total batch by a heavy-tailed
+    ``exp(N(0, size_sigma))`` draw (the log-normal job-size skew real
+    cluster traces show), floored at the job's reference batch.  Both draws
+    come from one RNG seeded by ``seed``, so traces stay reproducible.
+
+    ``backend`` (``"sim"``/``"real"``) stamps every job's execution
+    backend; ``total_batch`` overrides every job's total batch (useful to
+    shrink real-backend traces to CPU-sized batches).
+    """
+    if arrival not in ("fixed", "poisson"):
+        raise ValueError(f"unknown arrival process {arrival!r}")
+    if size_dist not in ("fixed", "lognormal"):
+        raise ValueError(f"unknown job-size distribution {size_dist!r}")
     jobs = random_jobs(n_jobs, n_nodes, seed)
+    rng = np.random.default_rng(seed)
+    stamped = []
+    for job in jobs:
+        changes: Dict[str, object] = {}
+        if total_batch is not None:
+            changes["total_batch"] = int(total_batch)
+        elif size_dist == "lognormal":
+            factor = float(rng.lognormal(mean=0.0, sigma=size_sigma))
+            changes["total_batch"] = max(
+                job.ref_batch, int(round(job.total_batch * factor))
+            )
+        if backend is not None:
+            changes["backend"] = backend
+        stamped.append(dataclasses.replace(job, **changes) if changes else job)
+    jobs = stamped
     trace = Trace()
     t = 0.0
+
+    def gap() -> float:
+        if arrival == "poisson":
+            return float(rng.exponential(arrival_spacing))
+        return arrival_spacing
+
     for job in jobs:
         trace.arrive(job, at=t)
-        t += arrival_spacing
+        t += gap()
     if departure and n_jobs > 1:
         trace.complete(jobs[0].name, at=t)
-        t += arrival_spacing
+        t += gap()
     if node_leave and n_nodes > 1:
         trace.node_leave([n_nodes - 1], at=t)
-        t += arrival_spacing
+        t += gap()
     if refit:
         trace.refit(jobs[-1].name, at=t, rel=0.2, seed=seed + 1)
     return trace, jobs

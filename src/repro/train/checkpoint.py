@@ -71,7 +71,13 @@ def restore(path: str, like: PyTree) -> PyTree:
                     f"shape mismatch for {k}: checkpoint {arr.shape} vs model {want_shape}"
                 )
             if dtypes.get(k) == "bfloat16":
-                arr = jnp.asarray(arr, jnp.bfloat16)
-            leaves.append(jnp.asarray(arr))
+                leaves.append(jnp.asarray(arr, jnp.bfloat16))
+                continue
+            # Leaves that were not JAX arrays when saved (plain NumPy
+            # scalars/arrays — e.g. the GNS EMAs and stream counters of a
+            # backend snapshot) keep their saved dtype: jnp.asarray would
+            # silently downcast float64 under the default x64-disabled
+            # config and break bit-exact resume.
+            leaves.append(jnp.asarray(arr) if isinstance(leaf, jax.Array) else arr)
         treedef = jax.tree_util.tree_structure(like)
         return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -5,44 +5,34 @@ supplies the wall-clock the heterogeneous cluster would have taken — the
 separation the paper itself makes between statistical behaviour (identical to
 homogeneous training thanks to Eq. 9) and system behaviour (per-node timing).
 
-Per step:
-  1. partition the global batch by the active policy's local batch sizes,
-  2. compute each node's local gradient g_i and |g_i|^2 (one vmapped
-     backward over the padded (n, b_max) layout),
-  3. aggregate g = sum r_i g_i (Eq. 9) and |g|^2, update params once,
-  4. feed (|g_i|^2, |g|^2, b) to the GNS tracker (Theorem 4.1 weights),
-  5. advance the simulated clock by the cluster's batch time.
-
-After each epoch the controller refits performance models and plans the next
-epoch (OptPerf partition + adaptive total batch).  Baseline policies
-(even/LB-BSP) plug into the same loop.
-
-Recompilation hygiene: the padded per-node width b_max is quantized to a
-multiple of 8 so epoch-to-epoch repartitioning reuses compiled steps
-(beyond-paper; noted in EXPERIMENTS.md §Perf).
+Since the ExecutionBackend refactor this class is a thin compatibility shell:
+the gradient engine lives in :class:`repro.runtime.backend.RealBackend`
+(vmapped per-node backward, Eq. 9 aggregation, Theorem-4.1 GNS tracking,
+simulated clock, preemption snapshot/restore) and the plan → execute →
+observe policy loop in :class:`repro.runtime.backend.EpochLoop` — the same
+loop ``JobHandle.advance`` drives inside the cluster runtime.  `HeteroTrainer`
+keeps the historical constructor and the :class:`EpochResult` history format
+for existing callers; new code should use the backend/loop API directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.aggregation import ratios
-from repro.core.controller import CannikinController
 from repro.core.simulator import SimulatedCluster
-from repro.data.pipeline import HeteroBatchPartitioner, SyntheticLM
+from repro.data.pipeline import SyntheticLM
 from repro.models.registry import ModelApi
-from repro.optim.optimizers import Optimizer, global_norm
+from repro.optim.optimizers import Optimizer
+from repro.runtime.backend import EpochLoop, EpochRecord, RealBackend
 
 __all__ = ["HeteroTrainer", "EpochResult"]
 
 
 @dataclasses.dataclass
 class EpochResult:
+    """Per-epoch summary in the historical (pre-:class:`EpochRecord`)
+    layout, kept for JSON dumps and existing callers."""
+
     epoch: int
     total_batch: int
     batches: Tuple[int, ...]
@@ -54,9 +44,20 @@ class EpochResult:
     lr_scale: float
     phase: str
 
-
-def _quantize(b: int, q: int = 8) -> int:
-    return max(q, ((b + q - 1) // q) * q)
+    @classmethod
+    def from_record(cls, record: EpochRecord) -> "EpochResult":
+        return cls(
+            epoch=record.epoch,
+            total_batch=record.total_batch,
+            batches=record.batches,
+            sim_seconds=record.epoch_seconds,
+            mean_loss=record.mean_loss,
+            predicted_batch_time=record.predicted_batch_time,
+            measured_batch_time=record.measured_batch_time,
+            b_noise=record.b_noise,
+            lr_scale=record.lr_scale,
+            phase=record.phase,
+        )
 
 
 class HeteroTrainer:
@@ -77,138 +78,45 @@ class HeteroTrainer:
         self.policy = policy
         self.data = data
         self.steps_per_epoch = steps_per_epoch
-        rng = jax.random.PRNGKey(seed)
-        self.params = api.init(rng)
-        self.opt_state = optimizer.init(self.params)
-        self.sim_time = 0.0
+        self.backend = RealBackend(
+            api,
+            optimizer,
+            data,
+            cluster=cluster,
+            seed=seed,
+            gns_decay=getattr(policy, "gns_decay", 0.9),
+        )
+        self.loop = EpochLoop(
+            policy, self.backend, steps_per_epoch=steps_per_epoch
+        )
         self.history: List[EpochResult] = []
-        self._step_cache: Dict[int, Callable] = {}
-        self._epoch = 0
-        self._last_measurement = None
 
-    # ------------------------------------------------------------------
+    # -- state passthrough (historical surface) --------------------------
 
-    def _node_grad_fn(self, b_max: int) -> Callable:
-        """Jitted: per-node grads + sq-norms + Eq.(9) aggregate + update."""
-        if b_max in self._step_cache:
-            return self._step_cache[b_max]
-        api, optimizer = self.api, self.optimizer
+    @property
+    def params(self):
+        return self.backend.params
 
-        def node_loss(params, tokens, labels, mask):
-            # mean over the node's real samples (pads weighted 0).
-            loss, _ = api.loss(
-                params,
-                {"tokens": tokens, "labels": labels, "weights": mask},
-            )
-            return loss
+    @params.setter
+    def params(self, value) -> None:
+        self.backend.params = value
 
-        grad_fn = jax.grad(node_loss)
+    @property
+    def opt_state(self):
+        return self.backend.opt_state
 
-        def step(params, opt_state, tokens, labels, mask, r, lr_scale):
-            # tokens/labels: (n, b_max, S); mask: (n, b_max); r: (n,)
-            grads = jax.vmap(grad_fn, in_axes=(None, 0, 0, 0))(
-                params, tokens, labels, mask
-            )
-            sq_i = jax.vmap(lambda g: global_norm(g) ** 2)(grads)
-            agg = jax.tree_util.tree_map(
-                lambda g: jnp.tensordot(r.astype(jnp.float32), g.astype(jnp.float32), axes=1).astype(g.dtype),
-                grads,
-            )
-            sq_g = global_norm(agg) ** 2
-            loss, _ = api.loss(
-                params,
-                {
-                    "tokens": tokens.reshape((-1,) + tokens.shape[2:]),
-                    "labels": labels.reshape((-1,) + labels.shape[2:]),
-                    "weights": mask.reshape(-1),
-                },
-            )
-            new_params, new_opt = optimizer.update(agg, opt_state, params, lr_scale)
-            return new_params, new_opt, loss, sq_i, sq_g
+    @opt_state.setter
+    def opt_state(self, value) -> None:
+        self.backend.opt_state = value
 
-        fn = jax.jit(step)
-        self._step_cache[b_max] = fn
-        return fn
+    @property
+    def sim_time(self) -> float:
+        return self.backend.sim_time
 
     # ------------------------------------------------------------------
 
     def run_epoch(self) -> EpochResult:
-        epoch = self._epoch
-        self._epoch += 1
-
-        # 1. plan
-        if isinstance(self.policy, CannikinController):
-            plan = self.policy.plan_epoch()
-            batches = list(plan.batches)
-            total = plan.total_batch
-            lr_scale = plan.lr_scale
-            predicted = plan.predicted_batch_time
-            phase = plan.phase
-        else:
-            total = self.policy_total_batch()
-            batches = self.policy.partition(total, epoch, self._last_measurement)
-            lr_scale, predicted, phase = 1.0, None, self.policy.name
-
-        # 2. run steps
-        b_arr = np.asarray(batches, np.int64)
-        b_max = _quantize(int(b_arr.max()))
-        n = len(batches)
-        r = jnp.asarray(ratios(batches), jnp.float32)
-        step_fn = self._node_grad_fn(b_max)
-
-        losses = []
-        for s in range(self.steps_per_epoch):
-            global_step = epoch * self.steps_per_epoch + s
-            raw = self.data.batch(global_step, int(b_arr.sum()))
-            padded, _ = HeteroBatchPartitioner.padded(raw, batches)
-            seq = padded["tokens"].shape[-1]
-            tok = np.zeros((n, b_max, seq), np.int32)
-            lab = np.zeros((n, b_max, seq), np.int32)
-            msk = np.zeros((n, b_max), np.float32)
-            w = padded["tokens"].shape[1]
-            tok[:, :w], lab[:, :w] = padded["tokens"], padded["labels"]
-            for i, b in enumerate(batches):
-                msk[i, :b] = 1.0
-            self.params, self.opt_state, loss, sq_i, sq_g = step_fn(
-                self.params,
-                self.opt_state,
-                jnp.asarray(tok),
-                jnp.asarray(lab),
-                jnp.asarray(msk),
-                r,
-                jnp.float32(lr_scale),
-            )
-            losses.append(float(loss))
-            if isinstance(self.policy, CannikinController):
-                self.policy.observe_gradients(
-                    [float(x) for x in np.asarray(sq_i)], float(sq_g), batches
-                )
-
-        # 3. simulated timing
-        sim_seconds, measurements = self.cluster.run_epoch(
-            batches, self.steps_per_epoch
-        )
-        self.sim_time += sim_seconds
-        self._last_measurement = measurements[-1]
-        if isinstance(self.policy, CannikinController):
-            self.policy.observe_epoch(measurements)
-
-        result = EpochResult(
-            epoch=epoch,
-            total_batch=int(total),
-            batches=tuple(int(b) for b in batches),
-            sim_seconds=sim_seconds,
-            mean_loss=float(np.mean(losses)),
-            predicted_batch_time=predicted,
-            measured_batch_time=sim_seconds / self.steps_per_epoch,
-            b_noise=(
-                self.policy.gns.b_noise
-                if isinstance(self.policy, CannikinController)
-                else float("nan")
-            ),
-            lr_scale=float(lr_scale),
-            phase=phase,
-        )
+        result = EpochResult.from_record(self.loop.run_epoch())
         self.history.append(result)
         return result
 
@@ -221,6 +129,7 @@ class HeteroTrainer:
 
     def set_fixed_total(self, total: int) -> None:
         self._fixed_total = total
+        self.loop.fixed_total = total
 
     def run(self, epochs: int, *, target_loss: Optional[float] = None) -> List[EpochResult]:
         for _ in range(epochs):

@@ -1,0 +1,123 @@
+"""Batched chosen-set re-solves (scheduler satellite): the stacked
+multi-subset water-fill must be *bit-identical* to the scalar per-subset
+oracle, and `allocate` must emit oracle-bit-identical goodputs while doing
+one stacked chosen-set call per distinct set size instead of one scalar
+solve per greedy round."""
+import numpy as np
+import pytest
+
+from repro.core.optperf import (
+    solve_optperf_waterfill_subset,
+    solve_optperf_waterfill_subsets,
+)
+from repro.core.perf_model import CommModel, NodePerfModel
+from repro.core.scheduler import (
+    JobSpec,
+    _chosen_goodput_batch,
+    allocate,
+    random_jobs,
+)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_subsets_bit_identical_to_scalar(seed):
+    """Mixed sizes, mixed models (each row carries its own comm model):
+    every field of every row equals the solo scalar solve exactly — no
+    tolerance."""
+    rng = np.random.default_rng(seed)
+    jobs = random_jobs(5, 16, seed=100 + seed)
+    models, sets, totals = [], [], []
+    for _ in range(120):
+        job = jobs[int(rng.integers(len(jobs)))]
+        m = int(rng.integers(1, 17))
+        ids = tuple(sorted(rng.choice(16, size=m, replace=False).tolist()))
+        models.append(job.full_model)
+        sets.append(ids)
+        totals.append(float(rng.choice([32, 64, 256, 1024, 4096])))
+    batch = solve_optperf_waterfill_subsets(models, sets, totals)
+    assert len(batch) == len(sets)
+    for i in range(len(sets)):
+        solo = solve_optperf_waterfill_subset(models[i], sets[i], totals[i])
+        assert batch[i].opt_perf == solo.opt_perf, i
+        assert batch[i].batches == solo.batches, i
+        assert batch[i].bottleneck == solo.bottleneck, i
+        assert batch[i].total_batch == solo.total_batch, i
+
+
+def test_subsets_validation_matches_scalar():
+    jobs = random_jobs(1, 4, seed=7)
+    model = jobs[0].full_model
+    with pytest.raises(ValueError):
+        solve_optperf_waterfill_subsets([model], [()], [64.0])
+    with pytest.raises(ValueError):
+        solve_optperf_waterfill_subsets([model], [(0, 1)], [0.0])
+    with pytest.raises(ValueError):
+        solve_optperf_waterfill_subsets([model], [(0,)], [64.0, 128.0])
+    bad = JobSpec(
+        name="bad",
+        node_models=tuple(
+            NodePerfModel(q=float("nan"), s=0.0, k=1e-3, m=0.0) for _ in range(4)
+        ),
+        comm=CommModel(t_o=0.02, t_u=0.005, gamma=0.1),
+        total_batch=64,
+        b_noise=100.0,
+        ref_batch=64,
+    )
+    with pytest.raises(ValueError):
+        solve_optperf_waterfill_subsets([bad.full_model], [(0, 1)], [64.0])
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_allocate_emits_goodputs_bit_identical_to_scalar_oracle(seed):
+    """The deferred+batched chosen-set path must keep the oracle-parity
+    contract *bit-for-bit*: same assignments as the scalar oracle, and
+    emitted goodputs exactly equal to the scalar chosen-set re-solve of the
+    emitted (sorted) node sets — what every pre-batching release emitted.
+    (The scalar engine's own emissions evaluate sets in take order, which
+    differs in the last bits; the existing cross-engine test covers that at
+    rel=1e-12.)"""
+    jobs = random_jobs(4, 12, seed)
+    a_b = allocate(jobs, 12, engine="batched")
+    a_s = allocate(jobs, 12, engine="scalar")
+    assert a_b.assignment == a_s.assignment
+    by_name = {j.name: j for j in jobs}
+    for name, ids in a_b.assignment.items():
+        expected = by_name[name].goodput(ids) if ids else 0.0
+        assert a_b.goodputs[name] == expected, name
+
+
+def test_chosen_goodput_batch_matches_jobspec_goodput():
+    """The scheduler-side helper replicates JobSpec.goodput semantics
+    exactly: min_nodes floors and ill-posed models yield 0.0, everything
+    else is the bit-identical subset solve times efficiency."""
+    jobs = random_jobs(3, 8, seed=17)
+    floor = JobSpec(
+        name="floor",
+        node_models=jobs[0].node_models,
+        comm=jobs[0].comm,
+        total_batch=jobs[0].total_batch,
+        b_noise=jobs[0].b_noise,
+        ref_batch=jobs[0].ref_batch,
+        min_nodes=4,
+    )
+    broken = JobSpec(
+        name="broken",
+        node_models=tuple(
+            NodePerfModel(q=-5e-3, s=0.0, k=1e-1, m=0.0) for _ in range(8)
+        ),
+        comm=CommModel(t_o=0.02, t_u=0.005, gamma=0.1),
+        total_batch=128,
+        b_noise=500.0,
+        ref_batch=64,
+    )
+    pairs = [
+        (jobs[0], (0, 1, 2)),
+        (floor, (0, 1)),          # below min_nodes -> 0.0
+        (jobs[1], (3, 4, 5, 6)),
+        (broken, (0, 1)),         # ill-posed -> 0.0 (per-pair fallback)
+        (jobs[2], (7,)),
+    ]
+    values = _chosen_goodput_batch(pairs)
+    for (job, ids), value in zip(pairs, values):
+        assert value == job.goodput(ids), job.name
+    assert values[1] == 0.0 and values[3] == 0.0
