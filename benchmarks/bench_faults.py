@@ -1,0 +1,136 @@
+"""Fault-recovery overhead lane: chaos replay vs its fault-free twin.
+
+    PYTHONPATH=src:. python -m benchmarks.bench_faults [--smoke]
+
+Replays the standard 3-job synthetic trace under the default seeded chaos
+plan (one crash, one transient straggler, one flapping node, one noise
+spike — see ``FaultPlan.chaos``) with the HealthMonitor detecting and the
+runtime self-healing, then measures what the faults cost:
+
+* ``goodput_retention`` — fault-free sim-time / faulted sim-time (gate:
+  >= 0.8 — detection plus recovery must keep at least 80% of throughput);
+* ``detection_latency_epochs`` / ``mttr_epochs`` — how fast faults are
+  caught and repaired;
+* wall-clock replay overhead of the fault-tolerance layer itself on a
+  fault-free trace (injector + monitor present but idle).
+
+Results merge into ``artifacts/bench/sweep.json`` under the ``"faults"``
+key so the sweep artifact stays the one-stop perf record.
+"""
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from benchmarks.common import ARTIFACTS, Row, save_json
+
+from repro.runtime import FaultPlan, replay, synthetic_trace
+
+N_JOBS, N_NODES, SEED = 3, 12, 0
+EPOCHS_PER_EVENT, STEPS, NOISE = 6, 2, 0.01
+RETENTION_GATE = 0.8
+
+
+def _replay(faults=None, health=None, checkpoint_dir=None):
+    trace, _ = synthetic_trace(N_JOBS, N_NODES, seed=SEED)
+    return replay(
+        trace, N_NODES, policy="cannikin", epochs_per_event=EPOCHS_PER_EVENT,
+        steps=STEPS, noise=NOISE, seed=SEED, faults=faults, health=health,
+        checkpoint_dir=checkpoint_dir,
+    )
+
+
+def run(smoke: bool = False):
+    rows = []
+    plan = FaultPlan.chaos(N_NODES, seed=SEED)
+
+    # Chaos lane: the default plan on the standard trace -----------------
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        rep = _replay(faults=plan, checkpoint_dir=ckpt_dir)
+    chaos_s = time.perf_counter() - t0
+    telemetry = rep.runtime.fault_telemetry()
+    assert telemetry is not None
+    retention = rep.goodput_retention
+    assert retention is not None
+
+    # Overhead lane: injector + monitor present but idle (no faults) -----
+    t0 = time.perf_counter()
+    base = _replay()
+    plain_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    monitored = _replay(health=True)
+    monitored_s = time.perf_counter() - t0
+    overhead = (monitored_s - plain_s) / plain_s if plain_s > 0 else 0.0
+    # The observation-only guarantee: an idle monitor changes nothing.
+    assert monitored.runtime.allocation.assignment == base.runtime.allocation.assignment
+
+    record = {
+        "n_jobs": N_JOBS,
+        "n_nodes": N_NODES,
+        "seed": SEED,
+        "epochs_per_event": EPOCHS_PER_EVENT,
+        "plan": plan.describe(),
+        "goodput_retention": retention,
+        "retention_gate": RETENTION_GATE,
+        "detection_latency_epochs": telemetry["detection_latency_epochs"],
+        "mttr_epochs": telemetry["mttr_epochs"],
+        "mttr_sim_seconds": telemetry["mttr_sim_seconds"],
+        "detected": telemetry["detected"],
+        "recoveries": telemetry["recoveries"],
+        "faulted_sim_time": rep.total_sim_time,
+        "fault_free_sim_time": rep.baseline.total_sim_time,
+        "chaos_replay_s": chaos_s,
+        "monitor_overhead_frac": overhead,
+    }
+    rows.append(
+        Row(
+            f"faults/chaos/j{N_JOBS}xn{N_NODES}",
+            chaos_s * 1e6,
+            f"retention={retention:.3f};lat={telemetry['detection_latency_epochs']}ep;"
+            f"mttr={telemetry['mttr_epochs']}ep",
+        )
+    )
+    rows.append(
+        Row(
+            f"faults/monitor_idle/j{N_JOBS}xn{N_NODES}",
+            monitored_s * 1e6,
+            f"overhead={overhead * 100:.1f}%",
+        )
+    )
+
+    # Gate: detection + recovery must retain >= 80% of fault-free
+    # throughput on the standard trace under the default chaos plan.
+    # The replay is deterministic, so the gate holds in smoke runs too.
+    del smoke
+    assert retention >= RETENTION_GATE, (
+        f"goodput retention {retention:.3f} below gate {RETENTION_GATE}"
+    )
+
+    # Merge into the sweep artifact (keep every other lane's record).
+    sweep_path = os.path.join(ARTIFACTS, "bench", "sweep.json")
+    payload = {}
+    if os.path.exists(sweep_path):
+        try:
+            with open(sweep_path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload["faults"] = record
+    save_json("sweep", payload)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for lane-runner symmetry (already CI-sized)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

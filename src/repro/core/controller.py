@@ -148,7 +148,11 @@ class CannikinController:
             return
         n_steps = len(measurements)
         for i in range(self.n):
-            obs = [m.observations[i] for m in measurements]
+            # A crashed node reports nothing: its slot holds None and the
+            # fitter simply sees no sample this epoch.
+            obs = [m.observations[i] for m in measurements if m.observations[i] is not None]
+            if not obs:
+                continue
             self.fitters[i].add(
                 NodeObservation(
                     batch_size=obs[0].batch_size,
@@ -292,10 +296,19 @@ class CannikinController:
         self._epoch += 1
         self.stats.epochs_planned += 1
 
-        if not self.can_model():
+        model = None
+        if self.can_model():
+            try:
+                model = self.cluster_model()
+            except ValueError:
+                # A non-physical fit (negative slope) means the window is
+                # polluted — e.g. a straggler window straddling the fit.
+                # Plan the bootstrap split and re-learn from the next
+                # epochs' measurements instead of killing the job.
+                model = None
+        if model is None:
             plan = self._bootstrap_plan(epoch)
         else:
-            model = self.cluster_model()
             if self.adaptive:
                 best_b, sol, _ = self.selector.select(model, self.gns.b_noise)
             else:

@@ -157,6 +157,7 @@ def run_trace(args) -> int:
         RealBackendConfig,
         compare_policies,
         format_summary,
+        make_fault_plan,
         synthetic_trace,
     )
 
@@ -172,6 +173,7 @@ def run_trace(args) -> int:
         # a CPU-sized batch.
         total_batch=args.ref_batch if real else None,
     )
+    faults = make_fault_plan(args.faults, args.trace_nodes, seed=args.seed)
     reports = compare_policies(
         trace,
         args.trace_nodes,
@@ -186,9 +188,21 @@ def run_trace(args) -> int:
             arch=args.arch, seq_len=args.seq_len, lr=args.lr
         ) if real else None,
         checkpoint_dir=args.checkpoint_dir,
+        faults=faults,
     )
     print(f"# trace: {len(trace)} events, jobs={[j.name for j in jobs]}, "
           f"nodes={args.trace_nodes}")
+    if faults is not None:
+        for line in faults.describe():
+            print(f"# inject: {line}")
+        for name, rep in reports.items():
+            telemetry = rep.runtime.fault_telemetry()
+            if telemetry is None:
+                continue
+            retention = rep.goodput_retention
+            note = f" retention={retention:.3f}" if retention is not None else ""
+            print(f"# {name}: detected={telemetry['detected']} "
+                  f"recoveries={telemetry['recoveries']}{note}")
     print(format_summary(reports))
     if args.out:
         with open(args.out, "w") as f:
@@ -223,6 +237,9 @@ def main() -> int:
                     help="directory for preemption checkpoints (trace mode)")
     ap.add_argument("--trace-jobs", type=int, default=3)
     ap.add_argument("--trace-nodes", type=int, default=12)
+    ap.add_argument("--faults", default="none",
+                    choices=["none", "chaos", "chaos-small"],
+                    help="seeded fault plan injected into trace replays")
     ap.add_argument("--epochs-per-event", type=int, default=2)
     ap.add_argument("--arrival", default="fixed", choices=["fixed", "poisson"])
     ap.add_argument("--size-dist", default="fixed", choices=["fixed", "lognormal"])

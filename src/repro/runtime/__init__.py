@@ -26,6 +26,12 @@ hardware come and go.  This package exposes that loop as one API:
 * :class:`Trace` / :func:`replay` / :func:`compare_policies` — synthetic
   multi-job churn workloads over :class:`~repro.core.simulator.
   SimulatedCluster` (the Pollux/Sia-style cluster simulation).
+* :class:`FaultPlan` / :class:`FaultInjector` / :class:`HealthMonitor` —
+  the fault-tolerance layer: seeded deterministic fault injection
+  (crashes, stragglers, noise spikes, flaky checkpoint I/O), telemetry-
+  driven detection (EWMA residuals, quarantine with exponential-backoff
+  re-admission), and self-healing recovery through the reconcile loop
+  (``replay(..., faults=FaultPlan.chaos(n))``).
 * :func:`make_partition_policy` / :func:`drive_partition_policy` — the
   single-job batch-partition factory + epoch-driving loop shared by the
   launch CLI, examples, and benchmarks.
@@ -64,6 +70,27 @@ from repro.runtime.events import (
     NodeLeave,
     Preemption,
     describe,
+)
+from repro.runtime.faults import (
+    FAULT_PLANS,
+    FaultInjector,
+    FaultPlan,
+    FlakyCheckpointIO,
+    FlakyCheckpoints,
+    NodeCrash,
+    NoiseSpike,
+    Straggler,
+    make_fault_plan,
+)
+from repro.runtime.health import (
+    CrashDetected,
+    HealthAction,
+    HealthConfig,
+    HealthMonitor,
+    NodeState,
+    QuarantineNode,
+    ReadmitNode,
+    RefitRequested,
 )
 from repro.runtime.policy import (
     POLICIES,
@@ -130,4 +157,21 @@ __all__ = [
     "compare_policies",
     "synthetic_trace",
     "format_summary",
+    "FAULT_PLANS",
+    "FaultPlan",
+    "FaultInjector",
+    "FlakyCheckpointIO",
+    "FlakyCheckpoints",
+    "NodeCrash",
+    "NoiseSpike",
+    "Straggler",
+    "make_fault_plan",
+    "HealthAction",
+    "HealthConfig",
+    "HealthMonitor",
+    "NodeState",
+    "CrashDetected",
+    "QuarantineNode",
+    "ReadmitNode",
+    "RefitRequested",
 ]

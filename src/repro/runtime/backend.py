@@ -181,12 +181,19 @@ class SimBackend:
     kind = "sim"
 
     def __init__(
-        self, cluster: Optional[SimulatedCluster] = None, *, noise: float = 0.0
+        self,
+        cluster: Optional[SimulatedCluster] = None,
+        *,
+        noise: float = 0.0,
+        injector: Any = None,
     ) -> None:
         self.cluster = cluster
         self.noise = noise
+        self.injector = injector  # Optional[repro.runtime.faults.FaultInjector]
         self.sim_time = 0.0
         self.epochs_run = 0
+        self._job: Optional[str] = None
+        self._node_ids: Tuple[int, ...] = ()
 
     def configure(
         self, spec: JobSpec, node_ids: Sequence[int], *, seed: int = 0
@@ -194,6 +201,8 @@ class SimBackend:
         self.cluster = SimulatedCluster(
             _profiles_for(spec, node_ids), spec.comm, noise=self.noise, seed=seed
         )
+        self._job = spec.name
+        self._node_ids = tuple(int(n) for n in node_ids)
 
     def execute(
         self, batches: Sequence[int], steps: int, *, lr_scale: float = 1.0
@@ -201,6 +210,13 @@ class SimBackend:
         if self.cluster is None:
             raise RuntimeError("SimBackend not configured with a cluster")
         t, ms = self.cluster.run_epoch(list(batches), steps)
+        if self.injector is not None:
+            # Pure post-transform of the measurements: the cluster's RNG
+            # stream is untouched, so the fault-free replay stays
+            # bit-identical and faults compose deterministically on top.
+            t, ms = self.injector.perturb(
+                self._job or "?", self._node_ids, t, list(ms)
+            )
         self.sim_time += t
         self.epochs_run += 1
         return ExecutionResult(
@@ -482,10 +498,11 @@ def make_backend(
     noise: float = 0.0,
     seed: int = 0,
     real_config: Optional[RealBackendConfig] = None,
+    injector: Any = None,
 ) -> "ExecutionBackend":
     """Build an execution backend by the name a :class:`JobSpec` carries."""
     if kind == "sim":
-        return SimBackend(noise=noise)
+        return SimBackend(noise=noise, injector=injector)
     if kind == "real":
         return (real_config or RealBackendConfig()).build(noise=noise, seed=seed)
     raise ValueError(f"unknown execution backend {kind!r}; choose from {BACKENDS}")

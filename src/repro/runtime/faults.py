@@ -1,0 +1,416 @@
+"""Deterministic fault injection for the cluster runtime.
+
+Real heterogeneous clusters straggle, crash, flap, and lie about their
+timings — Poplar treats tolerating slow workers as inseparable from
+heterogeneous efficiency, and the paper's per-node coefficients (Eqs. 2–6)
+only describe hardware that is actually healthy.  This module is the
+*injection* third of the fault-tolerance layer (detection lives in
+:mod:`repro.runtime.health`, recovery in the
+:class:`~repro.runtime.runtime.ClusterRuntime` reconcile loop):
+
+* :class:`FaultPlan` — a frozen, seeded schedule of faults over global
+  epoch indices.  Same seed ⇒ bit-identical schedule; composable with any
+  trace (:func:`~repro.runtime.trace.synthetic_trace` included) because it
+  addresses nodes by global id and time by the runtime's epoch counter.
+* :class:`FaultInjector` — applies the plan to ``SimBackend`` executions:
+  it perturbs the :class:`~repro.core.simulator.StepMeasurement` stream
+  *after* the simulated cluster ran, so the cluster's own RNG stream is
+  never consumed or reordered — a replay with no active fault is
+  bit-identical to a run with no injector at all.
+* :class:`FlakyCheckpointIO` — the injectable I/O seam of
+  :func:`repro.train.checkpoint.save`: fails the first N checkpoint write
+  attempts with ``OSError`` so the runtime's retry/fallback path is
+  exercised deterministically.
+
+Fault kinds:
+
+* :class:`NodeCrash` — silent stop (NOT a polite NodeLeave): from
+  ``at_epoch`` the node produces no observations (``None`` in the
+  measurement stream) while jobs still hold it, and every epoch that waits
+  on it stalls by ``stall``x.  Detection must come from the *absence* of
+  telemetry.
+* :class:`Straggler` — transient throughput degradation: the node's
+  observed a-part/backprop/comm times are multiplied by ``slowdown`` for
+  ``duration`` epochs from ``at_epoch`` (cluster batch time follows, since
+  the synchronous step waits for the slowest node).  Two windows on the
+  same node model a *flapping* node.
+* :class:`NoiseSpike` — a measurement-noise burst: per-step multiplicative
+  lognormal jitter of scale ``scale`` on the node's observed times for the
+  window.  Zero-mean in log-space, so a well-tuned detector should ride it
+  out rather than quarantine.
+* :class:`FlakyCheckpoints` — the first ``failures`` checkpoint writes
+  raise ``OSError`` through the I/O seam.
+
+All random factors are drawn from *stateless* generators keyed by
+``(plan seed, epoch, node)``, so the schedule is bit-identical no matter
+how many jobs execute, in what order, or how often a trace is replayed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.simulator import StepMeasurement
+
+__all__ = [
+    "NodeCrash",
+    "Straggler",
+    "NoiseSpike",
+    "FlakyCheckpoints",
+    "FaultPlan",
+    "FaultInjector",
+    "FlakyCheckpointIO",
+    "FAULT_PLANS",
+    "make_fault_plan",
+]
+
+
+# ---------------------------------------------------------------------------
+# fault kinds
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeCrash:
+    """Silent node death at ``at_epoch``: no observations, ``stall``x epoch
+    stall for every job still holding the node.  Permanent — recovery is
+    the runtime's job (detect, drain, checkpoint-restore), not the fault's."""
+
+    node: int
+    at_epoch: int
+    stall: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler:
+    """Transient ``slowdown``x degradation of one node's observed times for
+    ``duration`` epochs starting at ``at_epoch``."""
+
+    node: int
+    at_epoch: int
+    duration: int
+    slowdown: float = 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSpike:
+    """Measurement-noise burst: per-step lognormal jitter of scale
+    ``scale`` on one node's observed times for ``duration`` epochs."""
+
+    node: int
+    at_epoch: int
+    duration: int
+    scale: float = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class FlakyCheckpoints:
+    """The first ``failures`` checkpoint write attempts raise OSError."""
+
+    failures: int = 1
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, immutable fault schedule (the chaos experiment's input).
+
+    ``seed`` keys every stochastic draw (noise-spike jitter); the fault
+    tuples are explicit, so the schedule is bit-identical by construction
+    and printable for the trace log.
+    """
+
+    seed: int = 0
+    crashes: Tuple[NodeCrash, ...] = ()
+    stragglers: Tuple[Straggler, ...] = ()
+    spikes: Tuple[NoiseSpike, ...] = ()
+    flaky_checkpoints: Optional[FlakyCheckpoints] = None
+
+    @classmethod
+    def chaos(cls, n_nodes: int, seed: int = 0) -> "FaultPlan":
+        """The default chaos plan over a >= 4-node cluster: one crash, one
+        transient straggler, one flapping node (two straggler windows, so
+        the quarantine backoff doubles), one noise spike, and one flaky
+        checkpoint write.  Nodes are drawn from the seeded RNG, excluding
+        the highest id (synthetic traces take that node down themselves)."""
+        if n_nodes < 4:
+            raise ValueError("chaos plan needs >= 4 nodes")
+        rng = np.random.default_rng(seed)
+        straggler, flapper, crash, spiky = (
+            int(i) for i in rng.choice(n_nodes - 1, size=4, replace=False)
+        )
+        return cls(
+            seed=seed,
+            crashes=(NodeCrash(node=crash, at_epoch=10, stall=2.0),),
+            stragglers=(
+                Straggler(node=straggler, at_epoch=4, duration=3, slowdown=3.0),
+                # The flapping node: degrades, gets quarantined, recovers,
+                # then degrades again after re-admission (backoff doubles).
+                Straggler(node=flapper, at_epoch=8, duration=2, slowdown=4.0),
+                Straggler(node=flapper, at_epoch=14, duration=3, slowdown=4.0),
+            ),
+            spikes=(NoiseSpike(node=spiky, at_epoch=6, duration=3, scale=0.2),),
+            flaky_checkpoints=FlakyCheckpoints(failures=1),
+        )
+
+    @classmethod
+    def chaos_small(cls, n_nodes: int, seed: int = 0) -> "FaultPlan":
+        """CI-sized chaos: the same fault mix compressed into fewer epochs
+        (crash + straggler + flapping node inside a ~16-epoch replay)."""
+        if n_nodes < 4:
+            raise ValueError("chaos plan needs >= 4 nodes")
+        rng = np.random.default_rng(seed)
+        straggler, flapper, crash, spiky = (
+            int(i) for i in rng.choice(n_nodes - 1, size=4, replace=False)
+        )
+        return cls(
+            seed=seed,
+            crashes=(NodeCrash(node=crash, at_epoch=8, stall=2.0),),
+            stragglers=(
+                Straggler(node=straggler, at_epoch=3, duration=3, slowdown=3.0),
+                Straggler(node=flapper, at_epoch=6, duration=2, slowdown=4.0),
+                Straggler(node=flapper, at_epoch=11, duration=2, slowdown=4.0),
+            ),
+            spikes=(NoiseSpike(node=spiky, at_epoch=5, duration=2, scale=0.2),),
+            flaky_checkpoints=FlakyCheckpoints(failures=1),
+        )
+
+    def describe(self) -> List[str]:
+        """One line per scheduled fault (trace logs)."""
+        out = [
+            f"crash(node={c.node}, epoch={c.at_epoch}, stall={c.stall}x)"
+            for c in self.crashes
+        ]
+        out += [
+            f"straggler(node={s.node}, epochs={s.at_epoch}..{s.at_epoch + s.duration - 1}, "
+            f"{s.slowdown}x)"
+            for s in self.stragglers
+        ]
+        out += [
+            f"noise-spike(node={s.node}, epochs={s.at_epoch}..{s.at_epoch + s.duration - 1}, "
+            f"scale={s.scale})"
+            for s in self.spikes
+        ]
+        if self.flaky_checkpoints is not None:
+            out.append(f"flaky-checkpoints(failures={self.flaky_checkpoints.failures})")
+        return out
+
+    def counts(self) -> Dict[str, int]:
+        return {
+            "crashes": len(self.crashes),
+            "stragglers": len(self.stragglers),
+            "noise_spikes": len(self.spikes),
+            "flaky_checkpoint_writes": (
+                self.flaky_checkpoints.failures if self.flaky_checkpoints else 0
+            ),
+        }
+
+
+FAULT_PLANS = ("none", "chaos", "chaos-small")
+
+
+def make_fault_plan(name: str, n_nodes: int, seed: int = 0) -> Optional[FaultPlan]:
+    """Build a named fault plan (the ``--faults`` CLI vocabulary)."""
+    if name in ("none", ""):
+        return None
+    if name == "chaos":
+        return FaultPlan.chaos(n_nodes, seed)
+    if name == "chaos-small":
+        return FaultPlan.chaos_small(n_nodes, seed)
+    raise ValueError(f"unknown fault plan {name!r}; choose from {FAULT_PLANS}")
+
+
+# ---------------------------------------------------------------------------
+# the injectable checkpoint I/O seam
+# ---------------------------------------------------------------------------
+
+
+class FlakyCheckpointIO:
+    """Checkpoint I/O (the ``io`` seam of :func:`repro.train.checkpoint.save`)
+    that raises ``OSError`` on the first ``failures`` write attempts, then
+    behaves normally.  ``attempts``/``failed`` counters make the retry path
+    observable."""
+
+    def __init__(self, failures: int) -> None:
+        self.failures = int(failures)
+        self.attempts = 0
+        self.failed = 0
+
+    def open(self, path: str, mode: str):
+        self.attempts += 1
+        if self.failed < self.failures:
+            self.failed += 1
+            raise OSError(f"injected checkpoint write failure #{self.failed}")
+        return open(path, mode)
+
+    def replace(self, src: str, dst: str) -> None:
+        os.replace(src, dst)
+
+
+# ---------------------------------------------------------------------------
+# the injector
+# ---------------------------------------------------------------------------
+
+
+class FaultInjector:
+    """Applies a :class:`FaultPlan` to backend executions.
+
+    One injector is shared by every job of a runtime; the runtime advances
+    its global epoch counter (``begin_epoch``) and each job's ``SimBackend``
+    calls :meth:`perturb` after its simulated epoch ran.  Perturbation is a
+    pure post-transform of the measurement stream — the simulated cluster's
+    RNG is untouched, so a no-fault epoch is bit-identical to an
+    injector-free run (the layer is invisible until it fires).
+
+    ``injected`` records each fault instance the first epoch it actually
+    affected an execution (``{"kind", "node", "epoch"}``) — the telemetry
+    the detection-latency / MTTR accounting matches against.
+    """
+
+    def __init__(self, plan: FaultPlan) -> None:
+        self.plan = plan
+        self.epoch = 0
+        self.injected: List[Dict[str, object]] = []
+        self._seen: set = set()
+        self.checkpoint_io: Optional[FlakyCheckpointIO] = (
+            FlakyCheckpointIO(plan.flaky_checkpoints.failures)
+            if plan.flaky_checkpoints is not None
+            else None
+        )
+
+    # -- schedule queries ------------------------------------------------
+
+    def begin_epoch(self, epoch: int) -> None:
+        self.epoch = int(epoch)
+
+    def crashed(self, node: int) -> bool:
+        return any(c.node == node and self.epoch >= c.at_epoch for c in self.plan.crashes)
+
+    def slowdown(self, node: int) -> float:
+        s = 1.0
+        for w in self.plan.stragglers:
+            if w.node == node and w.at_epoch <= self.epoch < w.at_epoch + w.duration:
+                s *= w.slowdown
+        return s
+
+    def spike_scale(self, node: int) -> float:
+        s = 0.0
+        for w in self.plan.spikes:
+            if w.node == node and w.at_epoch <= self.epoch < w.at_epoch + w.duration:
+                s = max(s, w.scale)
+        return s
+
+    # -- telemetry -------------------------------------------------------
+
+    def _record(self, kind: str, node: int, onset: int, key: object) -> None:
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.injected.append({"kind": kind, "node": node, "epoch": onset})
+
+    def counts(self) -> Dict[str, int]:
+        out = self.plan.counts()
+        out["fired"] = len(self.injected)
+        if self.checkpoint_io is not None:
+            out["checkpoint_writes_failed"] = self.checkpoint_io.failed
+        return out
+
+    # -- the perturbation ------------------------------------------------
+
+    def perturb(
+        self,
+        job: str,
+        node_ids: Sequence[int],
+        epoch_seconds: float,
+        measurements: List[StepMeasurement],
+    ) -> Tuple[float, List[StepMeasurement]]:
+        """Transform one epoch's measurement stream per the active faults.
+
+        ``node_ids`` maps measurement index -> global node id.  Crashed
+        nodes report ``None`` observations (silent stop) and stall the
+        synchronous step; stragglers/spikes scale the affected node's
+        observed times (cluster batch time follows the slowest node).
+        Returns the stream unchanged (same objects) when no fault touches
+        this job's nodes — the bit-identity guarantee.
+        """
+        del job
+        n = len(node_ids)
+        crashed = [self.crashed(nid) for nid in node_ids]
+        slows = [self.slowdown(nid) for nid in node_ids]
+        scales = [self.spike_scale(nid) for nid in node_ids]
+        if not any(crashed) and all(s == 1.0 for s in slows) and all(
+            s == 0.0 for s in scales
+        ):
+            return epoch_seconds, measurements
+
+        steps = len(measurements)
+        # Stateless per-(seed, epoch, node) spike factors: bit-identical no
+        # matter how many jobs run or in what order.
+        spike_factors = np.ones((n, steps), dtype=np.float64)
+        for i, scale in enumerate(scales):
+            if scale > 0.0:
+                rng = np.random.default_rng(
+                    [max(self.plan.seed, 0), 101, self.epoch, int(node_ids[i])]
+                )
+                spike_factors[i] = np.exp(rng.normal(0.0, scale, size=steps))
+
+        stall = 1.0
+        for i, nid in enumerate(node_ids):
+            if crashed[i]:
+                for c in self.plan.crashes:
+                    if c.node == nid and self.epoch >= c.at_epoch:
+                        stall = max(stall, c.stall)
+                        self._record("crash", nid, c.at_epoch, ("crash", nid, c.at_epoch))
+            if slows[i] != 1.0:
+                for w in self.plan.stragglers:
+                    if w.node == nid and w.at_epoch <= self.epoch < w.at_epoch + w.duration:
+                        self._record(
+                            "straggler", nid, w.at_epoch,
+                            ("straggler", nid, w.at_epoch, w.duration),
+                        )
+            if scales[i] > 0.0:
+                for w in self.plan.spikes:
+                    if w.node == nid and w.at_epoch <= self.epoch < w.at_epoch + w.duration:
+                        self._record(
+                            "noise-spike", nid, w.at_epoch,
+                            ("noise-spike", nid, w.at_epoch, w.duration),
+                        )
+
+        out: List[StepMeasurement] = []
+        total = 0.0
+        for s, m in enumerate(measurements):
+            obs_out = []
+            slowest = 0.0
+            for i, obs in enumerate(m.observations):
+                if crashed[i] or obs is None:
+                    obs_out.append(None)
+                    continue
+                factor = slows[i] * float(spike_factors[i, s])
+                if factor != 1.0:
+                    obs = dataclasses.replace(
+                        obs,
+                        a_time=obs.a_time * factor,
+                        backprop_time=obs.backprop_time * factor,
+                        comm_time=obs.comm_time * factor,
+                    )
+                obs_out.append(obs)
+                slowest = max(slowest, obs.a_time + obs.backprop_time)
+            # The synchronous step waits for the slowest surviving node and
+            # stalls on dead ones (timeout semantics, not a clean exit).
+            batch_time = max(m.batch_time, slowest) * stall
+            total += batch_time
+            out.append(
+                StepMeasurement(
+                    batch_time=batch_time,
+                    node_times=(batch_time,) * n,
+                    observations=tuple(obs_out),
+                )
+            )
+        return total, out

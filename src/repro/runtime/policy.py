@@ -87,27 +87,64 @@ class CannikinPolicy:
 
     name = "cannikin"
 
+    # Graceful degradation: when an engine's solver errors out mid-event
+    # (an XLA hiccup on the jax path, say), the scheduler drops one tier
+    # and retries — never letting one solver failure kill a job.
+    _ENGINE_FALLBACK = {"jax": "batched", "batched": "scalar"}
+
     def __init__(self, n_nodes: int, *, engine: str = "batched") -> None:
         self.n_nodes = n_nodes
         self.scheduler = Scheduler(n_nodes, engine=engine)
+        self.engine_degradations = 0
+        self.last_known_good_served = 0
+
+    def _solve(self, op):
+        """Run one scheduler entry point under the degradation chain.
+
+        Validation errors (unknown job, duplicate arrival, bad node id:
+        ``KeyError``/``ValueError``) propagate — those are caller bugs,
+        not solver failures.  Anything else walks ``_ENGINE_FALLBACK``
+        (jax → batched → scalar), re-solving from the scheduler's intact
+        job/mask state; with every tier exhausted, the last-known-good
+        allocation is served rather than raising mid-reconcile.
+        """
+        try:
+            return op()
+        except (KeyError, ValueError):
+            raise
+        except Exception:
+            while self.scheduler.engine in self._ENGINE_FALLBACK:
+                self.scheduler.engine = self._ENGINE_FALLBACK[self.scheduler.engine]
+                self.engine_degradations += 1
+                try:
+                    return self.scheduler.reallocate()
+                except (KeyError, ValueError):
+                    raise
+                except Exception:
+                    continue
+            last_good = self.scheduler.allocation
+            if last_good is not None:
+                self.last_known_good_served += 1
+                return last_good
+            raise
 
     def add_job(self, spec: JobSpec) -> Allocation:
-        return self.scheduler.add_job(spec)
+        return self._solve(lambda: self.scheduler.add_job(spec))
 
     def remove_job(self, name: str) -> Allocation:
-        return self.scheduler.remove_job(name)
+        return self._solve(lambda: self.scheduler.remove_job(name))
 
     def update_job(self, spec: JobSpec) -> Allocation:
-        return self.scheduler.update_job(spec)
+        return self._solve(lambda: self.scheduler.update_job(spec))
 
     def node_leave(self, node_ids: Sequence[int]) -> Allocation:
-        return self.scheduler.node_leave(node_ids)
+        return self._solve(lambda: self.scheduler.node_leave(node_ids))
 
     def node_join(self, node_ids: Sequence[int]) -> Allocation:
-        return self.scheduler.node_join(node_ids)
+        return self._solve(lambda: self.scheduler.node_join(node_ids))
 
     def reallocate(self) -> Allocation:
-        return self.scheduler.reallocate()
+        return self._solve(self.scheduler.reallocate)
 
     @property
     def jobs(self) -> Tuple[JobSpec, ...]:
@@ -115,13 +152,20 @@ class CannikinPolicy:
 
     def counters(self) -> Dict[str, int]:
         s = self.scheduler
-        return {
+        out = {
             "allocations": s.allocations,
             "warm_rounds": s.warm_rounds,
             "cold_rounds": s.cold_rounds,
             "solved_rows": s.solved_rows,
             "cached_rows": s.cached_rows,
         }
+        # Degradation counters appear only once the chain actually fired,
+        # keeping fault-free golden counter dicts unchanged.
+        if self.engine_degradations:
+            out["engine_degradations"] = self.engine_degradations
+        if self.last_known_good_served:
+            out["last_known_good_served"] = self.last_known_good_served
+        return out
 
 
 class _BaselinePolicy:

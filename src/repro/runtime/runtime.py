@@ -59,6 +59,15 @@ from repro.runtime.events import (
     Preemption,
     describe,
 )
+from repro.runtime.faults import FaultInjector, FaultPlan
+from repro.runtime.health import (
+    CrashDetected,
+    HealthConfig,
+    HealthMonitor,
+    QuarantineNode,
+    ReadmitNode,
+    RefitRequested,
+)
 from repro.runtime.policy import Policy, make_policy
 
 __all__ = [
@@ -117,6 +126,7 @@ class JobHandle:
         seed: int = 0,
         real_config: Optional[RealBackendConfig] = None,
         checkpoint_dir: Optional[str] = None,
+        injector: Optional[FaultInjector] = None,
     ) -> None:
         self.spec = spec
         self.state = JobState.PENDING
@@ -130,13 +140,18 @@ class JobHandle:
         self.sim_time = 0.0
         self.reallocations = 0
         self.preemptions = 0
+        self.ckpt_write_failures = 0
+        self.ckpt_fallbacks = 0
+        self.restores = 0
         self.records: List[EpochRecord] = []
+        self.last_result = None  # the most recent epoch's ExecutionResult
         self.checkpoint_path: Optional[str] = None
         self._ctl_nodes: Tuple[int, ...] = ()  # node ids behind controller idx 0..n-1
         self._noise = noise
         self._seed = seed
         self._real_config = real_config
         self._ckpt_dir = checkpoint_dir
+        self._injector = injector
         self._snapshot: Optional[dict] = None
         self._resume_pending = False
 
@@ -246,6 +261,7 @@ class JobHandle:
                 noise=self._noise,
                 seed=self._seed,
                 real_config=self._real_config,
+                injector=self._injector,
             )
         self.backend.configure(
             self.spec, self._ctl_nodes, seed=self._seed + self.reallocations
@@ -264,8 +280,10 @@ class JobHandle:
             self.backend.load_snapshot(
                 ckpt.restore(self.checkpoint_path, self.backend.snapshot())
             )
+            self.restores += 1
         elif self._snapshot is not None:
             self.backend.load_snapshot(self._snapshot)
+            self.restores += 1
 
     def apply_refit(self, spec: JobSpec) -> None:
         """Swap in a refreshed spec (ModelRefit): the ground truth drifts;
@@ -291,10 +309,22 @@ class JobHandle:
                     from repro.train import checkpoint as ckpt
 
                     os.makedirs(self._ckpt_dir, exist_ok=True)
-                    self.checkpoint_path = os.path.join(
-                        self._ckpt_dir, f"{self.name}.ckpt.npz"
-                    )
-                    ckpt.save(self.checkpoint_path, snap)
+                    path = os.path.join(self._ckpt_dir, f"{self.name}.ckpt.npz")
+                    io = self._injector.checkpoint_io if self._injector else None
+                    # Flaky checkpoint I/O gets bounded retries; if all
+                    # attempts fail, resume falls back to the in-memory
+                    # snapshot (checkpoint_path stays unset so restore
+                    # never reads a file this preemption failed to write).
+                    for _attempt in range(3):
+                        try:
+                            ckpt.save(path, snap, io=io)
+                            self.checkpoint_path = path
+                            break
+                        except OSError:
+                            self.ckpt_write_failures += 1
+                    else:
+                        self.checkpoint_path = None
+                        self.ckpt_fallbacks += 1
                 self._resume_pending = True
         self.state = JobState.PREEMPTED
         self.preemptions += 1
@@ -317,7 +347,8 @@ class JobHandle:
         assert self.controller is not None
         out: List[EpochRecord] = []
         for _ in range(epochs):
-            record, _ = run_backend_epoch(self.controller, self.backend, steps=steps)
+            record, result = run_backend_epoch(self.controller, self.backend, steps=steps)
+            self.last_result = result
             self.sim_time += record.epoch_seconds
             self.epochs_run += 1
             self.records.append(record)
@@ -375,6 +406,8 @@ class ClusterRuntime:
         seed: int = 0,
         real_backend: Optional[RealBackendConfig] = None,
         checkpoint_dir: Optional[str] = None,
+        faults: Optional[FaultPlan] = None,
+        health: Union[None, bool, HealthConfig, HealthMonitor] = None,
     ) -> None:
         self.n_nodes = n_nodes
         self.policy: Policy = (
@@ -393,6 +426,25 @@ class ClusterRuntime:
         self._checkpoint_dir = checkpoint_dir
         self._queue: List[Tuple[float, int, Event]] = []
         self._seq = itertools.count()
+        # -- fault tolerance (PR 6): injection + detection + recovery ------
+        self.injector: Optional[FaultInjector] = (
+            FaultInjector(faults) if faults is not None else None
+        )
+        if health is None:
+            health = faults is not None  # faults imply the monitor
+        if isinstance(health, HealthMonitor):
+            self.health: Optional[HealthMonitor] = health
+        elif isinstance(health, HealthConfig):
+            self.health = HealthMonitor(health)
+        elif health:
+            self.health = HealthMonitor()
+        else:
+            self.health = None
+        self.epoch_index = 0           # global epoch counter (fault clock)
+        self.sim_clock = 0.0           # simulated wall-clock across epochs
+        self.noop_events = 0           # idempotent NodeLeave/NodeJoin no-ops
+        self.recovery_log: List[Dict[str, object]] = []
+        self._epoch_sim: List[float] = []  # per-epoch sim seconds (MTTR accounting)
 
     # -- event intake ----------------------------------------------------
 
@@ -411,6 +463,7 @@ class ClusterRuntime:
                 seed=self._seed + len(self.handles),
                 real_config=self._real_backend,
                 checkpoint_dir=self._checkpoint_dir,
+                injector=self.injector,
             )
             self.handles[spec.name] = handle
         return handle
@@ -468,9 +521,148 @@ class ClusterRuntime:
         return self.records[start:]
 
     def advance(self, epochs: int = 1, *, steps: int = 4) -> None:
-        """Step every RUNNING job's epoch loop ``epochs`` times."""
-        for handle in self.handles.values():
-            handle.advance(epochs, steps=steps)
+        """Step every RUNNING job's epoch loop ``epochs`` times.
+
+        With no fault injector and no health monitor this is the exact
+        PR-5 loop (bit-identical replays).  With either present, epochs
+        advance in lockstep across jobs — the injector's fault clock and
+        the monitor's detection windows are global epoch indices — and
+        each epoch ends with detection + self-healing recovery.
+        """
+        if self.injector is None and self.health is None:
+            for handle in self.handles.values():
+                handle.advance(epochs, steps=steps)
+            return
+        for _ in range(epochs):
+            self._advance_epoch(steps=steps)
+
+    def _advance_epoch(self, *, steps: int) -> None:
+        """One global epoch: inject → execute every running job → observe
+        health → reconcile recovery actions as synthesized events."""
+        e = self.epoch_index
+        if self.injector is not None:
+            self.injector.begin_epoch(e)
+        epoch_sim = 0.0
+        ran: List[JobHandle] = []
+        for handle in list(self.handles.values()):
+            recs = handle.advance(1, steps=steps)
+            if recs:
+                ran.append(handle)
+                epoch_sim = max(epoch_sim, recs[-1].epoch_seconds)
+        self.sim_clock += epoch_sim
+        self._epoch_sim.append(epoch_sim)
+        if self.health is not None:
+            for handle in ran:
+                self._observe_health(handle, e)
+            self.health.tick(e)
+            self._apply_health_actions()
+        self.epoch_index += 1
+
+    def _observe_health(self, handle: JobHandle, epoch: int) -> None:
+        """Feed one job's epoch telemetry to the monitor: per held node,
+        observed mean compute time (a-part + backprop over the epoch's
+        steps; ``None`` for a node that reported nothing) against the
+        :class:`~repro.core.perf_model.NodePerfModel` prediction for the
+        same local batch.
+
+        The reference is the job spec's own coefficients — the exact model
+        the scheduler scores goodput with — not the controller's learned
+        fit: a freshly-reallocated controller's fit is biased while new
+        nodes bootstrap, and detection against it flaps.  The premise of
+        the whole system is that these coefficients faithfully describe
+        healthy hardware (Eqs. 2–6); a fault is precisely a sustained
+        deviation from them, and a ModelRefit updates the reference."""
+        assert self.health is not None
+        result = handle.last_result
+        if result is None or not result.measurements:
+            return
+        node_ids = handle._ctl_nodes
+        observed: List[Optional[float]] = []
+        predicted: List[float] = []
+        for i, nid in enumerate(node_ids):
+            obs = [
+                m.observations[i]
+                for m in result.measurements
+                if i < len(m.observations) and m.observations[i] is not None
+            ]
+            if not obs:
+                observed.append(None)
+                predicted.append(0.0)
+                continue
+            observed.append(
+                sum(o.a_time + o.backprop_time for o in obs) / len(obs)
+            )
+            b = obs[0].batch_size
+            nd = handle.spec.node_models[nid]
+            predicted.append(max((nd.q + nd.k) * b + (nd.s + nd.m), 1e-9))
+        self.health.observe_job(handle.name, epoch, node_ids, observed, predicted)
+
+    def _reconcile_now(self, event: Event) -> ReconcileRecord:
+        """Apply a synthesized (detection-driven) event immediately.  The
+        shared heapq holds *future* trace events — draining it here would
+        fast-forward the trace, so recovery bypasses the queue."""
+        self.allocation = self._apply(event)
+        self._apply_allocation(self.allocation)
+        record = ReconcileRecord(
+            time=self.clock, event=event, allocation=self.allocation
+        )
+        self.records.append(record)
+        return record
+
+    def _log_recovery(self, action: str, node: Optional[int], jobs, epoch: int) -> None:
+        self.recovery_log.append(
+            {
+                "action": action,
+                "node": node,
+                "jobs": tuple(jobs),
+                "epoch": epoch,
+                "sim_time": self.sim_clock,
+            }
+        )
+
+    def _apply_health_actions(self) -> None:
+        """Self-healing: map drained monitor actions onto the existing
+        event alphabet.  Crash → drain victims through the Preemption
+        checkpoint path, mask the node, resubmit; quarantine/re-admission
+        → the NodeLeave/NodeJoin availability masking (warm caches
+        survive); sustained drift → a forced ModelRefit."""
+        assert self.health is not None
+        for action in self.health.poll():
+            if isinstance(action, CrashDetected):
+                victims = [
+                    h.name
+                    for h in self.handles.values()
+                    if h.state == JobState.RUNNING and action.node in h.nodes
+                ]
+                for name in victims:
+                    self._reconcile_now(Preemption(time=self.clock, job=name))
+                self._reconcile_now(
+                    NodeLeave(time=self.clock, nodes=(action.node,))
+                )
+                for name in victims:
+                    self._reconcile_now(
+                        JobArrival(time=self.clock, spec=self.handles[name].spec)
+                    )
+                self._log_recovery("crash_recover", action.node, victims, action.epoch)
+            elif isinstance(action, QuarantineNode):
+                self._reconcile_now(
+                    NodeLeave(time=self.clock, nodes=(action.node,))
+                )
+                self._log_recovery("quarantine", action.node, (action.job,), action.epoch)
+            elif isinstance(action, ReadmitNode):
+                self._reconcile_now(
+                    NodeJoin(time=self.clock, nodes=(action.node,))
+                )
+                self._log_recovery("readmit", action.node, (), action.epoch)
+            elif isinstance(action, RefitRequested):
+                handle = self.handles.get(action.job)
+                if handle is not None and self._scheduled(handle):
+                    self._reconcile_now(
+                        ModelRefit(
+                            time=self.clock, job=action.job, spec=handle.spec
+                        )
+                    )
+                    self._log_recovery("refit", None, (action.job,), action.epoch)
 
     # -- event dispatch --------------------------------------------------
 
@@ -517,11 +709,33 @@ class ClusterRuntime:
             handle.preempt()
             return alloc
         if isinstance(event, NodeLeave):
-            self.down_nodes |= set(event.nodes)
-            return self.policy.node_leave(event.nodes)
+            # Idempotency guard: a duplicate leave for an already-down node
+            # or a leave naming an unknown node must be a counted no-op —
+            # the policy's availability mask only ever sees fresh, known
+            # ids, so it can never be corrupted by event replay.
+            fresh = tuple(
+                int(n)
+                for n in event.nodes
+                if 0 <= int(n) < self.n_nodes and int(n) not in self.down_nodes
+            )
+            if len(fresh) < len(event.nodes):
+                self.noop_events += 1
+            if not fresh:
+                return self.allocation
+            self.down_nodes |= set(fresh)
+            return self.policy.node_leave(fresh)
         if isinstance(event, NodeJoin):
-            self.down_nodes -= set(event.nodes)
-            return self.policy.node_join(event.nodes)
+            fresh = tuple(
+                int(n)
+                for n in event.nodes
+                if 0 <= int(n) < self.n_nodes and int(n) in self.down_nodes
+            )
+            if len(fresh) < len(event.nodes):
+                self.noop_events += 1
+            if not fresh:
+                return self.allocation
+            self.down_nodes -= set(fresh)
+            return self.policy.node_join(fresh)
         if isinstance(event, ModelRefit):
             handle = self._handle(event.job)
             new_spec = event.spec or drift_spec(handle.spec, event.rel, event.seed)
@@ -555,3 +769,83 @@ class ClusterRuntime:
         without them)."""
         fn = getattr(self.policy, "counters", None)
         return fn() if callable(fn) else {}
+
+    def fault_telemetry(self) -> Optional[Dict[str, object]]:
+        """Fault-tolerance telemetry for the trace report: what was
+        injected, what detection caught (and how fast), and what recovery
+        did about it.  ``None`` when the runtime has neither an injector
+        nor a monitor (so golden-path summaries are unchanged)."""
+        if self.injector is None and self.health is None:
+            return None
+        detections = self.health.detections if self.health is not None else []
+        crash_lat: List[int] = []
+        quar_lat: List[int] = []
+        mttr_ep: List[int] = []
+        mttr_sim: List[float] = []
+        if self.injector is not None:
+            for c in self.injector.plan.crashes:
+                det = next(
+                    (
+                        d
+                        for d in detections
+                        if d["kind"] == "crash" and d["node"] == c.node
+                    ),
+                    None,
+                )
+                if det is None:
+                    continue
+                crash_lat.append(int(det["epoch"]) - c.at_epoch)
+                rec = next(
+                    (
+                        r
+                        for r in self.recovery_log
+                        if r["action"] == "crash_recover" and r["node"] == c.node
+                    ),
+                    None,
+                )
+                if rec is not None:
+                    e0, e1 = c.at_epoch, int(rec["epoch"])
+                    mttr_ep.append(e1 - e0)
+                    mttr_sim.append(sum(self._epoch_sim[e0 : e1 + 1]))
+            for s in self.injector.plan.stragglers:
+                det = next(
+                    (
+                        d
+                        for d in detections
+                        if d["kind"] == "quarantine"
+                        and d["node"] == s.node
+                        and int(d["epoch"]) >= s.at_epoch
+                    ),
+                    None,
+                )
+                if det is not None:
+                    quar_lat.append(int(det["epoch"]) - s.at_epoch)
+        det_lat = crash_lat + quar_lat
+
+        def _mean(xs):
+            return (sum(xs) / len(xs)) if xs else None
+
+        return {
+            "injected": dict(self.injector.counts()) if self.injector else {},
+            "detected": {
+                kind: sum(1 for d in detections if d["kind"] == kind)
+                for kind in ("crash", "quarantine", "drift")
+            },
+            "recoveries": {
+                act: sum(1 for r in self.recovery_log if r["action"] == act)
+                for act in ("crash_recover", "quarantine", "readmit", "refit")
+            },
+            "noop_events": self.noop_events,
+            "checkpoint_write_failures": sum(
+                h.ckpt_write_failures for h in self.handles.values()
+            ),
+            "checkpoint_fallbacks": sum(
+                h.ckpt_fallbacks for h in self.handles.values()
+            ),
+            "restores": sum(h.restores for h in self.handles.values()),
+            "detection_latency_epochs": _mean(det_lat),
+            "mttr_epochs": _mean(mttr_ep),
+            "mttr_sim_seconds": _mean(mttr_sim),
+            "epochs": self.epoch_index,
+            "sim_time": self.sim_clock,
+        }

@@ -85,11 +85,17 @@ class Trace:
 
 @dataclasses.dataclass
 class TraceReport:
-    """What one policy did with one trace — the comparable unit."""
+    """What one policy did with one trace — the comparable unit.
+
+    ``baseline`` (set only by fault-injecting replays) is the fault-free
+    twin of the same trace, enabling :attr:`goodput_retention` — the
+    cost of the faults plus recovery in retained training throughput.
+    """
 
     policy: str
     records: List[ReconcileRecord]
     runtime: ClusterRuntime
+    baseline: Optional["TraceReport"] = None
 
     @property
     def aggregate_goodput(self) -> float:
@@ -107,9 +113,28 @@ class TraceReport:
     def epochs(self) -> Dict[str, int]:
         return {name: h.epochs_run for name, h in self.runtime.handles.items()}
 
+    @property
+    def total_sim_time(self) -> float:
+        """Simulated seconds of training across all jobs."""
+        return sum(h.sim_time for h in self.runtime.handles.values())
+
+    @property
+    def goodput_retention(self) -> Optional[float]:
+        """Fault-free sim-time over faulted sim-time for the same trace:
+        1.0 means the faults cost nothing; 0.5 means epochs took twice as
+        long end-to-end (stalls + slowdowns + recovery overhead)."""
+        if self.baseline is None:
+            return None
+        faulted = self.total_sim_time
+        if faulted <= 0.0:
+            return None
+        return self.baseline.total_sim_time / faulted
+
     def summary(self) -> Dict[str, object]:
-        """JSON-able one-policy summary (assignment, scores, counters)."""
-        return {
+        """JSON-able one-policy summary (assignment, scores, counters).
+        Grows a ``faults`` block only for fault-tolerant runtimes, so
+        golden-path summaries are byte-identical to earlier releases."""
+        out: Dict[str, object] = {
             "policy": self.policy,
             "events": [describe(r.event) for r in self.records],
             "aggregate_goodput": self.aggregate_goodput,
@@ -121,6 +146,14 @@ class TraceReport:
             "epochs": self.epochs,
             "counters": self.runtime.counters(),
         }
+        telemetry = self.runtime.fault_telemetry()
+        if telemetry is not None:
+            telemetry = dict(telemetry)
+            telemetry["goodput_retention"] = self.goodput_retention
+            telemetry["total_sim_time"] = self.total_sim_time
+            telemetry["recovery_log"] = [dict(r) for r in self.runtime.recovery_log]
+            out["faults"] = telemetry
+        return out
 
 
 def replay(
@@ -135,6 +168,8 @@ def replay(
     seed: int = 0,
     real_backend: Optional[RealBackendConfig] = None,
     checkpoint_dir: Optional[str] = None,
+    faults=None,
+    health=None,
 ) -> TraceReport:
     """Replay ``trace`` through a fresh :class:`ClusterRuntime`.
 
@@ -143,10 +178,26 @@ def replay(
     event (plan → execute → observe over each job's execution backend — so
     controllers learn, bootstrap, and reach the optperf phase mid-trace).
     ``real_backend``/``checkpoint_dir`` plumb through to the runtime for
-    traces whose specs name ``backend="real"``."""
+    traces whose specs name ``backend="real"``.
+
+    ``faults`` (a :class:`~repro.runtime.faults.FaultPlan`) injects the
+    plan's schedule into the replay; the report then carries a fault-free
+    twin of the same replay as ``report.baseline`` so goodput retention is
+    measurable.  ``health`` enables/configures the
+    :class:`~repro.runtime.health.HealthMonitor` (on by default whenever
+    faults are injected)."""
+    if faults is not None:
+        baseline = replay(
+            trace, n_nodes, policy=policy, engine=engine,
+            epochs_per_event=epochs_per_event, steps=steps, noise=noise,
+            seed=seed, real_backend=real_backend, checkpoint_dir=None,
+        )
+    else:
+        baseline = None
     rt = ClusterRuntime(
         n_nodes, policy=policy, engine=engine, noise=noise, seed=seed,
         real_backend=real_backend, checkpoint_dir=checkpoint_dir,
+        faults=faults, health=health,
     )
     for event in trace:
         rt.post(event)
@@ -157,7 +208,7 @@ def replay(
         if epochs_per_event:
             rt.advance(epochs_per_event, steps=steps)
         records.append(record)
-    return TraceReport(policy=policy, records=records, runtime=rt)
+    return TraceReport(policy=policy, records=records, runtime=rt, baseline=baseline)
 
 
 def compare_policies(
@@ -172,6 +223,8 @@ def compare_policies(
     seed: int = 0,
     real_backend: Optional[RealBackendConfig] = None,
     checkpoint_dir: Optional[str] = None,
+    faults=None,
+    health=None,
 ) -> Dict[str, TraceReport]:
     """Replay one trace under several allocation policies (fresh runtime
     each) and return the per-policy reports — baselines and Cannikin
@@ -188,6 +241,8 @@ def compare_policies(
             seed=seed,
             real_backend=real_backend,
             checkpoint_dir=checkpoint_dir,
+            faults=faults,
+            health=health,
         )
         for name in policies
     }

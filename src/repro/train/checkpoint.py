@@ -19,9 +19,25 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["save", "restore"]
+__all__ = ["save", "restore", "LocalIO"]
 
 _DTYPE_TAG = "__dtypes__"
+
+
+class LocalIO:
+    """Default checkpoint I/O: the local filesystem.
+
+    ``save`` goes through this seam so fault injection (see
+    :class:`repro.runtime.faults.FlakyCheckpointIO`) can make writes fail
+    without monkeypatching builtins.  Any object with ``open(path, mode)``
+    and ``replace(src, dst)`` works.
+    """
+
+    def open(self, path: str, mode: str):
+        return open(path, mode)
+
+    def replace(self, src: str, dst: str) -> None:
+        os.replace(src, dst)
 
 
 def _key(path) -> str:
@@ -36,7 +52,15 @@ def _key(path) -> str:
     return "/".join(parts)
 
 
-def save(path: str, tree: PyTree) -> None:
+def save(path: str, tree: PyTree, *, io: Any = None) -> None:
+    """Atomically write ``tree`` to ``path``.
+
+    The payload lands in ``<path>.tmp`` first and is renamed over ``path``
+    only once fully written, so a crash (or injected failure) mid-write can
+    never leave a truncated archive where a valid previous checkpoint was.
+    """
+    if io is None:
+        io = LocalIO()
     flat = {}
     dtypes = {}
     for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -47,10 +71,19 @@ def save(path: str, tree: PyTree) -> None:
             arr = arr.astype(np.float32)
         flat[k] = arr
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(path, "wb") as f:
-        np.savez(f, **flat, **{_DTYPE_TAG: np.frombuffer(
-            json.dumps(dtypes).encode(), dtype=np.uint8
-        )})
+    tmp = f"{path}.tmp"
+    try:
+        with io.open(tmp, "wb") as f:
+            np.savez(f, **flat, **{_DTYPE_TAG: np.frombuffer(
+                json.dumps(dtypes).encode(), dtype=np.uint8
+            )})
+        io.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
 
 
 def restore(path: str, like: PyTree) -> PyTree:

@@ -1,0 +1,500 @@
+"""Fault-tolerance layer: deterministic injection, detection, recovery.
+
+Covers the PR-6 acceptance criteria: seeded chaos replays self-heal with
+zero human-scripted recovery and are bit-identical across replays; the
+quarantine state machine's backoff-doubling/flap transitions are pinned;
+the idempotency guard, atomic checkpoint writes, flaky-I/O retry, and the
+solver graceful-degradation chain each have direct regression tests.
+"""
+import gc
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.core.scheduler as sched_mod
+from repro.core.scheduler import random_jobs
+from repro.runtime import (
+    FaultInjector,
+    FaultPlan,
+    FlakyCheckpointIO,
+    FlakyCheckpoints,
+    NodeCrash,
+    Straggler,
+    CannikinPolicy,
+    HealthConfig,
+    HealthMonitor,
+    JobState,
+    NodeState,
+    CrashDetected,
+    QuarantineNode,
+    ReadmitNode,
+    SimBackend,
+    JobHandle,
+    make_fault_plan,
+    replay,
+    synthetic_trace,
+)
+from repro.runtime.trace import Trace
+from repro.train import checkpoint as ckpt
+
+N_NODES = 12
+
+
+# ---------------------------------------------------------------------------
+# fault plans: seeded determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_seeded_and_named():
+    assert FaultPlan.chaos(N_NODES, seed=0) == FaultPlan.chaos(N_NODES, seed=0)
+    assert FaultPlan.chaos(N_NODES, seed=0) != FaultPlan.chaos(N_NODES, seed=3)
+    assert make_fault_plan("none", N_NODES) is None
+    assert make_fault_plan("chaos", N_NODES, seed=2) == FaultPlan.chaos(N_NODES, 2)
+    assert make_fault_plan("chaos-small", N_NODES) == FaultPlan.chaos_small(N_NODES)
+    with pytest.raises(ValueError):
+        make_fault_plan("mayhem", N_NODES)
+    with pytest.raises(ValueError):
+        FaultPlan.chaos(2)
+    counts = FaultPlan.chaos(N_NODES).counts()
+    assert counts["crashes"] == 1 and counts["stragglers"] == 3
+
+
+def test_injector_is_invisible_until_a_fault_fires():
+    """perturb() returns the measurement stream unchanged (same objects)
+    when no fault touches the epoch — the bit-identity guarantee."""
+    spec = random_jobs(1, 4, seed=3)[0]
+    plan = FaultPlan(crashes=(NodeCrash(node=1, at_epoch=5),))
+    plain, faulted = SimBackend(noise=0.01), SimBackend(noise=0.01, injector=FaultInjector(plan))
+    plain.configure(spec, (0, 1, 2, 3), seed=7)
+    faulted.configure(spec, (0, 1, 2, 3), seed=7)
+    a = plain.execute([4, 4, 4, 4], steps=3)      # injector epoch 0 < onset
+    b = faulted.execute([4, 4, 4, 4], steps=3)
+    assert a.epoch_seconds == b.epoch_seconds
+    assert a.measurements == b.measurements
+
+
+def test_injector_crash_and_straggler_perturbations():
+    spec = random_jobs(1, 4, seed=3)[0]
+    inj = FaultInjector(
+        FaultPlan(
+            crashes=(NodeCrash(node=2, at_epoch=1, stall=2.0),),
+            stragglers=(Straggler(node=0, at_epoch=1, duration=1, slowdown=3.0),),
+        )
+    )
+    backend = SimBackend(noise=0.0, injector=inj)
+    backend.configure(spec, (0, 1, 2, 3), seed=7)
+    clean = backend.execute([4, 4, 4, 4], steps=2)
+    inj.begin_epoch(1)
+    hit = backend.execute([4, 4, 4, 4], steps=2)
+    for m in hit.measurements:
+        assert m.observations[2] is None            # crashed: silent stop
+        assert m.observations[0] is not None
+    # Straggler scaled node 0's observed compute times ~3x.
+    c0, h0 = clean.measurements[0].observations[0], hit.measurements[0].observations[0]
+    assert h0.a_time == pytest.approx(3.0 * c0.a_time)
+    assert hit.epoch_seconds > clean.epoch_seconds  # stall + slowdown cost
+    kinds = {f["kind"] for f in inj.injected}
+    assert kinds == {"crash", "straggler"}
+
+
+# ---------------------------------------------------------------------------
+# the quarantine state machine (pinned transitions)
+# ---------------------------------------------------------------------------
+
+
+def _cfg():
+    return HealthConfig(
+        suspect_epochs=2, crash_epochs=2, backoff_initial=2, probation_epochs=2
+    )
+
+
+def test_quarantine_backoff_doubling_readmission_and_flap():
+    mon = HealthMonitor(_cfg())
+
+    def epoch(e, obs):
+        mon.observe_job("j", e, [0], [obs], [1.0])
+        mon.tick(e)
+        return mon.poll()
+
+    assert epoch(0, 1.0) == []                      # baseline established
+    assert epoch(1, 3.0) == []                      # breach 1 of 2
+    acts = epoch(2, 3.0)                            # breach 2 -> quarantine
+    assert acts == [QuarantineNode(epoch=2, node=0, job="j", backoff=2)]
+    assert mon.state(0) == NodeState.QUARANTINED
+    assert epoch(3, 1.0) == []                      # quarantined: not sampled
+    acts = epoch(4, 1.0)                            # backoff expired
+    assert acts == [ReadmitNode(epoch=4, node=0)]
+    assert mon.state(0) == NodeState.PROBATION
+    assert epoch(5, 1.0) == []                      # clean probation epoch 1
+    acts = epoch(6, 3.0)                            # flap: breach in probation
+    assert acts == [QuarantineNode(epoch=6, node=0, job="j", backoff=4)]
+    assert mon.state(0) == NodeState.QUARANTINED    # re-quarantined instantly
+    for e in (7, 8, 9):
+        assert epoch(e, 1.0) == []                  # doubled backoff: 4 epochs
+    assert epoch(10, 1.0) == [ReadmitNode(epoch=10, node=0)]
+    assert epoch(11, 1.0) == []
+    assert epoch(12, 1.0) == []                     # 2 clean epochs -> healthy
+    assert mon.state(0) == NodeState.HEALTHY
+    assert mon.transitions(0) == [
+        (2, NodeState.QUARANTINED),
+        (4, NodeState.PROBATION),
+        (6, NodeState.QUARANTINED),
+        (10, NodeState.PROBATION),
+        (12, NodeState.HEALTHY),
+    ]
+
+
+def test_crash_detected_from_missing_observations():
+    mon = HealthMonitor(_cfg())
+    mon.observe_job("j", 0, [0, 1], [None, 1.0], [1.0, 1.0])
+    mon.tick(0)
+    assert mon.poll() == []                          # 1 missing epoch: not yet
+    mon.observe_job("j", 1, [0, 1], [None, 1.0], [1.0, 1.0])
+    mon.tick(1)
+    assert mon.poll() == [CrashDetected(epoch=1, node=0, job="j")]
+    assert mon.state(0) == NodeState.CRASHED
+    assert mon.detections == [{"kind": "crash", "node": 0, "job": "j", "epoch": 1}]
+    # Crashed is terminal: further silence emits nothing new.
+    mon.observe_job("j", 2, [0, 1], [None, 1.0], [1.0, 1.0])
+    mon.tick(2)
+    assert mon.poll() == []
+
+
+def test_single_noisy_epoch_does_not_quarantine():
+    mon = HealthMonitor(_cfg())
+    mon.observe_job("j", 0, [0], [1.0], [1.0])
+    mon.observe_job("j", 1, [0], [2.5], [1.0])       # one bad epoch
+    mon.observe_job("j", 2, [0], [1.0], [1.0])       # recovers
+    mon.tick(2)
+    assert mon.poll() == []
+    assert mon.state(0) == NodeState.HEALTHY
+
+
+# ---------------------------------------------------------------------------
+# the chaos acceptance scenario
+# ---------------------------------------------------------------------------
+
+
+def _chaos_replay(tmp_path, *, epochs_per_event=6):
+    trace, jobs = synthetic_trace(3, N_NODES, seed=0)
+    rep = replay(
+        trace, N_NODES, policy="cannikin", epochs_per_event=epochs_per_event,
+        steps=2, noise=0.01, seed=0, faults=FaultPlan.chaos(N_NODES, seed=0),
+        checkpoint_dir=str(tmp_path),
+    )
+    return rep, jobs
+
+
+def test_chaos_trace_self_heals_with_zero_scripted_recovery(tmp_path):
+    rep, jobs = _chaos_replay(tmp_path)
+    rt = rep.runtime
+    plan = rt.injector.plan
+    # Every job completes or is still training; nothing was lost.
+    for name, state in rep.job_states.items():
+        assert state in (JobState.DONE, JobState.RUNNING), (name, state)
+    assert rep.job_states[jobs[0].name] == JobState.DONE
+
+    # The crash was detected within 2 epochs of onset...
+    crash = plan.crashes[0]
+    det = [d for d in rt.health.detections if d["kind"] == "crash"]
+    assert len(det) == 1 and det[0]["node"] == crash.node
+    assert det[0]["epoch"] - crash.at_epoch <= 2
+    # ...and recovered through the Preemption checkpoint path: the victim
+    # was preempted, resubmitted, and resumed.
+    rec = [r for r in rt.recovery_log if r["action"] == "crash_recover"]
+    assert len(rec) == 1 and rec[0]["node"] == crash.node
+    for victim in rec[0]["jobs"]:
+        h = rt.handles[victim]
+        assert h.preemptions >= 1
+        assert h.state in (JobState.RUNNING, JobState.DONE)
+        assert h.epochs_run > 0
+    # The crashed node is masked out of every later allocation.
+    assert crash.node in rt.down_nodes
+    for ids in rt.allocation.assignment.values():
+        assert crash.node not in ids
+
+    # The straggler was quarantined and re-admitted.
+    straggler = plan.stragglers[0]
+    q = [
+        d for d in rt.health.detections
+        if d["kind"] == "quarantine" and d["node"] == straggler.node
+    ]
+    assert q and q[0]["epoch"] >= straggler.at_epoch
+    assert q[0]["epoch"] - straggler.at_epoch <= 2
+    readmits = [
+        r for r in rt.recovery_log
+        if r["action"] == "readmit" and r["node"] == straggler.node
+    ]
+    assert readmits, "straggler never re-admitted"
+    assert rt.health.state(straggler.node) in (
+        NodeState.HEALTHY, NodeState.PROBATION
+    )
+
+    # Telemetry surfaces the whole story.
+    telemetry = rt.fault_telemetry()
+    assert telemetry["detected"]["crash"] == 1
+    assert telemetry["detected"]["quarantine"] >= 1
+    assert telemetry["detection_latency_epochs"] <= 2
+    assert telemetry["mttr_epochs"] is not None
+    assert rep.goodput_retention is not None and 0 < rep.goodput_retention <= 1
+    assert rep.summary()["faults"]["goodput_retention"] == rep.goodput_retention
+
+
+def test_chaos_replay_bit_identical_across_replays(tmp_path):
+    a, _ = _chaos_replay(tmp_path / "a", epochs_per_event=4)
+    b, _ = _chaos_replay(tmp_path / "b", epochs_per_event=4)
+    sa = json.dumps(a.summary(), sort_keys=True, default=str)
+    sb = json.dumps(b.summary(), sort_keys=True, default=str)
+    assert sa == sb
+    assert a.runtime.health.detections == b.runtime.health.detections
+    assert a.runtime.injector.injected == b.runtime.injector.injected
+    assert a.runtime.recovery_log == b.runtime.recovery_log
+
+
+def test_no_faults_health_enabled_is_observation_only():
+    """With nothing injected the monitor must change nothing: allocations,
+    epochs, counters all bit-identical to a monitor-free replay."""
+    trace, _ = synthetic_trace(3, N_NODES, seed=0)
+    plain = replay(trace, N_NODES, policy="cannikin", epochs_per_event=2,
+                   steps=2, noise=0.01, seed=0)
+    mon = replay(trace, N_NODES, policy="cannikin", epochs_per_event=2,
+                 steps=2, noise=0.01, seed=0, health=True)
+    s_plain, s_mon = plain.summary(), mon.summary()
+    faults = s_mon.pop("faults")
+    assert s_mon == s_plain
+    assert mon.runtime.health.detections == []
+    assert faults["detected"] == {"crash": 0, "quarantine": 0, "drift": 0}
+
+
+# ---------------------------------------------------------------------------
+# idempotency guard
+# ---------------------------------------------------------------------------
+
+
+def _leave_trace(leaves):
+    trace, _ = synthetic_trace(3, N_NODES, seed=0, node_leave=False)
+    t = Trace(list(trace.events))
+    at = 10.0
+    for nodes in leaves:
+        t.node_leave(nodes, at=at)
+        at += 1.0
+    return t
+
+
+def test_doubled_node_leave_is_counted_noop():
+    single = replay(_leave_trace([[7]]), N_NODES, policy="cannikin")
+    doubled = replay(_leave_trace([[7], [7]]), N_NODES, policy="cannikin")
+    assert doubled.runtime.allocation.assignment == single.runtime.allocation.assignment
+    assert doubled.runtime.allocation.goodputs == single.runtime.allocation.goodputs
+    assert doubled.runtime.counters() == single.runtime.counters()
+    assert doubled.runtime.noop_events == 1
+    assert single.runtime.noop_events == 0
+    assert doubled.runtime.down_nodes == {7}
+
+
+def test_unknown_node_leave_and_join_are_counted_noops():
+    rep = replay(_leave_trace([[99]]), N_NODES, policy="cannikin")
+    rt = rep.runtime
+    assert rt.noop_events == 1
+    assert rt.down_nodes == set()
+    baseline = replay(_leave_trace([]), N_NODES, policy="cannikin")
+    assert rt.allocation.assignment == baseline.runtime.allocation.assignment
+
+    rt.node_join([99])     # unknown id
+    rt.node_join([3])      # known but not down
+    rt.run()
+    assert rt.noop_events == 3
+    assert rt.allocation.assignment == baseline.runtime.allocation.assignment
+
+
+def test_partial_leave_applies_fresh_ids_only():
+    """A leave naming one fresh and one stale id applies the fresh id and
+    counts the event as a partial no-op."""
+    rep = replay(_leave_trace([[7], [7, 8]]), N_NODES, policy="cannikin")
+    clean = replay(_leave_trace([[7], [8]]), N_NODES, policy="cannikin")
+    assert rep.runtime.down_nodes == {7, 8}
+    assert rep.runtime.noop_events == 1
+    assert rep.runtime.allocation.assignment == clean.runtime.allocation.assignment
+
+
+# ---------------------------------------------------------------------------
+# atomic checkpoints + the flaky I/O seam
+# ---------------------------------------------------------------------------
+
+
+class _TornFile:
+    """File wrapper that dies once, partway through the ``budget``-th
+    written byte.  It stays open (and working) after the trip so numpy's
+    ZipFile destructor can clean up without a second error."""
+
+    def __init__(self, f, budget):
+        self._f = f
+        self._budget = budget
+        self._tripped = False
+
+    def write(self, data):
+        if not self._tripped and self._budget - len(data) <= 0:
+            self._tripped = True
+            self._f.write(data[: max(self._budget, 0)])  # the torn half
+            raise OSError("disk died mid-write")
+        self._budget -= len(data)
+        return self._f.write(data)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
+
+
+class _TornIO:
+    def __init__(self, budget):
+        self.budget = budget
+        self.files = []
+
+    def open(self, path, mode):
+        f = _TornFile(open(path, mode), self.budget)
+        self.files.append(f)
+        return f
+
+    def replace(self, src, dst):
+        os.replace(src, dst)
+
+    def close_all(self):
+        for f in self.files:
+            f._f.close()
+
+
+def test_checkpoint_write_is_atomic_under_torn_write(tmp_path):
+    path = str(tmp_path / "job.ckpt.npz")
+    good = {"w": np.arange(4, dtype=np.float32), "step": np.int64(7)}
+    ckpt.save(path, good)
+    like = {"w": np.zeros(4, dtype=np.float32), "step": np.int64(0)}
+    before = ckpt.restore(path, like)
+
+    io = _TornIO(budget=64)
+    with pytest.raises(OSError):
+        ckpt.save(path, {"w": np.full(4, 9.0, np.float32), "step": np.int64(8)},
+                  io=io)
+    gc.collect()          # drain numpy's ZipFile finalizer deterministically
+    io.close_all()
+    # The torn write never touched the real file and left no tmp litter.
+    assert not os.path.exists(path + ".tmp")
+    after = ckpt.restore(path, like)
+    np.testing.assert_array_equal(after["w"], before["w"])
+    assert after["step"] == before["step"] == 7
+
+
+class _StatefulBackend:
+    """Minimal backend with a real (non-empty) snapshot, for exercising
+    the checkpoint retry path without a full RealBackend."""
+
+    kind = "sim"
+
+    def __init__(self):
+        self.state = {"w": np.arange(3, dtype=np.float32)}
+        self.loads = 0
+
+    def snapshot(self):
+        return dict(self.state)
+
+    def load_snapshot(self, state):
+        self.state = dict(state)
+        self.loads += 1
+
+
+def _handle_with_flaky_io(tmp_path, failures):
+    spec = random_jobs(1, 4, seed=0)[0]
+    inj = FaultInjector(
+        FaultPlan(flaky_checkpoints=FlakyCheckpoints(failures=failures))
+    )
+    handle = JobHandle(spec, checkpoint_dir=str(tmp_path), injector=inj)
+    handle.backend = _StatefulBackend()
+    handle.state = JobState.RUNNING
+    handle.nodes = (0, 1)
+    return handle, inj
+
+
+def test_flaky_checkpoint_write_retries_then_succeeds(tmp_path):
+    handle, inj = _handle_with_flaky_io(tmp_path, failures=1)
+    handle.preempt()
+    assert handle.ckpt_write_failures == 1           # first attempt failed
+    assert handle.ckpt_fallbacks == 0
+    assert handle.checkpoint_path is not None        # retry landed the file
+    assert os.path.exists(handle.checkpoint_path)
+    assert inj.checkpoint_io.failed == 1
+    restored = ckpt.restore(
+        handle.checkpoint_path, {"w": np.zeros(3, np.float32)}
+    )
+    np.testing.assert_array_equal(restored["w"], np.arange(3, dtype=np.float32))
+
+
+def test_flaky_checkpoint_exhaustion_falls_back_to_memory(tmp_path):
+    handle, _ = _handle_with_flaky_io(tmp_path, failures=10)
+    handle.preempt()
+    assert handle.ckpt_write_failures == 3           # bounded retries
+    assert handle.ckpt_fallbacks == 1
+    assert handle.checkpoint_path is None            # no torn file to trust
+    backend = handle.backend
+    backend.state = {"w": np.zeros(3, np.float32)}   # diverge live state
+    handle._restore_backend()                        # resume path
+    assert backend.loads == 1
+    np.testing.assert_array_equal(
+        backend.state["w"], np.arange(3, dtype=np.float32)
+    )
+    assert handle.restores == 1
+
+
+# ---------------------------------------------------------------------------
+# solver graceful degradation
+# ---------------------------------------------------------------------------
+
+
+def test_engine_degradation_chain_jax_to_batched(monkeypatch):
+    spec = random_jobs(1, 8, seed=0)[0]
+    orig = sched_mod._allocate_arrays
+
+    def boom_on_jax(jobs, n_nodes, engine, **kw):
+        if engine == "jax":
+            raise RuntimeError("injected xla hiccup")
+        return orig(jobs, n_nodes, engine, **kw)
+
+    monkeypatch.setattr(sched_mod, "_allocate_arrays", boom_on_jax)
+    pol = CannikinPolicy(8, engine="jax")
+    alloc = pol.add_job(spec)
+    assert pol.scheduler.engine == "batched"         # one tier dropped
+    assert pol.engine_degradations == 1
+    assert alloc.assignment[spec.name]               # job still placed
+    assert pol.counters()["engine_degradations"] == 1
+
+
+def test_degradation_serves_last_known_good_when_all_engines_fail(monkeypatch):
+    spec = random_jobs(1, 8, seed=0)[0]
+    pol = CannikinPolicy(8, engine="batched")
+    good = pol.add_job(spec)
+
+    def boom(*a, **kw):
+        raise RuntimeError("solver dead")
+
+    monkeypatch.setattr(sched_mod, "_allocate_arrays", boom)
+    monkeypatch.setattr(sched_mod, "_allocate_scalar", boom)
+    served = pol.reallocate()
+    assert served is good                            # last-known-good plan
+    assert pol.last_known_good_served == 1
+    assert pol.scheduler.engine == "scalar"          # chain fully walked
+
+
+def test_degradation_chain_preserves_validation_errors():
+    spec = random_jobs(1, 8, seed=0)[0]
+    pol = CannikinPolicy(8, engine="batched")
+    pol.add_job(spec)
+    with pytest.raises(ValueError):
+        pol.add_job(spec)                            # duplicate arrival
+    with pytest.raises(KeyError):
+        pol.remove_job("no-such-job")
+    assert pol.engine_degradations == 0              # chain never fired
