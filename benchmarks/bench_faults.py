@@ -14,22 +14,39 @@ runtime self-healing, then measures what the faults cost:
 * wall-clock replay overhead of the fault-tolerance layer itself on a
   fault-free trace (injector + monitor present but idle).
 
+A second, real-backend lane replays a single real-gradient job under the
+``chaos-real`` integrity plan (gradient poison + solver stall) with the
+runtime invariant checker on: the anomaly guard must contain the poison,
+the numerical-health channel must quarantine the node, the watchdog must
+absorb the stall, the final loss must be finite, and goodput retention
+must clear the same gate — all with zero invariant violations.
+
 Results merge into ``artifacts/bench/sweep.json`` under the ``"faults"``
-key so the sweep artifact stays the one-stop perf record.
+key (real-backend lane under ``"faults"."real"``) so the sweep artifact
+stays the one-stop perf record.
 """
 import argparse
 import json
+import math
 import os
 import tempfile
 import time
 
 from benchmarks.common import ARTIFACTS, Row, save_json
 
-from repro.runtime import FaultPlan, replay, synthetic_trace
+from repro.runtime import (
+    FaultPlan,
+    RealBackendConfig,
+    Trace,
+    make_fault_plan,
+    replay,
+    synthetic_trace,
+)
 
 N_JOBS, N_NODES, SEED = 3, 12, 0
 EPOCHS_PER_EVENT, STEPS, NOISE = 6, 2, 0.01
 RETENTION_GATE = 0.8
+REAL_NODES, REAL_EPOCHS = 3, 6
 
 
 def _replay(faults=None, health=None, checkpoint_dir=None):
@@ -39,6 +56,80 @@ def _replay(faults=None, health=None, checkpoint_dir=None):
         steps=STEPS, noise=NOISE, seed=SEED, faults=faults, health=health,
         checkpoint_dir=checkpoint_dir,
     )
+
+
+def _real_spec():
+    from repro.core.perf_model import CommModel
+    from repro.core.scheduler import JobSpec
+    from repro.core.simulator import GPU_CATALOG
+
+    return JobSpec(
+        name="real-job",
+        node_models=tuple(
+            GPU_CATALOG[n].model() for n in ("a100", "v100", "rtx6000")
+        ),
+        comm=CommModel(t_o=0.04, t_u=0.008, gamma=0.15),
+        total_batch=12,
+        b_noise=500.0,
+        ref_batch=12,
+        backend="real",
+    )
+
+
+def _run_real_lane(rows):
+    """chaos-real on a single real-gradient job: poison + stall contained."""
+    plan = make_fault_plan("chaos-real", REAL_NODES, seed=SEED)
+    trace = Trace().arrive(_real_spec(), at=0.0)
+    t0 = time.perf_counter()
+    rep = replay(
+        trace, REAL_NODES, policy="cannikin", epochs_per_event=REAL_EPOCHS,
+        steps=STEPS, seed=SEED,
+        real_backend=RealBackendConfig(arch="olmo-1b", seq_len=16, lr=0.3),
+        faults=plan, invariants=True,
+    )
+    elapsed = time.perf_counter() - t0
+    telemetry = rep.runtime.fault_telemetry()
+    assert telemetry is not None
+    retention = rep.goodput_retention
+    assert retention is not None
+
+    # The integrity gates (deterministic, so they hold in smoke runs too).
+    handle = rep.runtime.handles["real-job"]
+    assert all(
+        math.isfinite(r.mean_loss) for r in handle.records
+    ), "non-finite loss under gradient poison"
+    assert telemetry["detected"]["numeric"] >= 1, "poison never detected"
+    assert telemetry["recoveries"]["quarantine"] >= 1, "poison never quarantined"
+    assert telemetry["watchdog"]["solver_timeouts"] >= 1, "stall never caught"
+    assert telemetry["invariants"]["violations"] == 0, "invariant violations"
+    assert retention >= RETENTION_GATE, (
+        f"real-lane retention {retention:.3f} below gate {RETENTION_GATE}"
+    )
+
+    record = {
+        "n_nodes": REAL_NODES,
+        "epochs_per_event": REAL_EPOCHS,
+        "plan": plan.describe(),
+        "goodput_retention": retention,
+        "retention_gate": RETENTION_GATE,
+        "detection_latency_epochs": telemetry["detection_latency_epochs"],
+        "detected": telemetry["detected"],
+        "recoveries": telemetry["recoveries"],
+        "watchdog": telemetry["watchdog"],
+        "invariants": telemetry["invariants"],
+        "checkpoint_rollbacks": telemetry["checkpoint_rollbacks"],
+        "replay_s": elapsed,
+    }
+    rows.append(
+        Row(
+            f"faults/chaos_real/j1xn{REAL_NODES}",
+            elapsed * 1e6,
+            f"retention={retention:.3f};"
+            f"numeric={telemetry['detected']['numeric']};"
+            f"viol={telemetry['invariants']['violations']}",
+        )
+    )
+    return record
 
 
 def run(smoke: bool = False):
@@ -107,6 +198,9 @@ def run(smoke: bool = False):
     assert retention >= RETENTION_GATE, (
         f"goodput retention {retention:.3f} below gate {RETENTION_GATE}"
     )
+
+    # Real-backend integrity lane ----------------------------------------
+    record["real"] = _run_real_lane(rows)
 
     # Merge into the sweep artifact (keep every other lane's record).
     sweep_path = os.path.join(ARTIFACTS, "bench", "sweep.json")

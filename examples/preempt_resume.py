@@ -1,16 +1,25 @@
 """Real-backend cluster runtime with checkpointed preemption/resume.
 
     python examples/preempt_resume.py --backend real --epochs 2
+    python examples/preempt_resume.py --backend real --faults chaos-real
 
 Submits one job whose :class:`JobSpec` names the ``real`` execution backend
 (real JAX gradients of a shrunk olmo-1b on this host, heterogeneous timing
 simulated) to the event-driven ``ClusterRuntime``, trains ``--epochs``
 epochs, injects a ``Preemption`` (the runtime checkpoints params/opt-state/
-GNS state to ``<workdir>/<job>.ckpt.npz``), clobbers the live state to prove
-the file matters, resumes via a fresh ``JobArrival``, and trains ``--epochs``
-more.  Asserts that the checkpoint file was written and that resume restored
-the exact pre-preemption state, so CI can run it as an end-to-end smoke.
-Exits nonzero if any invariant breaks.
+GNS state to checksummed generation files under ``<workdir>``), clobbers the
+live state to prove the file matters, resumes via a fresh ``JobArrival``,
+and trains ``--epochs`` more.  Asserts that the checkpoint file was written
+and that resume restored the exact pre-preemption state, so CI can run it
+as an end-to-end smoke.  Exits nonzero if any invariant breaks.
+
+With ``--faults chaos-real`` the run instead exercises the integrity-
+hardened real path end-to-end: a gradient-poisoned node must be excluded by
+the anomaly guard and quarantined by the numerical-health channel, a
+solver stall must trip the deadline watchdog into the engine-degradation
+chain, and a corrupted checkpoint generation must roll back bit-exactly to
+the newest valid generation on resume — all with the runtime invariant
+checker on and reporting zero violations.
 """
 import argparse
 import math
@@ -22,21 +31,12 @@ import _common  # noqa: F401  (sys.path bootstrap)
 import numpy as np
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--backend", default="real", choices=["sim", "real"])
-    ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--epochs", type=int, default=2)
-    ap.add_argument("--steps", type=int, default=2)
-    ap.add_argument("--total-batch", type=int, default=12)
-    args = ap.parse_args()
-
+def _make_spec(args):
     from repro.core.perf_model import CommModel
     from repro.core.scheduler import JobSpec
     from repro.core.simulator import GPU_CATALOG
-    from repro.runtime import ClusterRuntime, JobState, RealBackendConfig
 
-    spec = JobSpec(
+    return JobSpec(
         name="job",
         node_models=tuple(
             GPU_CATALOG[n].model() for n in ("a100", "v100", "rtx6000")
@@ -47,6 +47,152 @@ def main() -> None:
         ref_batch=args.total_batch,
         backend=args.backend,
     )
+
+
+def run_chaos_real(args) -> None:
+    """The real-path chaos gate (CI's chaos-smoke real-backend lane)."""
+    from repro.runtime import (
+        ClusterRuntime,
+        JobState,
+        NodeState,
+        RealBackendConfig,
+        make_fault_plan,
+    )
+    from repro.train import checkpoint as ckpt
+
+    spec = _make_spec(args)
+    plan = make_fault_plan("chaos-real", 3, seed=0)
+    poison = plan.poisons[0]
+    print("=== chaos-real (integrity-hardened real path) ===")
+    for line in plan.describe():
+        print(f"inject: {line}")
+
+    with tempfile.TemporaryDirectory() as workdir:
+        rt = ClusterRuntime(
+            3,
+            policy="cannikin",
+            seed=0,
+            real_backend=RealBackendConfig(arch=args.arch, seq_len=16, lr=0.3),
+            checkpoint_dir=workdir,
+            faults=plan,
+            invariants=True,
+        )
+        handle = rt.submit(spec, at=0.0)
+        rt.run()  # the arrival solve is stalled -> watchdog -> degradation
+
+        # Phase A: ride through the poison window (epochs 0..2).
+        rt.advance(epochs=3, steps=args.steps)
+        assert rt.health is not None
+        h1 = rt.health.nodes[poison.node]
+        assert h1.state == NodeState.QUARANTINED, (
+            f"poisoned node {poison.node} not quarantined: {h1.state}"
+        )
+        assert poison.node not in handle.nodes, "quarantined node still held"
+        quar = next(
+            r for r in rt.recovery_log
+            if r["action"] == "quarantine" and r["node"] == poison.node
+        )
+        latency = int(quar["epoch"]) - poison.at_epoch
+        assert 0 <= latency <= 2, f"quarantine latency {latency} epochs > 2"
+        anomalies = handle.last_result.grad_anomalies
+        assert any(anomalies), "anomaly guard never excluded the poisoned node"
+        print(f"poisoned node {poison.node} quarantined "
+              f"{latency} epoch(s) after onset; per-node anomalous steps "
+              f"this epoch: {list(anomalies)}")
+        assert rt.watchdog is not None and rt.watchdog.solver_timeouts >= 1, (
+            "solver stall never tripped the deadline watchdog"
+        )
+        print(f"watchdog: {rt.watchdog.counters()}")
+
+        # Generation 1: a clean preemption checkpoint.
+        rt.preempt(spec.name, at=10.0)
+        rt.run()
+        assert handle.state == JobState.PREEMPTED, handle.state
+        gen1 = handle.checkpoint_path
+        assert gen1 is not None and os.path.exists(gen1)
+        assert ckpt.verify_checkpoint(gen1), "generation 1 failed verification"
+        assert ckpt.checkpoint_generation(gen1) == 1
+        print(f"gen 1 written + verified: {os.path.basename(gen1)}")
+
+        rt.submit(spec, at=11.0)
+        rt.run()
+        rt.advance(epochs=2, steps=args.steps)  # epochs 3..4 (poison over)
+
+        # Generation 2: the injector flips bytes in this write.
+        rt.preempt(spec.name, at=20.0)
+        rt.run()
+        gen2 = handle.checkpoint_path
+        assert gen2 is not None and gen2 != gen1
+        assert rt.injector.corrupted_paths == [gen2]
+        assert not ckpt.verify_checkpoint(gen2), "corrupted gen 2 verified?!"
+        print(f"gen 2 written + corrupted: {os.path.basename(gen2)}")
+
+        # Rollback oracle: what a bit-exact restore of gen 1 must produce.
+        oracle = ckpt.restore(gen1, handle.backend.snapshot())
+        oracle_leaves = [np.asarray(x) for x in _leaves(oracle["params"])]
+
+        # Clobber the live state: only a real on-disk restore can fix this.
+        import jax
+
+        handle.backend.params = jax.tree_util.tree_map(
+            lambda x: x * 0.0, handle.backend.params
+        )
+
+        rt.submit(spec, at=21.0)
+        rt.run()
+        assert handle.state == JobState.RUNNING, handle.state
+        assert handle.ckpt_rollbacks == 1, (
+            f"expected exactly one rollback, got {handle.ckpt_rollbacks}"
+        )
+        post = [np.asarray(x) for x in _leaves(handle.backend.params)]
+        for a, b in zip(oracle_leaves, post):
+            np.testing.assert_array_equal(a, b)
+        print("resume rolled back to gen 1 bit-exactly")
+
+        # Phase C: train on after recovery; the quarantined node has been
+        # re-admitted (backoff expired) and must not be CRASHED/lost.
+        rt.advance(epochs=2, steps=args.steps)
+        assert handle.state == JobState.RUNNING
+        assert all(
+            math.isfinite(r.mean_loss) for r in handle.records
+        ), "non-finite loss"
+        assert rt.health.nodes[poison.node].state in (
+            NodeState.PROBATION, NodeState.HEALTHY,
+        ), f"poisoned node never re-admitted: {rt.health.nodes[poison.node].state}"
+
+        assert rt.invariant_checker is not None
+        assert rt.invariant_checker.checks_run > 0
+        rt.invariant_checker.assert_clean()
+        telemetry = rt.fault_telemetry()
+        print(f"detected={telemetry['detected']} "
+              f"recoveries={telemetry['recoveries']} "
+              f"rollbacks={telemetry['checkpoint_rollbacks']} "
+              f"invariants={telemetry['invariants']}")
+        print(f"\nepochs={handle.epochs_run} preemptions={handle.preemptions} "
+              f"— chaos-real invariants OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="real", choices=["sim", "real"])
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--total-batch", type=int, default=12)
+    ap.add_argument("--faults", default="none", choices=["none", "chaos-real"],
+                    help="chaos-real: gradient poison + checkpoint corruption "
+                         "+ solver stall with invariant checking")
+    args = ap.parse_args()
+
+    if args.faults == "chaos-real":
+        if args.backend != "real":
+            raise SystemExit("--faults chaos-real requires --backend real")
+        run_chaos_real(args)
+        return
+
+    from repro.runtime import ClusterRuntime, JobState, RealBackendConfig
+
+    spec = _make_spec(args)
 
     with tempfile.TemporaryDirectory() as workdir:
         rt = ClusterRuntime(

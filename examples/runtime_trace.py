@@ -88,7 +88,12 @@ def run_chaos(plan_name: str) -> None:
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--faults", default="none", choices=list(FAULT_PLANS),
+    # chaos-real targets the real backend (gradient poison / checkpoint
+    # corruption); this sim-only smoke asserts crash recovery, so it takes
+    # the timing-fault plans only — see examples/preempt_resume.py for the
+    # real-path chaos lane.
+    ap.add_argument("--faults", default="none",
+                    choices=[p for p in FAULT_PLANS if p != "chaos-real"],
                     help="seeded fault plan for an extra chaos replay")
     args = ap.parse_args()
 

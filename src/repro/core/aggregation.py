@@ -17,6 +17,13 @@ Two executable forms are provided:
    bit-for-bit.  This is the GSPMD-native realization: pad every node's shard
    to ``b_max``, weight pads 0 and real samples 1/B, and let XLA's psum do the
    ring all-reduce.  tests/test_aggregation.py asserts the equivalence.
+
+:func:`guard_weights` hardens Eq. (9) against integrity faults: a node whose
+gradient contribution is non-finite (NaN/Inf) or a gross norm outlier is
+excluded from the aggregate *before* it can pollute the global update, with
+the surviving weights renormalized.  The guard is jit-traceable and exactly
+transparent when every contribution is healthy (the all-valid branch selects
+the original ``r`` vector bitwise), so fault-free runs stay bit-identical.
 """
 from __future__ import annotations
 
@@ -31,7 +38,15 @@ __all__ = [
     "weighted_aggregate",
     "sample_weights",
     "padded_batch_layout",
+    "guard_weights",
+    "ANOMALY_OUTLIER_FACTOR",
 ]
+
+# A per-node gradient norm this many times the (finite) median norm counts
+# as an anomaly.  Healthy per-node gradients over same-distribution shards
+# differ by small factors (batch noise); a poisoned node is off by orders of
+# magnitude, so the default leaves a wide safety margin in both directions.
+ANOMALY_OUTLIER_FACTOR = 100.0
 
 
 def ratios(batches: Sequence[int]) -> np.ndarray:
@@ -55,6 +70,40 @@ def weighted_aggregate(local_grads: Sequence, batches: Sequence[int]):
         return out
 
     return jax.tree_util.tree_map(combine, *local_grads)
+
+
+def guard_weights(
+    sq_norms,
+    weights,
+    *,
+    outlier_factor: float = ANOMALY_OUTLIER_FACTOR,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Anomaly-guarded Eq. (9) weights from per-node |g_i|^2.
+
+    Returns ``(guarded_weights, valid)`` where ``valid[i]`` is False when
+    node i's squared gradient norm is non-finite or exceeds
+    ``outlier_factor**2`` times the median of the finite norms.  Invalid
+    nodes get weight 0 and the surviving weights are renormalized to sum
+    to 1; when *every* node is valid the original ``weights`` vector is
+    returned unchanged (bitwise — the no-fault transparency guarantee).
+    When every node is invalid all weights are 0: the aggregate vanishes
+    and the update is a no-op rather than a poisoned step.
+
+    Pure ``jnp`` — safe to call inside a jitted train step.
+    """
+    sq = jnp.asarray(sq_norms)
+    r = jnp.asarray(weights)
+    finite = jnp.isfinite(sq)
+    # Median of the finite norms; NaN when nothing is finite (then the
+    # outlier comparison is False and validity reduces to finiteness).
+    med = jnp.nanmedian(jnp.where(finite, sq, jnp.nan))
+    outlier = sq > (outlier_factor ** 2) * jnp.maximum(med, 1e-30)
+    valid = finite & ~outlier
+    masked = jnp.where(valid, r, 0.0)
+    total = jnp.sum(masked)
+    renorm = jnp.where(total > 0.0, masked / jnp.maximum(total, 1e-30), masked)
+    guarded = jnp.where(jnp.all(valid), r, renorm)
+    return guarded, valid
 
 
 def padded_batch_layout(batches: Sequence[int]) -> Tuple[int, np.ndarray]:

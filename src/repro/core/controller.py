@@ -186,8 +186,16 @@ class CannikinController:
         each carrying ``local_sqnorms``/``global_sqnorm``/``batches`` — and
         ``measurements``), so the controller stays runtime-agnostic: the
         :class:`~repro.runtime.backend.ExecutionResult` of either backend
-        and hand-built test doubles all plumb through the same way."""
+        and hand-built test doubles all plumb through the same way.
+
+        Steps where the backend's anomaly guard excluded a node
+        (``obs.valid`` not all-true) are skipped for GNS tracking: their
+        square-norms are poisoned and would corrupt the Theorem-4.1
+        estimate."""
         for obs in getattr(result, "grad_observations", ()) or ():
+            valid = getattr(obs, "valid", ())
+            if valid and not all(valid):
+                continue
             self.observe_gradients(obs.local_sqnorms, obs.global_sqnorm, obs.batches)
         self.observe_epoch(result.measurements)
 

@@ -189,6 +189,7 @@ def run_trace(args) -> int:
         ) if real else None,
         checkpoint_dir=args.checkpoint_dir,
         faults=faults,
+        invariants=args.invariants,
     )
     print(f"# trace: {len(trace)} events, jobs={[j.name for j in jobs]}, "
           f"nodes={args.trace_nodes}")
@@ -201,6 +202,9 @@ def run_trace(args) -> int:
                 continue
             retention = rep.goodput_retention
             note = f" retention={retention:.3f}" if retention is not None else ""
+            if args.invariants:
+                inv = telemetry.get("invariants", {})
+                note += f" invariant_violations={inv.get('violations', 0)}"
             print(f"# {name}: detected={telemetry['detected']} "
                   f"recoveries={telemetry['recoveries']}{note}")
     print(format_summary(reports))
@@ -238,8 +242,13 @@ def main() -> int:
     ap.add_argument("--trace-jobs", type=int, default=3)
     ap.add_argument("--trace-nodes", type=int, default=12)
     ap.add_argument("--faults", default="none",
-                    choices=["none", "chaos", "chaos-small"],
-                    help="seeded fault plan injected into trace replays")
+                    choices=["none", "chaos", "chaos-small", "chaos-real"],
+                    help="seeded fault plan injected into trace replays "
+                         "(chaos-real adds gradient poison / checkpoint "
+                         "corruption / solver stalls for real backends)")
+    ap.add_argument("--invariants", action="store_true",
+                    help="run the debug-mode runtime invariant checker "
+                         "after every reconciled event (trace mode)")
     ap.add_argument("--epochs-per-event", type=int, default=2)
     ap.add_argument("--arrival", default="fixed", choices=["fixed", "poisson"])
     ap.add_argument("--size-dist", default="fixed", choices=["fixed", "lognormal"])

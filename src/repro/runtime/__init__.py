@@ -28,10 +28,19 @@ hardware come and go.  This package exposes that loop as one API:
   SimulatedCluster` (the Pollux/Sia-style cluster simulation).
 * :class:`FaultPlan` / :class:`FaultInjector` / :class:`HealthMonitor` —
   the fault-tolerance layer: seeded deterministic fault injection
-  (crashes, stragglers, noise spikes, flaky checkpoint I/O), telemetry-
-  driven detection (EWMA residuals, quarantine with exponential-backoff
+  (crashes, stragglers, noise spikes, flaky checkpoint I/O — plus the
+  real-path integrity faults :class:`GradientPoison`,
+  :class:`CheckpointCorruption`, :class:`SolverStall`), telemetry-
+  driven detection (EWMA residuals, the gradient anomaly guard's
+  numerical-health channel, quarantine with exponential-backoff
   re-admission), and self-healing recovery through the reconcile loop
   (``replay(..., faults=FaultPlan.chaos(n))``).
+* :class:`Watchdog` / :class:`RuntimeInvariantChecker` — integrity
+  hardening: deadline guards on OptPerf solves (timeouts enter the
+  engine-degradation chain) and backend epochs, and a debug-mode
+  structural validator run after every reconciled event
+  (``ClusterRuntime(..., invariants=True)``).  Checksummed checkpoint
+  generations with rollback live in :mod:`repro.train.checkpoint`.
 * :func:`make_partition_policy` / :func:`drive_partition_policy` — the
   single-job batch-partition factory + epoch-driving loop shared by the
   launch CLI, examples, and benchmarks.
@@ -73,12 +82,15 @@ from repro.runtime.events import (
 )
 from repro.runtime.faults import (
     FAULT_PLANS,
+    CheckpointCorruption,
     FaultInjector,
     FaultPlan,
     FlakyCheckpointIO,
     FlakyCheckpoints,
+    GradientPoison,
     NodeCrash,
     NoiseSpike,
+    SolverStall,
     Straggler,
     make_fault_plan,
 )
@@ -92,6 +104,7 @@ from repro.runtime.health import (
     ReadmitNode,
     RefitRequested,
 )
+from repro.runtime.invariants import InvariantViolation, RuntimeInvariantChecker
 from repro.runtime.policy import (
     POLICIES,
     CannikinPolicy,
@@ -117,6 +130,7 @@ from repro.runtime.trace import (
     replay,
     synthetic_trace,
 )
+from repro.runtime.watchdog import DeadlineExceeded, Watchdog
 
 __all__ = [
     "BACKENDS",
@@ -165,7 +179,14 @@ __all__ = [
     "NodeCrash",
     "NoiseSpike",
     "Straggler",
+    "GradientPoison",
+    "CheckpointCorruption",
+    "SolverStall",
     "make_fault_plan",
+    "Watchdog",
+    "DeadlineExceeded",
+    "RuntimeInvariantChecker",
+    "InvariantViolation",
     "HealthAction",
     "HealthConfig",
     "HealthMonitor",

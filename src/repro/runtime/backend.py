@@ -78,11 +78,18 @@ __all__ = [
 class GradObservation:
     """One step's gradient telemetry — the Theorem-4.1 GNS ingredients:
     per-node gradient square-norms |g_i|^2, the aggregated |g|^2, and the
-    local batch sizes that produced them."""
+    local batch sizes that produced them.  ``valid`` marks which nodes the
+    anomaly guard kept in the Eq. (9) aggregate (empty tuple = unguarded
+    legacy observation, treated as all-valid)."""
 
     local_sqnorms: Tuple[float, ...]
     global_sqnorm: float
     batches: Tuple[int, ...]
+    valid: Tuple[bool, ...] = ()
+
+    @property
+    def all_valid(self) -> bool:
+        return all(self.valid) if self.valid else True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +108,11 @@ class ExecutionResult:
     losses: Tuple[float, ...]
     grad_observations: Tuple[GradObservation, ...]
     b_noise: float
+    # Per-node counts of steps the gradient anomaly guard excluded the node
+    # from aggregation this epoch (aligned with the configured node order;
+    # empty for backends without a guard).  The runtime feeds this to
+    # HealthMonitor.observe_numerics.
+    grad_anomalies: Tuple[int, ...] = ()
 
     @property
     def mean_loss(self) -> float:
@@ -254,6 +266,19 @@ class RealBackend:
     data-stream position are real and round-trip bit-exactly through
     ``snapshot``/``load_snapshot`` (and :meth:`checkpoint`/:meth:`restore`
     via :mod:`repro.train.checkpoint`) for preemption/resume.
+
+    **Integrity hardening.**  The Eq. (9) aggregation runs behind the
+    always-on anomaly guard (:func:`repro.core.aggregation.guard_weights`):
+    a node whose per-step gradient is non-finite or a gross norm outlier is
+    excluded from the aggregate (weights renormalized; the GNS tracker
+    skips the step) and counted in ``ExecutionResult.grad_anomalies``.
+    ``injector`` is the real-path fault seam: its ``poison_factors`` vector
+    multiplies each node's gradient inside the jitted step (exactly 1.0
+    when inactive — IEEE-exact, so no-fault replays stay bit-identical;
+    the guard itself is always compiled in, so the program is the same
+    with or without an injector), and its ``perturb`` post-transforms the
+    timing measurement stream exactly as it does for :class:`SimBackend`
+    (timing faults hit the real path too).
     """
 
     kind = "real"
@@ -268,21 +293,33 @@ class RealBackend:
         noise: float = 0.0,
         seed: int = 0,
         gns_decay: float = 0.9,
+        injector: Any = None,            # Optional[FaultInjector]
+        outlier_factor: Optional[float] = None,
     ) -> None:
         import jax
+
+        from repro.core.aggregation import ANOMALY_OUTLIER_FACTOR
 
         self.api = api
         self.optimizer = optimizer
         self.data = data
         self.cluster = cluster
         self.noise = noise
+        self.injector = injector
+        self.outlier_factor = (
+            float(outlier_factor) if outlier_factor is not None
+            else ANOMALY_OUTLIER_FACTOR
+        )
         self.params = api.init(jax.random.PRNGKey(seed))
         self.opt_state = optimizer.init(self.params)
         self.gns = GNSState()
         self.gns_decay = gns_decay
         self.sim_time = 0.0
         self.steps_done = 0
+        self.anomalous_steps = 0       # steps with >= 1 excluded node (lifetime)
         self._step_cache: Dict[int, Callable] = {}
+        self._job: Optional[str] = None
+        self._node_ids: Tuple[int, ...] = ()
 
     # -- node-set binding ------------------------------------------------
 
@@ -292,19 +329,33 @@ class RealBackend:
         self.cluster = SimulatedCluster(
             _profiles_for(spec, node_ids), spec.comm, noise=self.noise, seed=seed
         )
+        self._job = spec.name
+        self._node_ids = tuple(int(n) for n in node_ids)
 
     # -- gradient engine -------------------------------------------------
 
     def _node_grad_fn(self, b_max: int) -> Callable:
-        """Jitted: per-node grads + sq-norms + Eq.(9) aggregate + update."""
+        """Jitted: per-node grads (× injected poison factors) + sq-norms +
+        anomaly-guarded Eq.(9) aggregate + update.
+
+        The guard is *always* compiled in — the same program runs with and
+        without an injector, so the no-fault bit-identity guarantee holds
+        by construction: healthy poison factors are exactly 1.0 (IEEE-exact
+        multiply) and the all-valid guard branch selects the original
+        weight vector bitwise.  Invalid nodes' gradients are zeroed
+        *before* the tensordot (0 × NaN = NaN otherwise) and the surviving
+        weights renormalized; with every node invalid the aggregate is
+        zero and the update a no-op."""
         if b_max in self._step_cache:
             return self._step_cache[b_max]
         import jax
         import jax.numpy as jnp
 
+        from repro.core.aggregation import guard_weights
         from repro.optim.optimizers import global_norm
 
         api, optimizer = self.api, self.optimizer
+        outlier_factor = self.outlier_factor
 
         def node_loss(params, tokens, labels, mask):
             # mean over the node's real samples (pads weighted 0).
@@ -316,14 +367,26 @@ class RealBackend:
 
         grad_fn = jax.grad(node_loss)
 
-        def step(params, opt_state, tokens, labels, mask, r, lr_scale):
-            # tokens/labels: (n, b_max, S); mask: (n, b_max); r: (n,)
+        def step(params, opt_state, tokens, labels, mask, r, lr_scale, poison):
+            # tokens/labels: (n, b_max, S); mask: (n, b_max); r/poison: (n,)
             grads = jax.vmap(grad_fn, in_axes=(None, 0, 0, 0))(
                 params, tokens, labels, mask
             )
+            grads = jax.tree_util.tree_map(
+                lambda g: g
+                * poison.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype),
+                grads,
+            )
             sq_i = jax.vmap(lambda g: global_norm(g) ** 2)(grads)
+            w, valid = guard_weights(sq_i, r, outlier_factor=outlier_factor)
             agg = jax.tree_util.tree_map(
-                lambda g: jnp.tensordot(r.astype(jnp.float32), g.astype(jnp.float32), axes=1).astype(g.dtype),
+                lambda g: jnp.tensordot(
+                    w.astype(jnp.float32),
+                    jnp.where(
+                        valid.reshape((-1,) + (1,) * (g.ndim - 1)), g, 0
+                    ).astype(jnp.float32),
+                    axes=1,
+                ).astype(g.dtype),
                 grads,
             )
             sq_g = global_norm(agg) ** 2
@@ -336,7 +399,7 @@ class RealBackend:
                 },
             )
             new_params, new_opt = optimizer.update(agg, opt_state, params, lr_scale)
-            return new_params, new_opt, loss, sq_i, sq_g
+            return new_params, new_opt, loss, sq_i, sq_g, valid
 
         fn = jax.jit(step)
         self._step_cache[b_max] = fn
@@ -358,6 +421,14 @@ class RealBackend:
         r = jnp.asarray(ratios(batches), jnp.float32)
         step_fn = self._node_grad_fn(b_max)
 
+        node_ids = self._node_ids if len(self._node_ids) == n else tuple(range(n))
+        if self.injector is not None:
+            poison_np = self.injector.poison_factors(node_ids)
+        else:
+            poison_np = np.ones(n, np.float32)
+        poison = jnp.asarray(poison_np, jnp.float32)
+        anomaly_counts = np.zeros(n, np.int64)
+
         losses: List[float] = []
         grad_obs: List[GradObservation] = []
         for _ in range(steps):
@@ -372,7 +443,7 @@ class RealBackend:
             tok[:, :w], lab[:, :w] = padded["tokens"], padded["labels"]
             for i, b in enumerate(batches):
                 msk[i, :b] = 1.0
-            self.params, self.opt_state, loss, sq_i, sq_g = step_fn(
+            self.params, self.opt_state, loss, sq_i, sq_g, valid = step_fn(
                 self.params,
                 self.opt_state,
                 jnp.asarray(tok),
@@ -380,17 +451,32 @@ class RealBackend:
                 jnp.asarray(msk),
                 r,
                 jnp.float32(lr_scale),
+                poison,
             )
+            valid_np = np.asarray(valid, bool)
+            anomaly_counts += ~valid_np
+            self.anomalous_steps += int(not valid_np.all())
             losses.append(float(loss))
             obs = GradObservation(
                 local_sqnorms=tuple(float(x) for x in np.asarray(sq_i)),
                 global_sqnorm=float(sq_g),
                 batches=tuple(batches),
+                valid=tuple(bool(v) for v in valid_np),
             )
             grad_obs.append(obs)
-            self._track_gns(obs)
+            if obs.all_valid:
+                # Poisoned steps carry non-finite/outlier sq-norms: feeding
+                # them to the Theorem-4.1 tracker would corrupt b_noise.
+                self._track_gns(obs)
 
         epoch_seconds, measurements = self.cluster.run_epoch(batches, steps)
+        measurements = list(measurements)
+        if self.injector is not None:
+            # Timing faults (slowdowns/flaps) route through the same seam as
+            # the sim backend: pure post-transform of the measurement stream.
+            epoch_seconds, measurements = self.injector.perturb(
+                self._job or "?", node_ids, epoch_seconds, measurements
+            )
         self.sim_time += epoch_seconds
         return ExecutionResult(
             epoch_seconds=epoch_seconds,
@@ -398,6 +484,7 @@ class RealBackend:
             losses=tuple(losses),
             grad_observations=tuple(grad_obs),
             b_noise=self.gns.b_noise,
+            grad_anomalies=tuple(int(c) for c in anomaly_counts),
         )
 
     def _track_gns(self, obs: GradObservation) -> None:
@@ -472,7 +559,9 @@ class RealBackendConfig:
     lr: float = 0.3
     gns_decay: float = 0.9
 
-    def build(self, *, noise: float = 0.0, seed: int = 0) -> RealBackend:
+    def build(
+        self, *, noise: float = 0.0, seed: int = 0, injector: Any = None
+    ) -> RealBackend:
         from repro.configs import get_api
         from repro.data.pipeline import SyntheticLM
         from repro.optim.optimizers import constant_schedule, sgd
@@ -486,6 +575,7 @@ class RealBackendConfig:
             noise=noise,
             seed=seed,
             gns_decay=self.gns_decay,
+            injector=injector,
         )
 
 
@@ -504,7 +594,9 @@ def make_backend(
     if kind == "sim":
         return SimBackend(noise=noise, injector=injector)
     if kind == "real":
-        return (real_config or RealBackendConfig()).build(noise=noise, seed=seed)
+        return (real_config or RealBackendConfig()).build(
+            noise=noise, seed=seed, injector=injector
+        )
     raise ValueError(f"unknown execution backend {kind!r}; choose from {BACKENDS}")
 
 

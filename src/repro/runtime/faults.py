@@ -41,6 +41,22 @@ Fault kinds:
 * :class:`FlakyCheckpoints` — the first ``failures`` checkpoint writes
   raise ``OSError`` through the I/O seam.
 
+Real-path integrity faults (the ``RealBackend`` seam, PR 7):
+
+* :class:`GradientPoison` — a node's per-node gradient contribution goes
+  NaN/Inf (or is scaled by a huge factor) for a seeded epoch window.  The
+  backend multiplies each node's gradient by the injector's
+  :meth:`FaultInjector.poison_factors` vector inside the jitted step; the
+  factor is exactly ``1.0`` outside the window, and ``g * 1.0`` is
+  IEEE-exact, so no-fault replays stay bit-identical.
+* :class:`CheckpointCorruption` — bytes flipped (seeded offsets) in the
+  Nth successfully written checkpoint payload, after the atomic rename —
+  the on-disk rot that sha256 verification and generation rollback exist
+  to survive.
+* :class:`SolverStall` — a seeded artificial delay on the first OptPerf
+  solve of each window epoch, tripping the deadline watchdog into the
+  engine-degradation / last-known-good chain.
+
 All random factors are drawn from *stateless* generators keyed by
 ``(plan seed, epoch, node)``, so the schedule is bit-identical no matter
 how many jobs execute, in what order, or how often a trace is replayed.
@@ -60,6 +76,9 @@ __all__ = [
     "Straggler",
     "NoiseSpike",
     "FlakyCheckpoints",
+    "GradientPoison",
+    "CheckpointCorruption",
+    "SolverStall",
     "FaultPlan",
     "FaultInjector",
     "FlakyCheckpointIO",
@@ -113,6 +132,51 @@ class FlakyCheckpoints:
     failures: int = 1
 
 
+@dataclasses.dataclass(frozen=True)
+class GradientPoison:
+    """One node's gradient contribution is poisoned for ``duration`` epochs
+    from ``at_epoch``: ``mode="nan"``/``"inf"`` makes it non-finite,
+    ``mode="scale"`` multiplies it by ``factor`` (a gross norm outlier).
+    The anomaly guard must exclude it before Eq. (9) aggregation."""
+
+    node: int
+    at_epoch: int
+    duration: int
+    mode: str = "nan"          # "nan" | "inf" | "scale"
+    factor: float = 1e6        # used by mode="scale"
+
+    def factor_value(self) -> float:
+        if self.mode == "nan":
+            return float("nan")
+        if self.mode == "inf":
+            return float("inf")
+        if self.mode == "scale":
+            return float(self.factor)
+        raise ValueError(f"unknown GradientPoison mode {self.mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointCorruption:
+    """Flip ``n_bytes`` seeded bytes inside the ``write_index``-th (1-based)
+    successfully written checkpoint file — after the atomic rename, so the
+    archive exists and passes the torn-write defense but fails sha256
+    verification (or outright unzipping) on load."""
+
+    write_index: int = 1
+    n_bytes: int = 24
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverStall:
+    """The first OptPerf solve of each epoch in the window stalls by
+    ``delay`` real seconds — long enough to trip the deadline watchdog,
+    which degrades the solver engine instead of hanging the reconcile."""
+
+    at_epoch: int
+    duration: int = 1
+    delay: float = 0.05
+
+
 # ---------------------------------------------------------------------------
 # the plan
 # ---------------------------------------------------------------------------
@@ -132,6 +196,9 @@ class FaultPlan:
     stragglers: Tuple[Straggler, ...] = ()
     spikes: Tuple[NoiseSpike, ...] = ()
     flaky_checkpoints: Optional[FlakyCheckpoints] = None
+    poisons: Tuple[GradientPoison, ...] = ()
+    corruptions: Tuple[CheckpointCorruption, ...] = ()
+    solver_stalls: Tuple[SolverStall, ...] = ()
 
     @classmethod
     def chaos(cls, n_nodes: int, seed: int = 0) -> "FaultPlan":
@@ -182,6 +249,28 @@ class FaultPlan:
             flaky_checkpoints=FlakyCheckpoints(failures=1),
         )
 
+    @classmethod
+    def chaos_real(cls, n_nodes: int, seed: int = 0) -> "FaultPlan":
+        """The real-path integrity chaos plan over a >= 2-node cluster: one
+        node emits NaN gradients for a window (the anomaly guard + numeric
+        health channel must contain it), the second successful checkpoint
+        write is corrupted on disk (generation rollback must recover), and
+        one OptPerf solve stalls (the deadline watchdog must degrade the
+        engine).  The poisoned node is drawn from the seeded RNG, excluding
+        the highest id (synthetic traces take that node down themselves)."""
+        if n_nodes < 2:
+            raise ValueError("chaos-real plan needs >= 2 nodes")
+        rng = np.random.default_rng(seed)
+        poisoned = int(rng.integers(0, max(n_nodes - 1, 1)))
+        return cls(
+            seed=seed,
+            poisons=(
+                GradientPoison(node=poisoned, at_epoch=1, duration=2, mode="nan"),
+            ),
+            corruptions=(CheckpointCorruption(write_index=2, n_bytes=24),),
+            solver_stalls=(SolverStall(at_epoch=0, duration=1, delay=0.05),),
+        )
+
     def describe(self) -> List[str]:
         """One line per scheduled fault (trace logs)."""
         out = [
@@ -200,6 +289,20 @@ class FaultPlan:
         ]
         if self.flaky_checkpoints is not None:
             out.append(f"flaky-checkpoints(failures={self.flaky_checkpoints.failures})")
+        out += [
+            f"gradient-poison(node={p.node}, "
+            f"epochs={p.at_epoch}..{p.at_epoch + p.duration - 1}, mode={p.mode})"
+            for p in self.poisons
+        ]
+        out += [
+            f"checkpoint-corruption(write={c.write_index}, bytes={c.n_bytes})"
+            for c in self.corruptions
+        ]
+        out += [
+            f"solver-stall(epochs={s.at_epoch}..{s.at_epoch + s.duration - 1}, "
+            f"delay={s.delay}s)"
+            for s in self.solver_stalls
+        ]
         return out
 
     def counts(self) -> Dict[str, int]:
@@ -210,10 +313,13 @@ class FaultPlan:
             "flaky_checkpoint_writes": (
                 self.flaky_checkpoints.failures if self.flaky_checkpoints else 0
             ),
+            "gradient_poisons": len(self.poisons),
+            "checkpoint_corruptions": len(self.corruptions),
+            "solver_stalls": len(self.solver_stalls),
         }
 
 
-FAULT_PLANS = ("none", "chaos", "chaos-small")
+FAULT_PLANS = ("none", "chaos", "chaos-small", "chaos-real")
 
 
 def make_fault_plan(name: str, n_nodes: int, seed: int = 0) -> Optional[FaultPlan]:
@@ -224,6 +330,8 @@ def make_fault_plan(name: str, n_nodes: int, seed: int = 0) -> Optional[FaultPla
         return FaultPlan.chaos(n_nodes, seed)
     if name == "chaos-small":
         return FaultPlan.chaos_small(n_nodes, seed)
+    if name == "chaos-real":
+        return FaultPlan.chaos_real(n_nodes, seed)
     raise ValueError(f"unknown fault plan {name!r}; choose from {FAULT_PLANS}")
 
 
@@ -284,6 +392,9 @@ class FaultInjector:
             if plan.flaky_checkpoints is not None
             else None
         )
+        self.checkpoint_writes = 0        # successful writes seen (corruption clock)
+        self.corrupted_paths: List[str] = []
+        self._stalls_consumed: set = set()
 
     # -- schedule queries ------------------------------------------------
 
@@ -307,6 +418,72 @@ class FaultInjector:
                 s = max(s, w.scale)
         return s
 
+    # -- real-backend integrity seams ------------------------------------
+
+    def poison_factors(self, node_ids: Sequence[int]) -> np.ndarray:
+        """Per-node gradient multipliers for the current epoch: exactly
+        ``1.0`` for healthy nodes (``g * 1.0`` is IEEE-exact, so the seam
+        is bit-transparent), NaN/Inf/huge inside a poison window."""
+        out = np.ones(len(node_ids), dtype=np.float32)
+        for i, nid in enumerate(node_ids):
+            for p in self.plan.poisons:
+                if p.node == int(nid) and p.at_epoch <= self.epoch < p.at_epoch + p.duration:
+                    out[i] = np.float32(p.factor_value())
+                    self._record(
+                        "gradient-poison", int(nid), p.at_epoch,
+                        ("poison", int(nid), p.at_epoch, p.duration),
+                    )
+        return out
+
+    def corrupt_checkpoint(self, path: str) -> bool:
+        """Called after each *successful* checkpoint write.  Counts the
+        write; when its 1-based index matches a scheduled corruption, flips
+        seeded bytes inside ``path``'s payload (past the zip local header)
+        and returns True."""
+        self.checkpoint_writes += 1
+        hits = [
+            c for c in self.plan.corruptions
+            if c.write_index == self.checkpoint_writes
+        ]
+        if not hits:
+            return False
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            for c in hits:
+                rng = np.random.default_rng(
+                    [max(self.plan.seed, 0), 202, self.checkpoint_writes]
+                )
+                lo = min(256, max(size // 2, 1))
+                offsets = rng.integers(low=lo, high=size, size=c.n_bytes)
+                for off in offsets:
+                    f.seek(int(off))
+                    b = f.read(1)
+                    f.seek(int(off))
+                    f.write(bytes([b[0] ^ 0xFF]))
+                self._record(
+                    "checkpoint-corruption", None, self.epoch,
+                    ("corrupt", c.write_index),
+                )
+        self.corrupted_paths.append(path)
+        return True
+
+    def solver_stall(self) -> float:
+        """Seconds the next OptPerf solve should stall — consumed once per
+        (stall window, epoch), so the watchdog-triggered degradation retry
+        is not re-stalled and makes progress."""
+        for s in self.plan.solver_stalls:
+            if s.at_epoch <= self.epoch < s.at_epoch + s.duration:
+                key = ("stall", s.at_epoch, s.duration, self.epoch)
+                if key in self._stalls_consumed:
+                    continue
+                self._stalls_consumed.add(key)
+                self._record(
+                    "solver-stall", None, s.at_epoch,
+                    ("solver-stall", s.at_epoch, s.duration),
+                )
+                return float(s.delay)
+        return 0.0
+
     # -- telemetry -------------------------------------------------------
 
     def _record(self, kind: str, node: int, onset: int, key: object) -> None:
@@ -320,6 +497,8 @@ class FaultInjector:
         out["fired"] = len(self.injected)
         if self.checkpoint_io is not None:
             out["checkpoint_writes_failed"] = self.checkpoint_io.failed
+        if self.corrupted_paths:
+            out["checkpoints_corrupted"] = len(self.corrupted_paths)
         return out
 
     # -- the perturbation ------------------------------------------------

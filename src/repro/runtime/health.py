@@ -19,6 +19,12 @@ detection, the second third of the fault-tolerance layer (injection:
   job holds that reports nothing for ``crash_epochs`` consecutive epochs
   is declared crashed (a silent stop produces no NodeLeave — absence of
   telemetry is the only signal).
+* **Numeric anomalies** are a separate channel (:meth:`HealthMonitor.
+  observe_numerics`): the real backend's gradient anomaly guard reports,
+  per node, how many steps it excluded from Eq. (9) aggregation; a node
+  anomalous for ``numeric_suspect_epochs`` consecutive epochs is
+  quarantined through the same state machine, so a persistently poisoned
+  node is contained exactly like a persistent straggler.
 * **Quarantine state machine** with exponential-backoff re-admission:
   ``healthy → quarantined → probation → healthy``, where a breach during
   probation re-quarantines with a *doubled* backoff (capped at
@@ -77,6 +83,8 @@ class HealthConfig:
     probation_epochs: int = 2       # clean probation epochs before healthy
     drift_ratio: float = 1.10       # job-mean residual that counts as drift
     drift_epochs: int = 4           # sustained drift epochs before a refit
+    numeric_suspect_epochs: int = 2  # consecutive anomalous-gradient epochs
+                                     # before quarantine (numeric channel)
 
 
 # -- actions the runtime reconciles ------------------------------------------
@@ -116,7 +124,7 @@ class _NodeHealth:
     __slots__ = (
         "state", "ewma", "var", "count", "breaches", "missing",
         "backoff", "release_epoch", "probation_left", "quarantines",
-        "transitions",
+        "transitions", "numeric_breaches",
     )
 
     def __init__(self) -> None:
@@ -131,6 +139,7 @@ class _NodeHealth:
         self.probation_left = 0
         self.quarantines = 0
         self.transitions: List[Tuple[int, str]] = []
+        self.numeric_breaches = 0
 
     def transition(self, epoch: int, state: str) -> None:
         self.state = state
@@ -233,6 +242,41 @@ class HealthMonitor:
                     h.ewma = d * h.ewma + (1 - d) * x
                 h.count += 1
         self._observe_drift(job, epoch, residuals)
+
+    def observe_numerics(
+        self,
+        job: str,
+        epoch: int,
+        node_ids: Sequence[int],
+        anomaly_counts: Sequence[int],
+    ) -> None:
+        """The numerical-health channel: per held node, how many of this
+        epoch's steps the gradient anomaly guard excluded the node from
+        Eq. (9) aggregation (non-finite or norm-outlier contribution).
+
+        A node anomalous for ``numeric_suspect_epochs`` consecutive epochs
+        is quarantined through the same state machine timing faults use —
+        and, as with timing breaches, a single anomalous epoch during
+        probation re-quarantines immediately (a numerically flapping node
+        doubles its backoff).  Clean epochs reset the streak.
+        """
+        cfg = self.config
+        for nid, count in zip(node_ids, anomaly_counts):
+            h = self.node(int(nid))
+            if h.state in (NodeState.QUARANTINED, NodeState.CRASHED):
+                continue
+            if int(count) <= 0:
+                h.numeric_breaches = 0
+                continue
+            h.numeric_breaches += 1
+            if h.numeric_breaches == 1:
+                self.detections.append(
+                    {"kind": "numeric", "node": int(nid), "job": job, "epoch": epoch}
+                )
+            trip = 1 if h.state == NodeState.PROBATION else cfg.numeric_suspect_epochs
+            if h.numeric_breaches >= trip:
+                h.numeric_breaches = 0
+                self._quarantine(h, int(nid), job, epoch)
 
     def _quarantine(self, h: _NodeHealth, nid: int, job: str, epoch: int) -> None:
         h.quarantines += 1

@@ -92,23 +92,31 @@ class CannikinPolicy:
     # and retries — never letting one solver failure kill a job.
     _ENGINE_FALLBACK = {"jax": "batched", "batched": "scalar"}
 
-    def __init__(self, n_nodes: int, *, engine: str = "batched") -> None:
+    def __init__(self, n_nodes: int, *, engine: str = "batched", watchdog=None) -> None:
         self.n_nodes = n_nodes
         self.scheduler = Scheduler(n_nodes, engine=engine)
         self.engine_degradations = 0
         self.last_known_good_served = 0
+        # Optional repro.runtime.watchdog.Watchdog: deadline-guards every
+        # solve; a DeadlineExceeded (a RuntimeError) enters the same
+        # degradation chain as a solver error, so a stalled solve costs one
+        # engine tier, never a hung reconcile.
+        self.watchdog = watchdog
 
     def _solve(self, op):
         """Run one scheduler entry point under the degradation chain.
 
         Validation errors (unknown job, duplicate arrival, bad node id:
         ``KeyError``/``ValueError``) propagate — those are caller bugs,
-        not solver failures.  Anything else walks ``_ENGINE_FALLBACK``
+        not solver failures.  Anything else — including a watchdog
+        ``DeadlineExceeded`` on a stalled solve — walks ``_ENGINE_FALLBACK``
         (jax → batched → scalar), re-solving from the scheduler's intact
         job/mask state; with every tier exhausted, the last-known-good
         allocation is served rather than raising mid-reconcile.
         """
         try:
+            if self.watchdog is not None:
+                return self.watchdog.guard_solve(op)
             return op()
         except (KeyError, ValueError):
             raise
@@ -165,6 +173,8 @@ class CannikinPolicy:
             out["engine_degradations"] = self.engine_degradations
         if self.last_known_good_served:
             out["last_known_good_served"] = self.last_known_good_served
+        if self.watchdog is not None and self.watchdog.solver_timeouts:
+            out["solver_timeouts"] = self.watchdog.solver_timeouts
         return out
 
 

@@ -68,7 +68,9 @@ from repro.runtime.health import (
     ReadmitNode,
     RefitRequested,
 )
+from repro.runtime.invariants import RuntimeInvariantChecker
 from repro.runtime.policy import Policy, make_policy
+from repro.runtime.watchdog import Watchdog
 
 __all__ = [
     "JobState",
@@ -142,6 +144,7 @@ class JobHandle:
         self.preemptions = 0
         self.ckpt_write_failures = 0
         self.ckpt_fallbacks = 0
+        self.ckpt_rollbacks = 0
         self.restores = 0
         self.records: List[EpochRecord] = []
         self.last_result = None  # the most recent epoch's ExecutionResult
@@ -152,6 +155,7 @@ class JobHandle:
         self._real_config = real_config
         self._ckpt_dir = checkpoint_dir
         self._injector = injector
+        self._ckpt_manager = None  # lazy CheckpointManager (needs _ckpt_dir)
         self._snapshot: Optional[dict] = None
         self._resume_pending = False
 
@@ -267,14 +271,52 @@ class JobHandle:
             self.spec, self._ctl_nodes, seed=self._seed + self.reallocations
         )
 
+    def _checkpoint_manager(self):
+        """The job's :class:`~repro.train.checkpoint.CheckpointManager`
+        (generation files ``<dir>/<job>.genNNNNNN.ckpt.npz``); None when the
+        runtime has no checkpoint directory."""
+        if self._ckpt_dir is None:
+            return None
+        if self._ckpt_manager is None:
+            from repro.train.checkpoint import CheckpointManager
+
+            self._ckpt_manager = CheckpointManager(self._ckpt_dir, self.name)
+        return self._ckpt_manager
+
     def _restore_backend(self) -> None:
         """Restore the preemption checkpoint into the backend: from the
-        checkpoint file when one was written (the file is the source of
-        truth — in a real cluster the preempted process died), else from
-        the in-memory snapshot."""
+        newest *valid* checkpoint generation when any were written (the
+        file is the source of truth — in a real cluster the preempted
+        process died; a corrupt head generation rolls back to the newest
+        one whose sha256 verifies, counted in ``ckpt_rollbacks``), else
+        from the in-memory snapshot."""
         if self.backend is None:
             return
-        if self.checkpoint_path is not None and os.path.exists(self.checkpoint_path):
+        manager = self._checkpoint_manager()
+        if (
+            manager is not None
+            and self.checkpoint_path is not None
+            and manager.generations()
+        ):
+            from repro.train.checkpoint import CheckpointCorruptError
+
+            before = manager.rollbacks
+            try:
+                state, _gen, path = manager.restore(self.backend.snapshot())
+            except CheckpointCorruptError:
+                # Every generation corrupt: fall back to the in-memory
+                # snapshot (the in-process resume path) if there is one.
+                self.ckpt_rollbacks += manager.rollbacks - before
+                if self._snapshot is not None:
+                    self.backend.load_snapshot(self._snapshot)
+                    self.ckpt_fallbacks += 1
+                    self.restores += 1
+                return
+            self.ckpt_rollbacks += manager.rollbacks - before
+            self.checkpoint_path = path
+            self.backend.load_snapshot(state)
+            self.restores += 1
+        elif self.checkpoint_path is not None and os.path.exists(self.checkpoint_path):
             from repro.train import checkpoint as ckpt
 
             self.backend.load_snapshot(
@@ -305,20 +347,25 @@ class JobHandle:
             snap = self.backend.snapshot()
             if snap:
                 self._snapshot = snap
-                if self._ckpt_dir is not None:
-                    from repro.train import checkpoint as ckpt
-
-                    os.makedirs(self._ckpt_dir, exist_ok=True)
-                    path = os.path.join(self._ckpt_dir, f"{self.name}.ckpt.npz")
+                manager = self._checkpoint_manager()
+                if manager is not None:
                     io = self._injector.checkpoint_io if self._injector else None
-                    # Flaky checkpoint I/O gets bounded retries; if all
-                    # attempts fail, resume falls back to the in-memory
-                    # snapshot (checkpoint_path stays unset so restore
-                    # never reads a file this preemption failed to write).
+                    # Flaky checkpoint I/O gets bounded retries (a failed
+                    # attempt leaves no file, so the generation counter
+                    # does not advance); if all attempts fail, resume falls
+                    # back to the in-memory snapshot (checkpoint_path stays
+                    # unset so restore never reads a file this preemption
+                    # failed to write).
                     for _attempt in range(3):
                         try:
-                            ckpt.save(path, snap, io=io)
+                            path = manager.save(snap, io=io)
                             self.checkpoint_path = path
+                            if self._injector is not None:
+                                # Disk-corruption fault seam: flips bytes in
+                                # the just-written generation *after* the
+                                # atomic rename — exactly the failure the
+                                # checksummed rollback must absorb.
+                                self._injector.corrupt_checkpoint(path)
                             break
                         except OSError:
                             self.ckpt_write_failures += 1
@@ -408,6 +455,8 @@ class ClusterRuntime:
         checkpoint_dir: Optional[str] = None,
         faults: Optional[FaultPlan] = None,
         health: Union[None, bool, HealthConfig, HealthMonitor] = None,
+        watchdog: Union[None, bool, "Watchdog"] = None,
+        invariants: bool = False,
     ) -> None:
         self.n_nodes = n_nodes
         self.policy: Policy = (
@@ -445,6 +494,44 @@ class ClusterRuntime:
         self.noop_events = 0           # idempotent NodeLeave/NodeJoin no-ops
         self.recovery_log: List[Dict[str, object]] = []
         self._epoch_sim: List[float] = []  # per-epoch sim seconds (MTTR accounting)
+        # -- integrity hardening (PR 7): watchdog + invariant checker ------
+        self.watchdog: Optional[Watchdog] = self._build_watchdog(watchdog)
+        if self.watchdog is not None and hasattr(self.policy, "watchdog"):
+            self.policy.watchdog = self.watchdog
+        self.invariant_checker: Optional[RuntimeInvariantChecker] = (
+            RuntimeInvariantChecker(self) if invariants else None
+        )
+
+    def _build_watchdog(self, watchdog) -> "Optional[Watchdog]":
+        """Resolve the watchdog argument.  ``True`` (or None while the fault
+        plan schedules solver stalls) builds one wired to the injector's
+        stall seam, with a solve deadline of half the shortest injected
+        stall — tight enough that every stall trips the deadline, loose
+        enough that real solves never do."""
+        if isinstance(watchdog, Watchdog):
+            if watchdog.stall_hook is None and self.injector is not None:
+                watchdog.stall_hook = self.injector.solver_stall
+            return watchdog
+        stalls = (
+            self.injector.plan.solver_stalls if self.injector is not None else ()
+        )
+        if watchdog is None:
+            watchdog = bool(stalls)
+        if not watchdog:
+            return None
+        deadline = min((s.delay for s in stalls), default=None)
+        return Watchdog(
+            solve_deadline=deadline / 2.0 if deadline else None,
+            stall_hook=self.injector.solver_stall if self.injector else None,
+        )
+
+    @property
+    def invariant_violations(self) -> List[object]:
+        return self.invariant_checker.violations if self.invariant_checker else []
+
+    def _check_invariants(self, event: Event) -> None:
+        if self.invariant_checker is not None:
+            self.invariant_checker.check(describe(event))
 
     # -- event intake ----------------------------------------------------
 
@@ -511,6 +598,7 @@ class ClusterRuntime:
         self._apply_allocation(self.allocation)
         record = ReconcileRecord(time=self.clock, event=event, allocation=self.allocation)
         self.records.append(record)
+        self._check_invariants(event)
         return record
 
     def run(self) -> List[ReconcileRecord]:
@@ -545,7 +633,13 @@ class ClusterRuntime:
         epoch_sim = 0.0
         ran: List[JobHandle] = []
         for handle in list(self.handles.values()):
-            recs = handle.advance(1, steps=steps)
+            if self.watchdog is not None:
+                # Soft deadline: a slow epoch is counted, never discarded.
+                recs = self.watchdog.guard_execute(
+                    lambda h=handle: h.advance(1, steps=steps)
+                )
+            else:
+                recs = handle.advance(1, steps=steps)
             if recs:
                 ran.append(handle)
                 epoch_sim = max(epoch_sim, recs[-1].epoch_seconds)
@@ -596,6 +690,13 @@ class ClusterRuntime:
             nd = handle.spec.node_models[nid]
             predicted.append(max((nd.q + nd.k) * b + (nd.s + nd.m), 1e-9))
         self.health.observe_job(handle.name, epoch, node_ids, observed, predicted)
+        # Numerical-health channel: per-node anomalous-gradient step counts
+        # from the real backend's guard (empty for unguarded backends).  A
+        # zero count is an explicit healthy signal (it resets the streak),
+        # so the whole vector is fed, not just the breaches.
+        anomalies = getattr(result, "grad_anomalies", ()) or ()
+        if len(anomalies) == len(node_ids):
+            self.health.observe_numerics(handle.name, epoch, node_ids, anomalies)
 
     def _reconcile_now(self, event: Event) -> ReconcileRecord:
         """Apply a synthesized (detection-driven) event immediately.  The
@@ -607,6 +708,7 @@ class ClusterRuntime:
             time=self.clock, event=event, allocation=self.allocation
         )
         self.records.append(record)
+        self._check_invariants(event)
         return record
 
     def _log_recovery(self, action: str, node: Optional[int], jobs, epoch: int) -> None:
@@ -820,16 +922,29 @@ class ClusterRuntime:
                 )
                 if det is not None:
                     quar_lat.append(int(det["epoch"]) - s.at_epoch)
+            for p in self.injector.plan.poisons:
+                det = next(
+                    (
+                        d
+                        for d in detections
+                        if d["kind"] == "numeric"
+                        and d["node"] == p.node
+                        and int(d["epoch"]) >= p.at_epoch
+                    ),
+                    None,
+                )
+                if det is not None:
+                    quar_lat.append(int(det["epoch"]) - p.at_epoch)
         det_lat = crash_lat + quar_lat
 
         def _mean(xs):
             return (sum(xs) / len(xs)) if xs else None
 
-        return {
+        out: Dict[str, object] = {
             "injected": dict(self.injector.counts()) if self.injector else {},
             "detected": {
                 kind: sum(1 for d in detections if d["kind"] == kind)
-                for kind in ("crash", "quarantine", "drift")
+                for kind in ("crash", "quarantine", "drift", "numeric")
             },
             "recoveries": {
                 act: sum(1 for r in self.recovery_log if r["action"] == act)
@@ -842,6 +957,9 @@ class ClusterRuntime:
             "checkpoint_fallbacks": sum(
                 h.ckpt_fallbacks for h in self.handles.values()
             ),
+            "checkpoint_rollbacks": sum(
+                h.ckpt_rollbacks for h in self.handles.values()
+            ),
             "restores": sum(h.restores for h in self.handles.values()),
             "detection_latency_epochs": _mean(det_lat),
             "mttr_epochs": _mean(mttr_ep),
@@ -849,3 +967,11 @@ class ClusterRuntime:
             "epochs": self.epoch_index,
             "sim_time": self.sim_clock,
         }
+        if self.watchdog is not None:
+            out["watchdog"] = self.watchdog.counters()
+        if self.invariant_checker is not None:
+            out["invariants"] = {
+                "checks": self.invariant_checker.checks_run,
+                "violations": len(self.invariant_checker.violations),
+            }
+        return out

@@ -10,6 +10,7 @@ allocation policy and returns comparable :class:`TraceReport`s.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -122,13 +123,42 @@ class TraceReport:
     def goodput_retention(self) -> Optional[float]:
         """Fault-free sim-time over faulted sim-time for the same trace:
         1.0 means the faults cost nothing; 0.5 means epochs took twice as
-        long end-to-end (stalls + slowdowns + recovery overhead)."""
+        long end-to-end (stalls + slowdowns + recovery overhead).
+
+        NaN-safe by construction: a degenerate twin (zero sim-time on
+        either side — e.g. a trace whose jobs never advanced an epoch)
+        yields a defined value with a warning instead of 0/0 = NaN
+        poisoning downstream sweep aggregation."""
         if self.baseline is None:
             return None
         faulted = self.total_sim_time
+        fault_free = self.baseline.total_sim_time
         if faulted <= 0.0:
-            return None
-        return self.baseline.total_sim_time / faulted
+            if fault_free <= 0.0:
+                warnings.warn(
+                    "goodput_retention: both faulted and fault-free replays "
+                    "accumulated zero sim-time (no epochs advanced?); "
+                    "reporting 1.0 instead of 0/0",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                return 1.0
+            warnings.warn(
+                "goodput_retention: faulted replay accumulated zero sim-time "
+                "while the fault-free twin trained; reporting 0.0",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return 0.0
+        if fault_free <= 0.0:
+            warnings.warn(
+                "goodput_retention: fault-free twin accumulated zero sim-time "
+                "while the faulted replay trained; reporting 0.0",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return 0.0
+        return fault_free / faulted
 
     def summary(self) -> Dict[str, object]:
         """JSON-able one-policy summary (assignment, scores, counters).
@@ -170,6 +200,7 @@ def replay(
     checkpoint_dir: Optional[str] = None,
     faults=None,
     health=None,
+    invariants: bool = False,
 ) -> TraceReport:
     """Replay ``trace`` through a fresh :class:`ClusterRuntime`.
 
@@ -185,7 +216,9 @@ def replay(
     twin of the same replay as ``report.baseline`` so goodput retention is
     measurable.  ``health`` enables/configures the
     :class:`~repro.runtime.health.HealthMonitor` (on by default whenever
-    faults are injected)."""
+    faults are injected).  ``invariants`` enables the debug-mode
+    :class:`~repro.runtime.invariants.RuntimeInvariantChecker` after every
+    reconciled event (chaos CI runs with it on)."""
     if faults is not None:
         baseline = replay(
             trace, n_nodes, policy=policy, engine=engine,
@@ -197,7 +230,7 @@ def replay(
     rt = ClusterRuntime(
         n_nodes, policy=policy, engine=engine, noise=noise, seed=seed,
         real_backend=real_backend, checkpoint_dir=checkpoint_dir,
-        faults=faults, health=health,
+        faults=faults, health=health, invariants=invariants,
     )
     for event in trace:
         rt.post(event)
@@ -225,6 +258,7 @@ def compare_policies(
     checkpoint_dir: Optional[str] = None,
     faults=None,
     health=None,
+    invariants: bool = False,
 ) -> Dict[str, TraceReport]:
     """Replay one trace under several allocation policies (fresh runtime
     each) and return the per-policy reports — baselines and Cannikin
@@ -243,6 +277,7 @@ def compare_policies(
             checkpoint_dir=checkpoint_dir,
             faults=faults,
             health=health,
+            invariants=invariants,
         )
         for name in policies
     }

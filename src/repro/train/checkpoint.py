@@ -5,13 +5,25 @@ adequate for host-side checkpoints.  Arrays are gathered to host (works for
 sharded arrays via np.asarray on addressable data in single-process runs).
 bfloat16 has no numpy dtype — such leaves round-trip via a float32 view with
 a dtype tag.
+
+Integrity layer (PR 7): every checkpoint embeds a sha256 digest over its
+canonicalized payload (sorted key / dtype / shape / raw bytes — the archive
+container itself cannot be self-checksummed) plus a monotone generation
+counter.  :func:`restore` verifies the digest and raises
+:class:`CheckpointCorruptError` on mismatch; :class:`CheckpointManager`
+keeps the last ``keep`` generations per job
+(``<dir>/<name>.gen<NNNNNN>.ckpt.npz``) and rolls back to the newest valid
+generation when the head is corrupt — the recovery path behind the
+runtime's preemption/resume under ``CheckpointCorruption`` faults.
+Checkpoints written by earlier releases (no digest) still restore.
 """
 from __future__ import annotations
 
-import io
+import hashlib
 import json
 import os
-from typing import Any, Dict
+import re
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,9 +31,24 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["save", "restore", "LocalIO"]
+__all__ = [
+    "save",
+    "restore",
+    "LocalIO",
+    "CheckpointCorruptError",
+    "verify_checkpoint",
+    "checkpoint_generation",
+    "CheckpointManager",
+]
 
 _DTYPE_TAG = "__dtypes__"
+_CHECKSUM_TAG = "__sha256__"
+_GENERATION_TAG = "__generation__"
+
+
+class CheckpointCorruptError(ValueError):
+    """The checkpoint's payload does not match its embedded sha256 digest
+    (or the archive is unreadable where a digest was expected)."""
 
 
 class LocalIO:
@@ -52,12 +79,39 @@ def _key(path) -> str:
     return "/".join(parts)
 
 
-def save(path: str, tree: PyTree, *, io: Any = None) -> None:
+def _payload_digest(flat: Dict[str, np.ndarray]) -> str:
+    """sha256 over the canonicalized payload: sorted key, dtype, shape, raw
+    bytes.  Self-contained (the digest entry itself is excluded by callers),
+    so verification needs nothing beyond the archive."""
+    h = hashlib.sha256()
+    for k in sorted(flat):
+        arr = np.ascontiguousarray(flat[k])
+        h.update(k.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _digest_array(digest: str) -> np.ndarray:
+    return np.frombuffer(digest.encode(), dtype=np.uint8)
+
+
+def save(
+    path: str,
+    tree: PyTree,
+    *,
+    io: Any = None,
+    generation: Optional[int] = None,
+) -> None:
     """Atomically write ``tree`` to ``path``.
 
     The payload lands in ``<path>.tmp`` first and is renamed over ``path``
     only once fully written, so a crash (or injected failure) mid-write can
     never leave a truncated archive where a valid previous checkpoint was.
+    A sha256 digest over the canonical payload is embedded for load-time
+    verification; ``generation`` (when given) stamps the monotone
+    generation counter the :class:`CheckpointManager` rolls back across.
     """
     if io is None:
         io = LocalIO()
@@ -70,13 +124,19 @@ def save(path: str, tree: PyTree, *, io: Any = None) -> None:
             dtypes[k] = "bfloat16"
             arr = arr.astype(np.float32)
         flat[k] = arr
+    flat[_DTYPE_TAG] = np.frombuffer(
+        json.dumps(dtypes).encode(), dtype=np.uint8
+    )
+    if generation is not None:
+        flat[_GENERATION_TAG] = np.int64(generation)
+    flat[_CHECKSUM_TAG] = _digest_array(_payload_digest(
+        {k: v for k, v in flat.items() if k != _CHECKSUM_TAG}
+    ))
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     tmp = f"{path}.tmp"
     try:
         with io.open(tmp, "wb") as f:
-            np.savez(f, **flat, **{_DTYPE_TAG: np.frombuffer(
-                json.dumps(dtypes).encode(), dtype=np.uint8
-            )})
+            np.savez(f, **flat)
         io.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
@@ -86,9 +146,52 @@ def save(path: str, tree: PyTree, *, io: Any = None) -> None:
                 pass
 
 
+def _verify_open(data) -> None:
+    """Raise :class:`CheckpointCorruptError` when the open archive's payload
+    does not match its embedded digest.  Archives without a digest (earlier
+    releases) are accepted as-is."""
+    if _CHECKSUM_TAG not in data.files:
+        return
+    stored = bytes(data[_CHECKSUM_TAG]).decode()
+    flat = {k: data[k] for k in data.files if k != _CHECKSUM_TAG}
+    actual = _payload_digest(flat)
+    if actual != stored:
+        raise CheckpointCorruptError(
+            f"checkpoint payload digest mismatch: stored {stored[:12]}…, "
+            f"computed {actual[:12]}…"
+        )
+
+
+def verify_checkpoint(path: str) -> bool:
+    """True iff ``path`` is a readable checkpoint whose payload matches its
+    embedded sha256 digest (archives without a digest pass, matching
+    :func:`restore`'s backward compatibility)."""
+    try:
+        with np.load(path) as data:
+            _verify_open(data)
+        return True
+    except Exception:
+        return False
+
+
+def checkpoint_generation(path: str) -> Optional[int]:
+    """The generation counter stamped into ``path`` (None if unstamped or
+    unreadable)."""
+    try:
+        with np.load(path) as data:
+            if _GENERATION_TAG in data.files:
+                return int(data[_GENERATION_TAG])
+    except Exception:
+        return None
+    return None
+
+
 def restore(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (shapes validated)."""
+    """Restore into the structure of ``like`` (shapes validated, payload
+    digest verified when present — :class:`CheckpointCorruptError` on
+    mismatch)."""
     with np.load(path) as data:
+        _verify_open(data)
         dtypes: Dict[str, str] = {}
         if _DTYPE_TAG in data:
             dtypes = json.loads(bytes(data[_DTYPE_TAG]).decode())
@@ -114,3 +217,104 @@ def restore(path: str, like: PyTree) -> PyTree:
             leaves.append(jnp.asarray(arr) if isinstance(leaf, jax.Array) else arr)
         treedef = jax.tree_util.tree_structure(like)
         return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Checksummed, versioned checkpoint generations with rollback.
+
+    On-disk layout: ``<directory>/<name>.gen<NNNNNN>.ckpt.npz`` where
+    ``NNNNNN`` is the zero-padded monotone generation counter (also stamped
+    inside the archive).  ``save`` writes generation ``latest + 1`` and
+    prunes to the newest ``keep`` generations; ``restore`` walks newest →
+    oldest past corrupt/unreadable heads (each skip counted in
+    ``rollbacks`` and recorded in ``corrupt_generations``) and raises
+    :class:`CheckpointCorruptError` only when *no* generation verifies.
+    The generation scan is on-disk state, so a fresh manager in a new
+    process resumes the same sequence.
+    """
+
+    _GEN_RE = re.compile(r"\.gen(\d{6})\.ckpt\.npz$")
+
+    def __init__(
+        self,
+        directory: str,
+        name: str,
+        *,
+        keep: int = 3,
+        io: Any = None,
+    ) -> None:
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
+        self.directory = directory
+        self.name = name
+        self.keep = int(keep)
+        self.io = io
+        self.rollbacks = 0
+        self.corrupt_generations: List[str] = []
+
+    def _gen_path(self, gen: int) -> str:
+        return os.path.join(self.directory, f"{self.name}.gen{gen:06d}.ckpt.npz")
+
+    def generations(self) -> List[Tuple[int, str]]:
+        """(generation, path) pairs on disk, ascending."""
+        out: List[Tuple[int, str]] = []
+        prefix = f"{self.name}.gen"
+        try:
+            entries = os.listdir(self.directory)
+        except OSError:
+            return out
+        for fname in entries:
+            if not fname.startswith(prefix):
+                continue
+            m = self._GEN_RE.search(fname)
+            if m:
+                out.append((int(m.group(1)), os.path.join(self.directory, fname)))
+        return sorted(out)
+
+    @property
+    def latest_generation(self) -> int:
+        gens = self.generations()
+        return gens[-1][0] if gens else 0
+
+    @property
+    def latest_path(self) -> Optional[str]:
+        gens = self.generations()
+        return gens[-1][1] if gens else None
+
+    def save(self, tree: PyTree, *, io: Any = None) -> str:
+        """Write the next generation (atomic, checksummed) and prune to the
+        retention bound.  A failed write leaves no file, so the counter
+        does not advance — retries land on the same generation."""
+        os.makedirs(self.directory, exist_ok=True)
+        gen = self.latest_generation + 1
+        path = self._gen_path(gen)
+        save(path, tree, io=io if io is not None else self.io, generation=gen)
+        self._prune()
+        return path
+
+    def _prune(self) -> None:
+        gens = self.generations()
+        for _, path in gens[: max(len(gens) - self.keep, 0)]:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+
+    def restore(self, like: PyTree) -> Tuple[PyTree, int, str]:
+        """Restore the newest generation that verifies, rolling back past
+        corrupt heads.  Returns ``(tree, generation, path)``."""
+        gens = self.generations()
+        for gen, path in reversed(gens):
+            try:
+                tree = restore(path, like)
+            except Exception:
+                # Digest mismatch, unreadable zip, missing/mismatched
+                # leaves: all mean "this generation cannot be trusted".
+                self.rollbacks += 1
+                self.corrupt_generations.append(path)
+                continue
+            return tree, gen, path
+        raise CheckpointCorruptError(
+            f"no valid checkpoint generation for {self.name!r} "
+            f"in {self.directory} ({len(gens)} on disk, all corrupt)"
+        )

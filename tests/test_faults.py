@@ -265,7 +265,9 @@ def test_no_faults_health_enabled_is_observation_only():
     faults = s_mon.pop("faults")
     assert s_mon == s_plain
     assert mon.runtime.health.detections == []
-    assert faults["detected"] == {"crash": 0, "quarantine": 0, "drift": 0}
+    assert faults["detected"] == {
+        "crash": 0, "quarantine": 0, "drift": 0, "numeric": 0,
+    }
 
 
 # ---------------------------------------------------------------------------
