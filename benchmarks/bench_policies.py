@@ -1,0 +1,160 @@
+"""Batch-size-policy lane: the registered policy zoo on one trace.
+
+    PYTHONPATH=src:. python -m benchmarks.bench_policies [--smoke]
+
+Two gates on the standard 3-job synthetic trace:
+
+* **Bit-for-bit refactor gate** — a replay with every job stamped
+  ``batch_policy="cannikin-gns"`` must match the legacy (unstamped) replay
+  exactly: aggregate goodput, per-job epoch counts, per-job sim clocks,
+  and the runtime's solver/cache counters.  The BatchSizePolicy protocol
+  is a seam, not a behaviour change.
+* **Adaptivity gate** — the schedule-driven dampers must actually move the
+  total batch on the gradient-free sim backend (the point of the policy
+  zoo): geodamp's mean total batch strictly above the fixed policy's
+  starting batch... and every registered policy must produce a ranked row.
+
+Then the lane times one ``compare_policies(batch_policies=all)`` sweep and
+emits one row per policy with its goodput decomposition (sample
+throughput × statistical efficiency).  Results merge into
+``artifacts/bench/sweep.json`` under the ``"policies"`` key.
+"""
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import ARTIFACTS, Row, save_json
+
+from repro.core.batch_policy import BATCH_POLICIES
+from repro.runtime import (
+    compare_policies,
+    rank_batch_policies,
+    replay,
+    synthetic_trace,
+)
+
+N_JOBS, N_NODES, SEED = 3, 12, 0
+EPOCHS_PER_EVENT, STEPS, NOISE = 2, 2, 0.01
+
+
+def _trace():
+    return synthetic_trace(N_JOBS, N_NODES, seed=SEED)[0]
+
+
+def _replay(batch_policy=None):
+    return replay(
+        _trace(), N_NODES, policy="cannikin", epochs_per_event=EPOCHS_PER_EVENT,
+        steps=STEPS, noise=NOISE, seed=SEED, batch_policy=batch_policy,
+    )
+
+
+def _fingerprint(rep):
+    handles = rep.runtime.handles
+    return {
+        "aggregate_goodput": rep.aggregate_goodput,
+        "aggregate_fraction": rep.aggregate_fraction,
+        "epochs": rep.epochs,
+        "sim_times": {name: h.sim_time for name, h in handles.items()},
+        "counters": rep.runtime.counters(),
+    }
+
+
+def run(smoke: bool = False):
+    rows = []
+
+    # Gate 1: cannikin-gns through the protocol == the pre-refactor path,
+    # bit for bit (plans, clocks, counters).  Deterministic, so it holds
+    # in smoke runs too.
+    del smoke
+    t0 = time.perf_counter()
+    legacy = _replay()
+    legacy_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    gns = _replay(batch_policy="cannikin-gns")
+    gns_s = time.perf_counter() - t0
+    fp_legacy, fp_gns = _fingerprint(legacy), _fingerprint(gns)
+    assert fp_legacy == fp_gns, (
+        f"cannikin-gns diverged from the pre-refactor path:\n"
+        f"legacy={fp_legacy}\nprotocol={fp_gns}"
+    )
+    rows.append(
+        Row(
+            f"policies/bitexact_gate/j{N_JOBS}xn{N_NODES}",
+            gns_s * 1e6,
+            f"agg_goodput={fp_gns['aggregate_goodput']:.6f};identical=1",
+        )
+    )
+
+    # Policy sweep: every registered law on the same trace ----------------
+    t0 = time.perf_counter()
+    reports = compare_policies(
+        _trace(), N_NODES, batch_policies=(), epochs_per_event=EPOCHS_PER_EVENT,
+        steps=STEPS, noise=NOISE, seed=SEED,
+    )
+    sweep_s = time.perf_counter() - t0
+    ranking = rank_batch_policies(reports)
+    assert len(ranking) >= 4, f"only {len(ranking)} policies ranked"
+    assert len(ranking) == len(BATCH_POLICIES)
+    by_name = {row["batch_policy"]: row for row in ranking}
+
+    # Gate 2: adaptivity is live on the sim backend — the geometric damper
+    # moved the total batch above its fixed starting point.
+    assert (
+        by_name["geodamp"]["mean_total_batch"]
+        > by_name["adadamp"]["mean_total_batch"]
+    ), "geodamp never ramped on the sim backend"
+
+    per_policy = sweep_s / max(1, len(ranking))
+    for rank, row in enumerate(ranking, start=1):
+        rows.append(
+            Row(
+                f"policies/{row['batch_policy']}/j{N_JOBS}xn{N_NODES}",
+                per_policy * 1e6,
+                f"rank={rank};goodput={row['policy_goodput']:.1f};"
+                f"eff={row['statistical_efficiency']:.3f};"
+                f"meanB={row['mean_total_batch']:.1f}",
+            )
+        )
+
+    record = {
+        "n_jobs": N_JOBS,
+        "n_nodes": N_NODES,
+        "seed": SEED,
+        "epochs_per_event": EPOCHS_PER_EVENT,
+        "bitexact_gate": {
+            "aggregate_goodput": fp_gns["aggregate_goodput"],
+            "legacy_replay_s": legacy_s,
+            "protocol_replay_s": gns_s,
+            "identical": True,
+        },
+        "ranking": ranking,
+        "sweep_s": sweep_s,
+    }
+
+    # Merge into the sweep artifact (keep every other lane's record).
+    sweep_path = os.path.join(ARTIFACTS, "bench", "sweep.json")
+    payload = {}
+    if os.path.exists(sweep_path):
+        try:
+            with open(sweep_path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload["policies"] = record
+    save_json("sweep", payload)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for lane-runner symmetry (already CI-sized)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

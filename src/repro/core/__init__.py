@@ -8,6 +8,9 @@ Modules:
   gns          — §4.4 heterogeneous gradient-noise-scale (Theorem 4.1)
   aggregation  — §4.3 weighted gradient aggregation (Eq. 9)
   goodput      — Pollux-style goodput + batch-size selection with caching
+  batch_policy — pluggable total-batch adaptation laws (cannikin-gns,
+                 adadamp/padadamp/geodamp dampers, fixed) behind one
+                 registry + protocol
   simulator    — §3.2-exact heterogeneous cluster timing simulator
   controller   — §4.1/§4.5 Cannikin epoch controller
   scheduler    — beyond-paper multi-job heterogeneity-aware allocator
@@ -20,6 +23,17 @@ The event-driven front door over these pieces — ClusterRuntime, JobHandle,
 allocation policies, trace replay — lives in :mod:`repro.runtime`.
 """
 from repro.core.aggregation import ratios, sample_weights, weighted_aggregate
+from repro.core.batch_policy import (
+    BATCH_POLICIES,
+    BatchBounds,
+    BatchProposal,
+    BatchSizePolicy,
+    PolicyTelemetry,
+    lr_scale_for,
+    make_batch_policy,
+    policy_requirements,
+    register_batch_policy,
+)
 from repro.core.controller import CannikinController, EpochPlan
 from repro.core.gns import GNSState, estimate_gns, gns_update, gns_weights
 from repro.core.goodput import (
@@ -70,6 +84,15 @@ from repro.core.simulator import (
 __all__ = [
     "CannikinController",
     "EpochPlan",
+    "BATCH_POLICIES",
+    "BatchBounds",
+    "BatchProposal",
+    "BatchSizePolicy",
+    "PolicyTelemetry",
+    "lr_scale_for",
+    "make_batch_policy",
+    "policy_requirements",
+    "register_batch_policy",
     "ClusterPerfModel",
     "CommModel",
     "NodePerfModel",

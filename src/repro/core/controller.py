@@ -22,10 +22,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.batch_policy import (
+    BatchBounds,
+    BatchSizePolicy,
+    PolicyTelemetry,
+    make_batch_policy,
+)
 from repro.core.gns import GNSState, estimate_gns, gns_update, gns_weights
 from repro.core.goodput import BatchSizeSelector, adascale_gain, sqrt_lr_scale
 from repro.core.optperf import OptPerfSolution, round_batches, solve_optperf
@@ -53,6 +59,9 @@ class EpochPlan:
     predicted_batch_time: Optional[float]  # None during bootstrap
     phase: str                             # "bootstrap" | "optperf"
     solution: Optional[OptPerfSolution] = None
+    # Provenance: which BatchSizePolicy proposed this total batch (None for
+    # bootstrap plans — no policy is consulted before a model exists).
+    batch_policy: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -95,6 +104,14 @@ class CannikinController:
         previous epoch's brackets are still trusted as warm seeds; larger
         drift (a regime change) falls back to cold brackets.
       min_local / max_local: per-node local batch bounds (memory limits, §6).
+      batch_policy: name of a registered :mod:`repro.core.batch_policy`
+        law (or a ready :class:`BatchSizePolicy` instance) deciding the
+        total batch each epoch.  ``None`` keeps the historical behaviour:
+        ``cannikin-gns`` when ``adaptive``, else ``fixed`` — both
+        bit-identical to the pre-protocol controller.  ``adaptive=False``
+        always forces ``fixed`` (the §5.2.2 evaluation mode wins).
+      policy_kwargs: extra keyword arguments for the named policy's
+        constructor (e.g. ``{"factor": 2.0, "delay": 4}`` for geodamp).
     """
 
     name = "cannikin"
@@ -113,6 +130,8 @@ class CannikinController:
         gns_decay: float = 0.9,
         min_local: int = 1,
         max_local: Optional[int] = None,
+        batch_policy: Union[str, BatchSizePolicy, None] = None,
+        policy_kwargs: Optional[Dict] = None,
     ) -> None:
         self.n = n_nodes
         self.ref_batch = int(ref_batch)
@@ -137,6 +156,29 @@ class CannikinController:
         self._epoch = 0
         self._last_plan: Optional[EpochPlan] = None
         self._model: Optional[ClusterPerfModel] = None
+        self._last_loss = float("nan")
+        if batch_policy is None or isinstance(batch_policy, str):
+            if not adaptive:
+                chosen = "fixed"
+            elif batch_policy is None:
+                chosen = "cannikin-gns"
+            else:
+                chosen = batch_policy
+            kwargs = dict(policy_kwargs or {})
+            if chosen in ("cannikin-gns", "fixed"):
+                # These two reproduce the historical controller paths, where
+                # the LR rule was the controller's own knob; dampers pin
+                # their own rule unless policy_kwargs overrides it.
+                kwargs.setdefault("lr_rule", lr_rule)
+            self.policy: BatchSizePolicy = make_batch_policy(
+                chosen,
+                candidates=self.selector.candidates,
+                ref_batch=self.ref_batch,
+                selector=self.selector,
+                **kwargs,
+            )
+        else:
+            self.policy = batch_policy
 
     # ------------------------------------------------------------------
     # measurement ingestion
@@ -197,6 +239,8 @@ class CannikinController:
             if valid and not all(valid):
                 continue
             self.observe_gradients(obs.local_sqnorms, obs.global_sqnorm, obs.batches)
+        loss = getattr(result, "mean_loss", None)
+        self._last_loss = float(loss) if loss is not None else float("nan")
         self.observe_epoch(result.measurements)
 
     # ------------------------------------------------------------------
@@ -279,6 +323,13 @@ class CannikinController:
     # planning
     # ------------------------------------------------------------------
 
+    @property
+    def batch_bounds(self) -> BatchBounds:
+        """Total-batch bounds the policy must stay within: the span of the
+        candidate grid, always widened to include the reference batch."""
+        grid = set(self.selector.candidates) | {self.ref_batch}
+        return BatchBounds(min_total=min(grid), max_total=max(grid))
+
     def _apply_bounds(self, batches: List[int], total: int) -> List[int]:
         """Clamp local batches to [min_local, max_local] preserving the sum."""
         lo = self.min_local
@@ -298,11 +349,32 @@ class CannikinController:
         return [int(x) for x in b]
 
     def plan_epoch(self) -> EpochPlan:
-        """Produce the next epoch's configuration."""
+        """Produce the next epoch's configuration.
+
+        The total-batch decision is delegated to ``self.policy`` (the
+        :class:`BatchSizePolicy` seam): every planning round first feeds
+        the policy one :class:`PolicyTelemetry` observation (previous
+        epoch's plan, latest mean loss, current GNS estimate), then — once
+        a performance model exists — asks it to ``propose`` the next total
+        batch and LR scale.  Splitting the total across nodes stays the
+        controller's job: OptPerf solve (reusing the policy's solution if
+        it already ran the sweep), Eq.-(9) rounding, local-bound clamping.
+        """
         t0 = time.perf_counter()
         epoch = self._epoch
         self._epoch += 1
         self.stats.epochs_planned += 1
+
+        last = self._last_plan
+        self.policy.observe(
+            PolicyTelemetry(
+                epoch=epoch,
+                total_batch=last.total_batch if last is not None else 0,
+                mean_loss=self._last_loss,
+                b_noise=self.gns.b_noise,
+                phase=last.phase if last is not None else "",
+            )
+        )
 
         model = None
         if self.can_model():
@@ -317,26 +389,23 @@ class CannikinController:
         if model is None:
             plan = self._bootstrap_plan(epoch)
         else:
-            if self.adaptive:
-                best_b, sol, _ = self.selector.select(model, self.gns.b_noise)
-            else:
-                best_b = self.ref_batch
+            proposal = self.policy.propose(model, self.batch_bounds)
+            best_b = int(proposal.total_batch)
+            sol = proposal.solution
+            if sol is None:
                 sol = solve_optperf(model, best_b, method=self.solver)
             batches = self._apply_bounds(
                 round_batches(list(sol.batches), best_b), best_b
             )
-            if self.lr_rule == "adascale":
-                lr_scale = adascale_gain(self.gns.b_noise, best_b, self.ref_batch)
-            else:
-                lr_scale = sqrt_lr_scale(best_b, self.ref_batch)
             plan = EpochPlan(
                 epoch=epoch,
                 total_batch=best_b,
                 batches=tuple(batches),
-                lr_scale=lr_scale,
+                lr_scale=float(proposal.lr_scale),
                 predicted_batch_time=sol.opt_perf,
                 phase="optperf",
                 solution=sol,
+                batch_policy=self.policy.name,
             )
         self.stats.overhead_seconds += time.perf_counter() - t0
         self.stats.full_sweeps = self.selector.full_sweeps
@@ -403,6 +472,7 @@ class CannikinController:
         # Cluster membership changed: cached solutions AND the warm-start
         # bracket state are both stale.
         self.selector.invalidate()
+        self._invalidate_policy()
 
     def add_nodes(self, count: int = 1) -> None:
         """Add fresh nodes: their models are unknown, so the controller
@@ -416,6 +486,15 @@ class CannikinController:
         self._evict_device_export()
         self._model = None
         self.selector.invalidate()
+        self._invalidate_policy()
+
+    def _invalidate_policy(self) -> None:
+        """Tell the policy its cached cluster view is stale (cannikin-gns
+        shares the controller's selector, whose caches were just dropped;
+        a policy with its own caches hooks ``invalidate``)."""
+        invalidate = getattr(self.policy, "invalidate", None)
+        if invalidate is not None:
+            invalidate()
 
     @property
     def last_plan(self) -> Optional[EpochPlan]:

@@ -91,7 +91,10 @@ class JobSpec:
     communication model.  ``backend`` names the execution engine the runtime
     drives the job's epochs through (``"sim"`` — timing simulator only, or
     ``"real"`` — real JAX gradients via
-    :class:`~repro.runtime.backend.RealBackend`).
+    :class:`~repro.runtime.backend.RealBackend`).  ``batch_policy`` names a
+    registered :mod:`repro.core.batch_policy` adaptation law for the job's
+    controller (``None`` keeps the historical per-backend default: GNS-driven
+    adaptive on ``"real"``, fixed-batch on ``"sim"``).
     """
 
     name: str
@@ -102,6 +105,7 @@ class JobSpec:
     ref_batch: int
     min_nodes: int = 1
     backend: str = "sim"
+    batch_policy: Optional[str] = None
 
     @functools.cached_property
     def full_model(self) -> ClusterPerfModel:

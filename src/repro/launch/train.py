@@ -60,6 +60,25 @@ def make_policy(name: str, n_nodes: int, *, candidates, ref_batch: int, adaptive
     )
 
 
+def hetero_adaptive(backend: str, fixed_batch: bool, batch_policy: Optional[str]) -> bool:
+    """Whether a hetero run's controller adapts its total batch.
+
+    GNS-driven selection (the default law, or any policy with ``"gns"`` in
+    its requirements) needs gradient telemetry: under ``--backend sim`` the
+    tracker would sit at b_noise=inf and "adaptive" selection would
+    escalate the total batch on throughput alone, so those stay forced to
+    fixed-batch.  Schedule-driven policies (geodamp/padadamp/adadamp) need
+    no gradients and run adaptively on either backend.
+    """
+    from repro.core.batch_policy import policy_requirements
+
+    if fixed_batch:
+        return False
+    if backend == "real":
+        return True
+    return batch_policy is not None and "gns" not in policy_requirements(batch_policy)
+
+
 def run_hetero(args) -> int:
     from repro.core.simulator import SimulatedCluster, cluster_A, cluster_B, cluster_C
     from repro.runtime import EpochLoop, SimBackend, make_partition_policy
@@ -74,11 +93,8 @@ def run_hetero(args) -> int:
         sim.n,
         candidates=candidates,
         ref_batch=args.ref_batch,
-        # The sim backend produces no gradients, so the GNS tracker would
-        # sit at b_noise=inf and "adaptive" selection would escalate the
-        # total batch on throughput alone — force the fixed-batch mode the
-        # runtime's own sim-backend controllers use.
-        adaptive=not args.fixed_batch and args.backend == "real",
+        adaptive=hetero_adaptive(args.backend, args.fixed_batch, args.batch_policy),
+        batch_policy=args.batch_policy,
     )
     if args.backend == "real":
         from repro.configs import get_api
@@ -156,12 +172,21 @@ def run_trace(args) -> int:
     from repro.runtime import (
         RealBackendConfig,
         compare_policies,
+        format_batch_policy_summary,
         format_summary,
         make_fault_plan,
         synthetic_trace,
     )
 
     real = args.backend == "real"
+    # --batch-policy switches the comparison axis: one allocation policy,
+    # one replay per batch-size adaptation law ("all" = whole registry).
+    if args.batch_policy is None:
+        batch_policies = None
+    elif args.batch_policy == "all":
+        batch_policies = ()
+    else:
+        batch_policies = (args.batch_policy,)
     trace, jobs = synthetic_trace(
         args.trace_jobs,
         args.trace_nodes,
@@ -190,6 +215,7 @@ def run_trace(args) -> int:
         checkpoint_dir=args.checkpoint_dir,
         faults=faults,
         invariants=args.invariants,
+        batch_policies=batch_policies,
     )
     print(f"# trace: {len(trace)} events, jobs={[j.name for j in jobs]}, "
           f"nodes={args.trace_nodes}")
@@ -207,7 +233,10 @@ def run_trace(args) -> int:
                 note += f" invariant_violations={inv.get('violations', 0)}"
             print(f"# {name}: detected={telemetry['detected']} "
                   f"recoveries={telemetry['recoveries']}{note}")
-    print(format_summary(reports))
+    if batch_policies is not None:
+        print(format_batch_policy_summary(reports))
+    else:
+        print(format_summary(reports))
     if args.out:
         with open(args.out, "w") as f:
             json.dump({name: rep.summary() for name, rep in reports.items()},
@@ -232,6 +261,13 @@ def main() -> int:
     ap.add_argument("--noise", type=float, default=0.01)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fixed-batch", action="store_true")
+    ap.add_argument("--batch-policy", default=None,
+                    help="total-batch adaptation law from the "
+                         "repro.core.batch_policy registry (cannikin-gns, "
+                         "adadamp, padadamp, geodamp, fixed); in trace mode "
+                         "'all' compares every registered policy on one "
+                         "trace; default keeps the historical per-backend "
+                         "behaviour")
     ap.add_argument("--target-loss", type=float, default=None)
     ap.add_argument("--out", default=None)
     ap.add_argument("--backend", default=None, choices=["sim", "real"],
@@ -255,6 +291,14 @@ def main() -> int:
     args = ap.parse_args()
     if args.backend is None:
         args.backend = "real" if args.mode == "hetero" else "sim"
+    if args.batch_policy not in (None, "all"):
+        from repro.core.batch_policy import BATCH_POLICIES
+
+        if args.batch_policy not in BATCH_POLICIES:
+            ap.error(
+                f"--batch-policy {args.batch_policy!r} is not registered "
+                f"(choose from {sorted(BATCH_POLICIES)} or 'all')"
+            )
     if args.mode == "hetero":
         return run_hetero(args)
     if args.mode == "trace":

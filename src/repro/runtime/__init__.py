@@ -126,7 +126,9 @@ from repro.runtime.trace import (
     Trace,
     TraceReport,
     compare_policies,
+    format_batch_policy_summary,
     format_summary,
+    rank_batch_policies,
     replay,
     synthetic_trace,
 )
@@ -171,6 +173,8 @@ __all__ = [
     "compare_policies",
     "synthetic_trace",
     "format_summary",
+    "rank_batch_policies",
+    "format_batch_policy_summary",
     "FAULT_PLANS",
     "FaultPlan",
     "FaultInjector",

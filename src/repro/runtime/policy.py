@@ -30,7 +30,7 @@ Two distinct policy kinds live here:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Protocol, Sequence, Set, Tuple, runtime_checkable
+from typing import Dict, List, Optional, Protocol, Sequence, Set, Tuple, runtime_checkable
 
 from repro.core.scheduler import Allocation, JobSpec, Scheduler
 
@@ -330,6 +330,7 @@ def make_partition_policy(
     ref_batch: int,
     adaptive: bool = True,
     sweep_engine: str = "batched",
+    batch_policy: Optional[str] = None,
 ):
     """Build a batch-*partition* policy: how one job splits its global batch
     across its nodes each epoch.
@@ -337,6 +338,8 @@ def make_partition_policy(
     ``cannikin`` returns a :class:`~repro.core.controller.CannikinController`
     (OptPerf partition + optional adaptive total batch); ``even``/``ddp``/
     ``adaptdl`` the uniform split; ``lb-bsp`` the iterative Δ=5 tuner.
+    ``batch_policy`` selects the controller's total-batch adaptation law
+    from the :mod:`repro.core.batch_policy` registry (cannikin only).
     This is the single factory behind ``launch/train.py`` and the
     convergence/adaptation benchmarks.
     """
@@ -350,6 +353,7 @@ def make_partition_policy(
             ref_batch=ref_batch,
             adaptive=adaptive,
             sweep_engine=sweep_engine,
+            batch_policy=batch_policy,
         )
     if name in ("even", "ddp", "adaptdl"):
         # AdaptDL's per-node split in heterogeneous clusters equals DDP's

@@ -39,6 +39,7 @@ import itertools
 import os
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core.batch_policy import policy_requirements
 from repro.core.controller import CannikinController, ControllerStats, EpochPlan
 from repro.core.scheduler import Allocation, JobSpec
 from repro.core.simulator import drift_model
@@ -186,6 +187,9 @@ class JobHandle:
     # -- reconcile surface (driven by ClusterRuntime) --------------------
 
     def _new_controller(self, n: int) -> CannikinController:
+        policy_name = getattr(self.spec, "batch_policy", None)
+        if policy_name is not None:
+            return self._policy_controller(n, policy_name)
         if self.spec.backend == "real":
             # Real gradients feed the GNS tracker, so total-batch adaptivity
             # is live: the controller sweeps {B, 2B} against the measured
@@ -205,6 +209,42 @@ class JobHandle:
             batch_candidates=[self.spec.total_batch],
             ref_batch=self.spec.total_batch,
             adaptive=False,
+        )
+
+    def _policy_controller(self, n: int, name: str) -> CannikinController:
+        """Build the controller for an explicit ``JobSpec.batch_policy``.
+
+        GNS-driven policies need gradient telemetry, so on a gradient-free
+        backend they collapse to the fixed-batch controller (b_noise would
+        sit at inf and every proposal would degenerate to the reference
+        batch anyway — this is the runtime-level mirror of the launch-layer
+        guard).  Schedule-driven policies (empty ``requires``) run
+        adaptively on *any* backend — the point of the damper family."""
+        total = self.spec.total_batch
+        needs_gns = "gns" in policy_requirements(name)
+        if name == "fixed" or (needs_gns and self.spec.backend != "real"):
+            return CannikinController(
+                n,
+                batch_candidates=[total],
+                ref_batch=total,
+                adaptive=False,
+            )
+        if needs_gns:
+            return CannikinController(
+                n,
+                batch_candidates=sorted({total, 2 * total}),
+                ref_batch=self.spec.ref_batch,
+                adaptive=True,
+                batch_policy=name,
+            )
+        # Gradient-free damper: candidates span the schedule's range so the
+        # controller's bounds let the ramp actually move.
+        return CannikinController(
+            n,
+            batch_candidates=sorted({self.spec.ref_batch, total, 2 * total}),
+            ref_batch=self.spec.ref_batch,
+            adaptive=True,
+            batch_policy=name,
         )
 
     def set_nodes(self, nodes: Sequence[int], *, now: float = 0.0) -> None:
@@ -283,9 +323,38 @@ class JobHandle:
             self._ckpt_manager = CheckpointManager(self._ckpt_dir, self.name)
         return self._ckpt_manager
 
+    def _policy_state(self) -> dict:
+        """The controller's batch-policy checkpoint payload ({} when there
+        is no controller or the policy is stateless — e.g. the fixed policy
+        of legacy sim jobs, whose snapshots must stay byte-identical)."""
+        if self.controller is None:
+            return {}
+        return dict(self.controller.policy.state())
+
+    def _snapshot_template(self) -> dict:
+        """The restore template: the backend's snapshot shape, plus the
+        batch-policy subtree exactly when the live policy would write one —
+        so template and written-checkpoint structure always agree."""
+        template = dict(self.backend.snapshot())
+        pol = self._policy_state()
+        if pol:
+            template["batch_policy"] = pol
+        return template
+
+    def _load_state(self, state: dict) -> None:
+        """Split a restored snapshot between its owners: the batch-policy
+        subtree goes to the controller's policy, everything else to the
+        execution backend."""
+        state = dict(state)
+        pol = state.pop("batch_policy", None)
+        if pol is not None and self.controller is not None:
+            self.controller.policy.load_state(pol)
+        self.backend.load_snapshot(state)
+
     def _restore_backend(self) -> None:
-        """Restore the preemption checkpoint into the backend: from the
-        newest *valid* checkpoint generation when any were written (the
+        """Restore the preemption checkpoint into the backend (and the
+        batch policy, whose adaptation state rides the same snapshot): from
+        the newest *valid* checkpoint generation when any were written (the
         file is the source of truth — in a real cluster the preempted
         process died; a corrupt head generation rolls back to the newest
         one whose sha256 verifies, counted in ``ckpt_rollbacks``), else
@@ -302,29 +371,29 @@ class JobHandle:
 
             before = manager.rollbacks
             try:
-                state, _gen, path = manager.restore(self.backend.snapshot())
+                state, _gen, path = manager.restore(self._snapshot_template())
             except CheckpointCorruptError:
                 # Every generation corrupt: fall back to the in-memory
                 # snapshot (the in-process resume path) if there is one.
                 self.ckpt_rollbacks += manager.rollbacks - before
                 if self._snapshot is not None:
-                    self.backend.load_snapshot(self._snapshot)
+                    self._load_state(self._snapshot)
                     self.ckpt_fallbacks += 1
                     self.restores += 1
                 return
             self.ckpt_rollbacks += manager.rollbacks - before
             self.checkpoint_path = path
-            self.backend.load_snapshot(state)
+            self._load_state(state)
             self.restores += 1
         elif self.checkpoint_path is not None and os.path.exists(self.checkpoint_path):
             from repro.train import checkpoint as ckpt
 
-            self.backend.load_snapshot(
-                ckpt.restore(self.checkpoint_path, self.backend.snapshot())
+            self._load_state(
+                ckpt.restore(self.checkpoint_path, self._snapshot_template())
             )
             self.restores += 1
         elif self._snapshot is not None:
-            self.backend.load_snapshot(self._snapshot)
+            self._load_state(self._snapshot)
             self.restores += 1
 
     def apply_refit(self, spec: JobSpec) -> None:
@@ -344,7 +413,14 @@ class JobHandle:
         # already died).  The preemptions counter still counts every event,
         # matching the reconcile loop's idempotent-event semantics.
         if self.backend is not None and self.state != JobState.PREEMPTED:
-            snap = self.backend.snapshot()
+            snap = dict(self.backend.snapshot())
+            pol = self._policy_state()
+            if pol:
+                # Batch-policy adaptation state (damper counters, loss
+                # anchors, tracked b_noise) rides the same checkpoint as the
+                # backend's statistical state; stateless policies add
+                # nothing, keeping legacy snapshots byte-identical.
+                snap["batch_policy"] = pol
             if snap:
                 self._snapshot = snap
                 manager = self._checkpoint_manager()

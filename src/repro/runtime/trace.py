@@ -10,11 +10,14 @@ allocation policy and returns comparable :class:`TraceReport`s.
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.batch_policy import BATCH_POLICIES
+from repro.core.goodput import statistical_efficiency
 from repro.core.scheduler import JobSpec, random_jobs
 from repro.runtime.backend import RealBackendConfig
 from repro.runtime.events import (
@@ -36,6 +39,8 @@ __all__ = [
     "compare_policies",
     "synthetic_trace",
     "format_summary",
+    "rank_batch_policies",
+    "format_batch_policy_summary",
 ]
 
 
@@ -91,12 +96,19 @@ class TraceReport:
     ``baseline`` (set only by fault-injecting replays) is the fault-free
     twin of the same trace, enabling :attr:`goodput_retention` — the
     cost of the faults plus recovery in retained training throughput.
+
+    ``batch_policy`` (set by batch-policy-stamped replays) names the
+    :mod:`repro.core.batch_policy` law every job ran under; it unlocks the
+    cross-policy metrics — :attr:`sample_throughput`,
+    :attr:`statistical_efficiency` and their product
+    :attr:`policy_goodput` — that :func:`rank_batch_policies` sorts on.
     """
 
     policy: str
     records: List[ReconcileRecord]
     runtime: ClusterRuntime
     baseline: Optional["TraceReport"] = None
+    batch_policy: Optional[str] = None
 
     @property
     def aggregate_goodput(self) -> float:
@@ -118,6 +130,58 @@ class TraceReport:
     def total_sim_time(self) -> float:
         """Simulated seconds of training across all jobs."""
         return sum(h.sim_time for h in self.runtime.handles.values())
+
+    # -- batch-policy comparison metrics --------------------------------
+
+    def _epoch_records(self):
+        for handle in self.runtime.handles.values():
+            for rec in handle.records:
+                yield handle, rec
+
+    @property
+    def mean_total_batch(self) -> float:
+        """Mean planned total batch over every executed epoch — shows
+        whether (and how far) an adaptive policy actually moved the batch."""
+        totals = [rec.total_batch for _, rec in self._epoch_records()]
+        return float(np.mean(totals)) if totals else 0.0
+
+    @property
+    def sample_throughput(self) -> float:
+        """Training samples processed per simulated second, across jobs:
+        Σ (total_batch × steps_in_epoch) / total sim time."""
+        samples = 0.0
+        for _, rec in self._epoch_records():
+            if rec.measured_batch_time > 0:
+                steps = round(rec.epoch_seconds / rec.measured_batch_time)
+                samples += rec.total_batch * steps
+        sim_time = self.total_sim_time
+        return float(samples / sim_time) if sim_time > 0 else 0.0
+
+    @property
+    def statistical_efficiency(self) -> float:
+        """Mean per-epoch statistical efficiency E(B) (Pollux/§2 — how much
+        of each sample's gradient signal the batch size preserves), using
+        the epoch's measured gradient-noise scale when the backend tracked
+        one and the spec's prior ``b_noise`` otherwise (sim traces), so the
+        metric ranks policies on both backends."""
+        effs = []
+        for handle, rec in self._epoch_records():
+            b_noise = rec.b_noise if math.isfinite(rec.b_noise) else handle.spec.b_noise
+            effs.append(
+                float(
+                    statistical_efficiency(
+                        b_noise, rec.total_batch, handle.spec.ref_batch
+                    )
+                )
+            )
+        return float(np.mean(effs)) if effs else 0.0
+
+    @property
+    def policy_goodput(self) -> float:
+        """The paper's goodput decomposition applied to the whole replay:
+        sample throughput × statistical efficiency — the scalar
+        :func:`rank_batch_policies` orders policies by."""
+        return self.sample_throughput * self.statistical_efficiency
 
     @property
     def goodput_retention(self) -> Optional[float]:
@@ -183,7 +247,30 @@ class TraceReport:
             telemetry["total_sim_time"] = self.total_sim_time
             telemetry["recovery_log"] = [dict(r) for r in self.runtime.recovery_log]
             out["faults"] = telemetry
+        if self.batch_policy is not None:
+            # Batch-policy metrics appear only on stamped replays, so
+            # golden-path summaries stay byte-identical to earlier releases.
+            out["batch_policy"] = self.batch_policy
+            out["sample_throughput"] = self.sample_throughput
+            out["statistical_efficiency"] = self.statistical_efficiency
+            out["policy_goodput"] = self.policy_goodput
+            out["mean_total_batch"] = self.mean_total_batch
         return out
+
+
+def _stamp_batch_policy(trace: Trace, name: str) -> Trace:
+    """A copy of ``trace`` whose every arriving job runs under the named
+    batch policy (the same stamping idiom :func:`synthetic_trace` uses for
+    backends — events are immutable, so the original trace is untouched)."""
+    events: List[Event] = []
+    for event in trace:
+        spec = getattr(event, "spec", None)
+        if spec is not None:
+            event = dataclasses.replace(
+                event, spec=dataclasses.replace(spec, batch_policy=name)
+            )
+        events.append(event)
+    return Trace(events)
 
 
 def replay(
@@ -201,6 +288,7 @@ def replay(
     faults=None,
     health=None,
     invariants: bool = False,
+    batch_policy: Optional[str] = None,
 ) -> TraceReport:
     """Replay ``trace`` through a fresh :class:`ClusterRuntime`.
 
@@ -218,12 +306,19 @@ def replay(
     :class:`~repro.runtime.health.HealthMonitor` (on by default whenever
     faults are injected).  ``invariants`` enables the debug-mode
     :class:`~repro.runtime.invariants.RuntimeInvariantChecker` after every
-    reconciled event (chaos CI runs with it on)."""
+    reconciled event (chaos CI runs with it on).
+
+    ``batch_policy`` stamps a :mod:`repro.core.batch_policy` law onto every
+    arriving job (and the fault-free twin) before replaying, and marks the
+    report so its cross-policy metrics activate."""
+    if batch_policy is not None:
+        trace = _stamp_batch_policy(trace, batch_policy)
     if faults is not None:
         baseline = replay(
             trace, n_nodes, policy=policy, engine=engine,
             epochs_per_event=epochs_per_event, steps=steps, noise=noise,
             seed=seed, real_backend=real_backend, checkpoint_dir=None,
+            batch_policy=batch_policy,
         )
     else:
         baseline = None
@@ -241,7 +336,13 @@ def replay(
         if epochs_per_event:
             rt.advance(epochs_per_event, steps=steps)
         records.append(record)
-    return TraceReport(policy=policy, records=records, runtime=rt, baseline=baseline)
+    return TraceReport(
+        policy=policy,
+        records=records,
+        runtime=rt,
+        baseline=baseline,
+        batch_policy=batch_policy,
+    )
 
 
 def compare_policies(
@@ -259,10 +360,42 @@ def compare_policies(
     faults=None,
     health=None,
     invariants: bool = False,
+    batch_policies: Optional[Sequence[str]] = None,
 ) -> Dict[str, TraceReport]:
-    """Replay one trace under several allocation policies (fresh runtime
-    each) and return the per-policy reports — baselines and Cannikin
-    become comparable in one run."""
+    """Replay one trace under several policies (fresh runtime each) and
+    return the per-policy reports.
+
+    Two comparison axes share this entry point:
+
+    * default — one replay per *allocation* policy in ``policies``
+      (baselines and Cannikin become comparable in one run);
+    * ``batch_policies`` given — one replay per *batch-size* policy, all
+      under the first allocation policy in ``policies``; the returned dict
+      is keyed by batch-policy name and each report carries the
+      cross-policy metrics (:func:`rank_batch_policies` consumes it).
+      ``batch_policies=()`` means every registered policy.
+    """
+    if batch_policies is not None:
+        names = tuple(batch_policies) or tuple(sorted(BATCH_POLICIES))
+        return {
+            name: replay(
+                trace,
+                n_nodes,
+                policy=policies[0],
+                engine=engine,
+                epochs_per_event=epochs_per_event,
+                steps=steps,
+                noise=noise,
+                seed=seed,
+                real_backend=real_backend,
+                checkpoint_dir=checkpoint_dir,
+                faults=faults,
+                health=health,
+                invariants=invariants,
+                batch_policy=name,
+            )
+            for name in names
+        }
     return {
         name: replay(
             trace,
@@ -361,6 +494,44 @@ def synthetic_trace(
     if refit:
         trace.refit(jobs[-1].name, at=t, rel=0.2, seed=seed + 1)
     return trace, jobs
+
+
+def rank_batch_policies(reports: Dict[str, TraceReport]) -> List[Dict[str, object]]:
+    """Order :func:`compare_policies(..., batch_policies=...)` output by
+    :attr:`TraceReport.policy_goodput` (descending) into one ranking —
+    goodput *and* its throughput/efficiency decomposition per policy."""
+    rows = []
+    for name, rep in reports.items():
+        rows.append(
+            {
+                "batch_policy": rep.batch_policy or name,
+                "policy_goodput": rep.policy_goodput,
+                "sample_throughput": rep.sample_throughput,
+                "statistical_efficiency": rep.statistical_efficiency,
+                "mean_total_batch": rep.mean_total_batch,
+                "aggregate_goodput": rep.aggregate_goodput,
+                "epochs": int(sum(rep.epochs.values())),
+                "total_sim_time": rep.total_sim_time,
+            }
+        )
+    rows.sort(key=lambda r: r["policy_goodput"], reverse=True)
+    return rows
+
+
+def format_batch_policy_summary(reports: Dict[str, TraceReport]) -> str:
+    """Fixed-width ranking table over the batch-policy comparison axis."""
+    lines = [
+        f"{'batch policy':<14} {'goodput':>10} {'samples/s':>10} "
+        f"{'stat eff':>9} {'mean B':>8} {'epochs':>7}"
+    ]
+    for row in rank_batch_policies(reports):
+        lines.append(
+            f"{row['batch_policy']:<14} {row['policy_goodput']:>10.1f} "
+            f"{row['sample_throughput']:>10.1f} "
+            f"{row['statistical_efficiency']:>9.3f} "
+            f"{row['mean_total_batch']:>8.1f} {row['epochs']:>7}"
+        )
+    return "\n".join(lines)
 
 
 def format_summary(reports: Dict[str, TraceReport]) -> str:

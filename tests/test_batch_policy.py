@@ -1,0 +1,628 @@
+"""BatchSizePolicy protocol: registry, damper laws, LR-rule coupling,
+bit-identity of the cannikin-gns path with the pre-protocol controller,
+per-job policy selection in the runtime, and policy state riding the
+preemption checkpoint path bit-exactly."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.core.batch_policy import (
+    BATCH_POLICIES,
+    BatchBounds,
+    BatchProposal,
+    PolicyTelemetry,
+    lr_scale_for,
+    make_batch_policy,
+    policy_requirements,
+    register_batch_policy,
+)
+from repro.core.controller import CannikinController
+from repro.core.goodput import BatchSizeSelector, adascale_gain, sqrt_lr_scale
+from repro.core.optperf import round_batches
+from repro.core.scheduler import random_jobs
+from repro.core.simulator import SimulatedCluster, cluster_A
+from repro.launch.train import hetero_adaptive
+from repro.runtime import (
+    ClusterRuntime,
+    EpochLoop,
+    JobState,
+    SimBackend,
+    compare_policies,
+    make_partition_policy,
+    rank_batch_policies,
+    replay,
+    synthetic_trace,
+)
+
+
+REGISTERED = ("cannikin-gns", "fixed", "adadamp", "padadamp", "geodamp")
+
+
+def _telemetry(epoch=0, total=64, loss=float("nan"), b_noise=float("inf")):
+    return PolicyTelemetry(
+        epoch=epoch, total_batch=total, mean_loss=loss, b_noise=b_noise
+    )
+
+
+@pytest.fixture(scope="module")
+def perf_model():
+    """A learned ClusterPerfModel to propose against (cannikin-gns needs
+    one for its selector sweep; dampers ignore it)."""
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    return sim.true_model()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_ships_the_policy_zoo():
+    assert set(REGISTERED) <= set(BATCH_POLICIES)
+    assert len(BATCH_POLICIES) >= 4
+
+
+def test_policy_requirements():
+    assert policy_requirements("cannikin-gns") == frozenset({"gns"})
+    assert policy_requirements("adadamp") == frozenset({"loss"})
+    assert policy_requirements("geodamp") == frozenset()
+    assert policy_requirements("padadamp") == frozenset()
+    assert policy_requirements("fixed") == frozenset()
+    with pytest.raises(ValueError):
+        policy_requirements("nope")
+
+
+def test_make_batch_policy_unknown_name():
+    with pytest.raises(ValueError):
+        make_batch_policy("nope", candidates=[64], ref_batch=64)
+
+
+def test_make_batch_policy_rejects_unknown_kwargs():
+    with pytest.raises(TypeError):
+        make_batch_policy("geodamp", candidates=[64], ref_batch=64, bogus=1)
+
+
+def test_make_batch_policy_drops_selector_for_damper():
+    sel = BatchSizeSelector(candidates=(64,), ref_batch=64)
+    pol = make_batch_policy("geodamp", candidates=[64], ref_batch=64, selector=sel)
+    assert pol.name == "geodamp"
+
+
+def test_register_batch_policy_is_the_extension_hook():
+    @register_batch_policy
+    class EchoPolicy:
+        name = "test-echo"
+        requires = frozenset()
+        lr_rule = "none"
+
+        def __init__(self, *, candidates, ref_batch):
+            self.ref_batch = ref_batch
+
+        def observe(self, telemetry):
+            pass
+
+        def propose(self, model, bounds):
+            return BatchProposal(total_batch=self.ref_batch, lr_scale=1.0)
+
+        def state(self):
+            return {}
+
+        def load_state(self, state):
+            pass
+
+    try:
+        pol = make_batch_policy("test-echo", candidates=[32], ref_batch=32)
+        assert pol.propose(None, BatchBounds(32, 32)).total_batch == 32
+    finally:
+        del BATCH_POLICIES["test-echo"]
+
+
+# ---------------------------------------------------------------------------
+# LR-rule coupling (satellite: explicit, per-policy, overridable)
+# ---------------------------------------------------------------------------
+
+
+def test_lr_scale_for_rules():
+    assert lr_scale_for("adascale", batch=128, ref_batch=64) == adascale_gain(
+        float("inf"), 128, 64
+    )
+    assert lr_scale_for(
+        "adascale", batch=128, ref_batch=64, b_noise=100.0
+    ) == adascale_gain(100.0, 128, 64)
+    assert lr_scale_for("sqrt", batch=256, ref_batch=64) == sqrt_lr_scale(256, 64)
+    assert lr_scale_for("linear", batch=128, ref_batch=64) == 2.0
+    assert lr_scale_for("none", batch=4096, ref_batch=64) == 1.0
+    with pytest.raises(ValueError):
+        lr_scale_for("cosine", batch=64, ref_batch=64)
+
+
+def test_each_policy_pins_its_own_lr_rule():
+    defaults = {
+        "cannikin-gns": "adascale",
+        "fixed": "adascale",
+        "adadamp": "none",
+        "padadamp": "sqrt",
+        "geodamp": "linear",
+    }
+    for name, rule in defaults.items():
+        pol = make_batch_policy(name, candidates=[64, 128], ref_batch=64)
+        assert pol.lr_rule == rule, name
+
+
+def test_lr_rule_override_changes_the_proposal(perf_model):
+    bounds = BatchBounds(64, 512)
+    geo = make_batch_policy(
+        "geodamp", candidates=[64, 512], ref_batch=64, delay=1, lr_rule="sqrt"
+    )
+    assert geo.lr_rule == "sqrt"
+    for e in range(3):
+        geo.observe(_telemetry(epoch=e))
+    prop = geo.propose(perf_model, bounds)
+    assert prop.lr_scale == sqrt_lr_scale(prop.total_batch, 64)
+
+
+def test_invalid_lr_rule_rejected_at_construction():
+    with pytest.raises(ValueError):
+        make_batch_policy("geodamp", candidates=[64], ref_batch=64, lr_rule="cosine")
+
+
+def test_proposal_lr_matches_declared_rule(perf_model):
+    """The (total_batch, lr_scale) pair is internally consistent for every
+    registered policy: lr_scale is exactly the declared rule applied to the
+    proposed batch."""
+    bounds = BatchBounds(32, 1024)
+    for name in REGISTERED:
+        pol = make_batch_policy(name, candidates=[32, 64, 128, 256], ref_batch=32)
+        for e in range(4):
+            pol.observe(_telemetry(epoch=e, loss=2.0, b_noise=500.0))
+        prop = pol.propose(perf_model, bounds)
+        expected = lr_scale_for(
+            pol.lr_rule,
+            batch=prop.total_batch,
+            ref_batch=32,
+            b_noise=getattr(pol, "b_noise", float("inf")),
+        )
+        assert prop.lr_scale == expected, name
+
+
+# ---------------------------------------------------------------------------
+# damper laws
+# ---------------------------------------------------------------------------
+
+
+def test_geodamp_law():
+    pol = make_batch_policy(
+        "geodamp", candidates=[64, 4096], ref_batch=64, factor=2.0, delay=2
+    )
+    bounds = BatchBounds(1, 4096)
+    seen = []
+    for e in range(6):
+        pol.observe(_telemetry(epoch=e))
+        seen.append(pol.propose(None, bounds).total_batch)
+    # updates = 1..6 -> 64*2^(k//2) = 64, 128, 128, 256, 256, 512
+    assert seen == [64, 128, 128, 256, 256, 512]
+
+
+def test_padadamp_law():
+    pol = make_batch_policy(
+        "padadamp", candidates=[64, 4096], ref_batch=64, rate=10.0
+    )
+    bounds = BatchBounds(1, 4096)
+    seen = []
+    for e in range(4):
+        pol.observe(_telemetry(epoch=e))
+        seen.append(pol.propose(None, bounds).total_batch)
+    # updates = 1..4 -> 64 + ceil(10k) = 74, 84, 94, 104
+    assert seen == [74, 84, 94, 104]
+
+
+def test_adadamp_law_tracks_loss_ratio():
+    pol = make_batch_policy("adadamp", candidates=[64, 4096], ref_batch=64)
+    bounds = BatchBounds(1, 4096)
+    pol.observe(_telemetry(epoch=0, loss=4.0))
+    assert pol.propose(None, bounds).total_batch == 64  # L0 == Lk
+    pol.observe(_telemetry(epoch=1, loss=2.0))
+    assert pol.propose(None, bounds).total_batch == 128  # ceil(64 * 4/2)
+    pol.observe(_telemetry(epoch=2, loss=8.0))
+    assert pol.propose(None, bounds).total_batch == 64  # loss rose: floor at start
+
+
+def test_adadamp_degrades_gracefully_without_loss():
+    """NaN losses (sim backend) hold the batch at start instead of blowing
+    up — the 'requires loss' policy stays safe on the wrong backend."""
+    pol = make_batch_policy("adadamp", candidates=[64, 4096], ref_batch=64)
+    bounds = BatchBounds(1, 4096)
+    for e in range(5):
+        pol.observe(_telemetry(epoch=e, loss=float("nan")))
+        assert pol.propose(None, bounds).total_batch == 64
+
+
+def test_fixed_policy_is_stateless_and_proposes_ref():
+    pol = make_batch_policy("fixed", candidates=[64, 128], ref_batch=128)
+    assert pol.state() == {}  # keeps legacy sim preemption snapshots empty
+    prop = pol.propose(None, BatchBounds(64, 128))
+    assert prop.total_batch == 128
+    assert prop.lr_scale == 1.0  # adascale_gain(B0, B0) == 1 always
+
+
+# ---------------------------------------------------------------------------
+# protocol invariants — deterministic sweep + hypothesis property tests
+# ---------------------------------------------------------------------------
+
+
+def _invariant_check(name, ref, hi, epochs, perf_model):
+    candidates = sorted({ref, 2 * ref, hi})
+    pol = make_batch_policy(name, candidates=candidates, ref_batch=ref)
+    bounds = BatchBounds(min(candidates), max(candidates))
+    monotone = name in ("geodamp", "padadamp")
+    prev_total = None
+    for e in range(epochs):
+        pol.observe(_telemetry(epoch=e, loss=3.0 / (e + 1), b_noise=1000.0))
+        prop = pol.propose(perf_model, bounds)
+        # (1) proposals always inside [min, max]
+        assert bounds.min_total <= prop.total_batch <= bounds.max_total, name
+        # (2) monotone schedules never decrease
+        if monotone and prev_total is not None:
+            assert prop.total_batch >= prev_total, name
+        prev_total = prop.total_batch
+        # (3) lr_scale is finite and positive
+        assert math.isfinite(prop.lr_scale) and prop.lr_scale > 0, name
+    # (4) state()/load_state() round-trips bit-exactly (NaN-aware)
+    saved = pol.state()
+    twin = make_batch_policy(name, candidates=candidates, ref_batch=ref)
+    twin.load_state(saved)
+    reloaded = twin.state()
+    assert set(reloaded) == set(saved), name
+    for key in saved:
+        np.testing.assert_array_equal(
+            np.asarray(saved[key]), np.asarray(reloaded[key]), err_msg=f"{name}.{key}"
+        )
+        assert np.asarray(saved[key]).dtype == np.asarray(reloaded[key]).dtype
+    # ...and the twin proposes exactly what the original would
+    assert (
+        twin.propose(perf_model, bounds).total_batch
+        == pol.propose(perf_model, bounds).total_batch
+    ), name
+
+
+def test_every_registered_policy_respects_invariants(perf_model):
+    for name in sorted(BATCH_POLICIES):
+        _invariant_check(name, ref=64, hi=512, epochs=6, perf_model=perf_model)
+
+
+@hypothesis.given(
+    name=st.sampled_from(sorted(REGISTERED)),
+    ref=st.integers(min_value=1, max_value=256),
+    hi=st.integers(min_value=256, max_value=4096),
+    epochs=st.integers(min_value=1, max_value=10),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_policy_invariants_property(name, ref, hi, epochs, perf_model):
+    _invariant_check(name, ref=ref, hi=hi, epochs=epochs, perf_model=perf_model)
+
+
+def test_controller_rounded_batches_sum_to_proposed_total():
+    """Through the controller, every plan's rounded local batches sum to
+    the policy's proposed total and respect the local bounds."""
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    ctrl = CannikinController(
+        sim.n,
+        batch_candidates=[64, 128, 256, 512],
+        ref_batch=64,
+        batch_policy="geodamp",
+        policy_kwargs={"delay": 1},
+        min_local=2,
+        max_local=400,
+    )
+    for _ in range(6):
+        plan = ctrl.plan_epoch()
+        assert sum(plan.batches) == plan.total_batch
+        assert all(2 <= b <= 400 for b in plan.batches)
+        _, ms = sim.run_epoch(list(plan.batches), 3)
+        ctrl.observe_epoch(ms)
+
+
+# ---------------------------------------------------------------------------
+# cannikin-gns bit-identity with the pre-protocol controller path
+# ---------------------------------------------------------------------------
+
+
+def test_cannikin_gns_lockstep_with_legacy_selector_path():
+    """Shadow-replicate the pre-protocol plan_epoch computation (its exact
+    operation order: selector.select -> round_batches -> _apply_bounds ->
+    adascale_gain) with an independent BatchSizeSelector, and assert the
+    refactored controller's plans are bit-identical every epoch."""
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
+    candidates = (64, 128, 256, 512)
+    ctrl = CannikinController(
+        sim.n, batch_candidates=list(candidates), ref_batch=64
+    )
+    assert ctrl.policy.name == "cannikin-gns"  # the default adaptive law
+    shadow = BatchSizeSelector(
+        candidates=candidates, ref_batch=64, solver="algorithm1",
+        engine="batched", warm_drift_limit=0.25,
+    )
+    optperf_epochs = 0
+    for _ in range(6):
+        expected = None
+        if ctrl.can_model():
+            try:
+                model = ctrl.cluster_model()
+            except ValueError:
+                model = None
+            if model is not None:
+                b_noise = ctrl.gns.b_noise
+                best, sol, _ = shadow.select(model, b_noise)
+                batches = ctrl._apply_bounds(
+                    round_batches(list(sol.batches), best), best
+                )
+                expected = (
+                    int(best),
+                    tuple(batches),
+                    adascale_gain(b_noise, best, 64),
+                    sol.opt_perf,
+                )
+        plan = ctrl.plan_epoch()
+        if expected is not None:
+            assert plan.phase == "optperf"
+            assert plan.batch_policy == "cannikin-gns"
+            got = (
+                plan.total_batch,
+                plan.batches,
+                plan.lr_scale,
+                plan.predicted_batch_time,
+            )
+            assert got == expected  # bit-identical, not approximately
+            optperf_epochs += 1
+        _, ms = sim.run_epoch(list(plan.batches), 4)
+        ctrl.observe_epoch(ms)
+        ctrl.observe_gradients([10.0] * sim.n, 2.0, list(plan.batches))
+    assert optperf_epochs >= 3  # the lockstep actually exercised optperf
+    # ...and the shared-selector discipline held: the controller's stats
+    # mirror its own selector, which saw exactly what the shadow saw.
+    assert ctrl.stats.full_sweeps == shadow.full_sweeps
+    assert ctrl.stats.warm_sweeps == shadow.warm_sweeps
+    assert ctrl.stats.cold_sweeps == shadow.cold_sweeps
+
+
+def test_non_adaptive_controller_uses_fixed_policy():
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.005, seed=0)
+    ctrl = CannikinController(
+        sim.n, batch_candidates=[128], ref_batch=128, adaptive=False
+    )
+    assert ctrl.policy.name == "fixed"
+    for _ in range(4):
+        plan = ctrl.plan_epoch()
+        assert plan.total_batch == 128
+        assert plan.lr_scale == 1.0
+        _, ms = sim.run_epoch(list(plan.batches), 3)
+        ctrl.observe_epoch(ms)
+    assert ctrl.last_plan.phase == "optperf"
+    assert ctrl.last_plan.batch_policy == "fixed"
+
+
+def test_bootstrap_plan_has_no_policy_provenance():
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.0, seed=0)
+    ctrl = CannikinController(sim.n, batch_candidates=[64], ref_batch=64)
+    plan = ctrl.plan_epoch()
+    assert plan.phase == "bootstrap"
+    assert plan.batch_policy is None
+
+
+# ---------------------------------------------------------------------------
+# runtime: per-job policy selection via JobSpec.batch_policy
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_gns_policy_on_sim_backend_forces_fixed():
+    """GNS-driven policies need gradients; on the sim backend the runtime
+    collapses them to the fixed controller (the satellite-1 guard at the
+    runtime layer), so plans stay at the spec total."""
+    spec = dataclasses.replace(random_jobs(1, 6, seed=2)[0], batch_policy="cannikin-gns")
+    rt = ClusterRuntime(6, policy="cannikin")
+    h = rt.submit(spec, at=0.0)
+    rt.run()
+    assert h.controller.adaptive is False
+    assert h.controller.policy.name == "fixed"
+    rt.advance(3, steps=2)
+    assert all(rec.total_batch == spec.total_batch for rec in h.records)
+
+
+def test_runtime_geodamp_adapts_on_sim_backend():
+    """Schedule-driven dampers make adaptive batch sizes meaningful on
+    SimBackend — totals actually ramp with zero gradient telemetry."""
+    spec = dataclasses.replace(
+        random_jobs(1, 6, seed=2)[0], batch_policy="geodamp"
+    )
+    rt = ClusterRuntime(6, policy="cannikin")
+    h = rt.submit(spec, at=0.0)
+    rt.run()
+    assert h.controller.adaptive is True
+    assert h.controller.policy.name == "geodamp"
+    rt.advance(8, steps=2)
+    totals = [rec.total_batch for rec in h.records]
+    assert totals == sorted(totals)  # monotone ramp
+    assert totals[-1] > totals[0]    # and it actually moved
+    optperf = [rec for rec in h.records if rec.phase == "optperf"]
+    assert optperf and all(rec.plan.batch_policy == "geodamp" for rec in optperf)
+
+
+def test_runtime_default_spec_unchanged():
+    """batch_policy=None keeps the historical per-backend defaults."""
+    spec = random_jobs(1, 6, seed=2)[0]
+    assert spec.batch_policy is None
+    rt = ClusterRuntime(6, policy="cannikin")
+    h = rt.submit(spec, at=0.0)
+    rt.run()
+    assert h.controller.adaptive is False
+    assert h.controller.policy.name == "fixed"
+
+
+# ---------------------------------------------------------------------------
+# preemption: policy state rides the checkpoint path bit-exactly
+# ---------------------------------------------------------------------------
+
+
+def test_policy_state_survives_preemption_checkpoint(tmp_path):
+    spec = dataclasses.replace(
+        random_jobs(1, 6, seed=3)[0], batch_policy="geodamp"
+    )
+    rt = ClusterRuntime(6, policy="cannikin", checkpoint_dir=str(tmp_path))
+    h = rt.submit(spec, at=0.0)
+    rt.run()
+    rt.advance(5, steps=2)
+    saved = {k: np.asarray(v).copy() for k, v in h.controller.policy.state().items()}
+    assert saved["updates"] > 0
+
+    rt.preempt(spec.name, at=1.0)
+    rt.run()
+    assert h.state == JobState.PREEMPTED
+    assert h.checkpoint_path is not None  # the damper state forced a write
+
+    # Scramble the live policy: restore must rebuild it from the file.
+    h.controller.policy.load_state({"updates": np.int64(9999)})
+    rt.submit(spec, at=2.0)
+    rt.run()
+    assert h.state == JobState.RUNNING
+    assert h.restores == 1
+    restored = h.controller.policy.state()
+    assert set(restored) == set(saved)
+    for key in saved:
+        np.testing.assert_array_equal(np.asarray(restored[key]), saved[key])
+
+    # The schedule resumes where it left off, not from scratch.
+    rt.advance(1, steps=2)
+    assert int(h.controller.policy.state()["updates"]) == int(saved["updates"]) + 1
+
+
+def test_preempt_resume_matches_unpreempted_twin():
+    """In-memory snapshot path: a geodamp job preempted and resumed plans
+    the same total-batch ramp as a twin that never lost its nodes."""
+    spec = dataclasses.replace(random_jobs(1, 6, seed=3)[0], batch_policy="geodamp")
+
+    rt_a = ClusterRuntime(6, policy="cannikin")
+    h_a = rt_a.submit(spec, at=0.0)
+    rt_a.run()
+    rt_a.advance(4, steps=2)
+    rt_a.preempt(spec.name, at=1.0)
+    rt_a.run()
+    rt_a.submit(spec, at=2.0)
+    rt_a.run()
+    rt_a.advance(4, steps=2)
+
+    rt_b = ClusterRuntime(6, policy="cannikin")
+    h_b = rt_b.submit(spec, at=0.0)
+    rt_b.run()
+    rt_b.advance(8, steps=2)
+
+    totals_a = [rec.total_batch for rec in h_a.records]
+    totals_b = [rec.total_batch for rec in h_b.records]
+    assert totals_a == totals_b
+
+
+def test_sim_fixed_policy_snapshot_stays_empty():
+    """Legacy sim jobs (fixed policy, stateless) must write no snapshot on
+    preemption — byte-identical to the pre-protocol runtime."""
+    spec = random_jobs(1, 6, seed=3)[0]
+    rt = ClusterRuntime(6, policy="cannikin")
+    h = rt.submit(spec, at=0.0)
+    rt.run()
+    rt.advance(2, steps=2)
+    rt.preempt(spec.name, at=1.0)
+    rt.run()
+    assert h._snapshot is None
+    assert h.checkpoint_path is None
+
+
+# ---------------------------------------------------------------------------
+# launch guard (satellite 1) + partition-policy passthrough
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_adaptive_guard_branches():
+    # real backend: adaptive unless --fixed-batch
+    assert hetero_adaptive("real", False, None) is True
+    assert hetero_adaptive("real", False, "cannikin-gns") is True
+    assert hetero_adaptive("real", True, None) is False
+    # sim backend: GNS-dependent laws stay forced-fixed...
+    assert hetero_adaptive("sim", False, None) is False
+    assert hetero_adaptive("sim", False, "cannikin-gns") is False
+    # ...but gradient-free dampers run adaptively
+    assert hetero_adaptive("sim", False, "geodamp") is True
+    assert hetero_adaptive("sim", False, "padadamp") is True
+    assert hetero_adaptive("sim", False, "adadamp") is True
+    # --fixed-batch always wins
+    assert hetero_adaptive("sim", True, "geodamp") is False
+
+
+def test_epoch_loop_sim_geodamp_adapts():
+    """The full launch path: EpochLoop over SimBackend with a damper — the
+    PR-5 restriction is lifted for gradient-free policies."""
+    profiles, comm = cluster_A()
+    sim = SimulatedCluster(profiles, comm, noise=0.01, seed=0)
+    policy = make_partition_policy(
+        "cannikin",
+        sim.n,
+        candidates=[64, 128, 256, 512],
+        ref_batch=64,
+        adaptive=hetero_adaptive("sim", False, "geodamp"),
+        batch_policy="geodamp",
+    )
+    loop = EpochLoop(policy, SimBackend(cluster=sim), steps_per_epoch=3, fixed_total=64)
+    for _ in range(8):
+        loop.run_epoch()
+    totals = [r.total_batch for r in loop.history]
+    assert totals[-1] > totals[0]
+    assert totals == sorted(totals)
+
+
+# ---------------------------------------------------------------------------
+# cross-policy trace report (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+
+def test_compare_policies_batch_policy_axis_ranks_the_zoo():
+    trace, _jobs = synthetic_trace(2, 6, seed=0)
+    reports = compare_policies(
+        trace, 6, batch_policies=(), epochs_per_event=2, steps=2,
+        noise=0.01, seed=0,
+    )
+    assert set(REGISTERED) <= set(reports)
+    ranking = rank_batch_policies(reports)
+    assert len(ranking) >= 4
+    goodputs = [row["policy_goodput"] for row in ranking]
+    assert goodputs == sorted(goodputs, reverse=True)
+    for row in ranking:
+        assert 0.0 < row["statistical_efficiency"] <= 1.0
+        assert row["sample_throughput"] > 0.0
+        assert row["epochs"] > 0
+    # the ranking keys carry the goodput decomposition
+    by_name = {row["batch_policy"]: row for row in ranking}
+    # cannikin-gns collapses to fixed on the sim backend -> identical replays
+    assert (
+        by_name["cannikin-gns"]["policy_goodput"] == by_name["fixed"]["policy_goodput"]
+    )
+    # dampers actually moved the batch
+    assert by_name["geodamp"]["mean_total_batch"] > by_name["adadamp"]["mean_total_batch"]
+
+
+def test_batch_policy_summary_keys_are_conditional():
+    trace, _jobs = synthetic_trace(1, 4, seed=0)
+    plain = replay(trace, 4, epochs_per_event=1, steps=2, seed=0)
+    stamped = replay(
+        trace, 4, epochs_per_event=1, steps=2, seed=0, batch_policy="geodamp"
+    )
+    assert "batch_policy" not in plain.summary()  # golden summaries untouched
+    s = stamped.summary()
+    assert s["batch_policy"] == "geodamp"
+    for key in ("sample_throughput", "statistical_efficiency",
+                "policy_goodput", "mean_total_batch"):
+        assert key in s
