@@ -1,0 +1,244 @@
+"""Serving lane: the OptPerf water-fill under live inference traffic.
+
+    PYTHONPATH=src:. python -m benchmarks.bench_serving [--smoke]
+
+Three gated sub-lanes:
+
+* **2-speed-class sim** — a seeded Poisson workload (fixed offered load)
+  over 3 fast + 5 slow (8x) nodes with shared per-tick overhead.  Gates:
+  OptPerf-driven slot allocation sustains >= 1.15x the uniform split's
+  req/s at equal-or-better p99 token latency, both arms drop nothing, and
+  same-seed runs are bit-identical (metrics fingerprint match).
+* **Churn sim** — the same workload with one NodeLeave mid-stream and a
+  later rejoin.  Gate: zero drops (in-flight work requeues and completes).
+* **Real engine** — reduced olmo-1b decoding real tokens through the fused
+  prefill + jitted decode path (warmed).  Gates: sustained req/s >= a
+  pinned floor at the fixed offered load, p99 token latency bounded, zero
+  drops.
+
+All lanes are deterministic (seeded workloads; the sim clock is simulated),
+so the gates hold in smoke runs too.  Results merge into
+``artifacts/bench/sweep.json`` under the ``"serving"`` key.
+"""
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import ARTIFACTS, Row, save_json
+
+from repro.runtime.events import NodeJoin, NodeLeave
+from repro.serving import (
+    ServingAllocator,
+    ServingConfig,
+    ServingRuntime,
+    SimServingEngine,
+    generate_requests,
+)
+
+# 2-speed-class cluster (see tests/test_serving.py: the same acceptance
+# geometry): per-token cost 8x apart, per-tick dispatch overhead shared.
+FAST_ALPHA, SLOW_ALPHA, INTERCEPT = 0.004, 0.032, 0.03
+N_FAST, N_SLOW, SLOTS = 3, 5, 32
+COEFFS = {i: (FAST_ALPHA, INTERCEPT) for i in range(N_FAST)}
+COEFFS.update({i: (SLOW_ALPHA, INTERCEPT) for i in range(N_FAST, N_FAST + N_SLOW)})
+WORKLOAD = dict(seed=7, rate=56.0, gen_mean=8, gen_max=64,
+                token_budget=0.12, ttft_slack=1.0)
+SIM_REQUESTS = 400
+
+RATIO_GATE = 1.15
+
+# Real lane: fixed offered load of 50 req/s on reduced olmo; the engine is
+# warmed so the floor measures steady-state serving, not XLA compiles.
+REAL_FLOOR_REQ_S = 20.0
+REAL_P99_BOUND_S = 0.25
+REAL_REQUESTS = 24
+
+
+def _sim_run(mode, post=()):
+    wl = generate_requests(SIM_REQUESTS, **WORKLOAD)
+    rt = ServingRuntime(
+        SimServingEngine(dict(COEFFS)),
+        ServingAllocator(dict(COEFFS), total_slots=SLOTS, mode=mode),
+        wl,
+        nodes=list(range(N_FAST + N_SLOW)),
+        config=ServingConfig(total_slots=SLOTS, resolve_every=1.0),
+    )
+    for ev in post:
+        rt.post(ev)
+    return rt.run()
+
+
+def _summ(rep):
+    s = rep.summary
+    return {
+        "sustained_req_s": rep.sustained_req_s,
+        "goodput_req_s": rep.goodput_req_s,
+        "p99_token_s": s["token_latency"]["p99"],
+        "p50_token_s": s["token_latency"]["p50"],
+        "deadline_miss_rate": s["deadline_miss_rate"],
+        "dropped": s["dropped"],
+        "requeues": s["requeues"],
+        "allocations": {str(k): v for k, v in rep.allocations.items()},
+    }
+
+
+def _run_sim_lanes(rows):
+    t0 = time.perf_counter()
+    opt = _sim_run("optperf")
+    uni = _sim_run("uniform")
+    rerun = _sim_run("optperf")
+    churn = _sim_run(
+        "optperf",
+        post=[NodeLeave(time=2.0, nodes=(0, 4)), NodeJoin(time=5.0, nodes=(0,))],
+    )
+    sim_s = time.perf_counter() - t0
+
+    ratio = opt.sustained_req_s / uni.sustained_req_s
+    goodput_ratio = opt.goodput_req_s / uni.goodput_req_s
+    assert opt.summary["dropped"] == 0 and uni.summary["dropped"] == 0
+    assert ratio >= RATIO_GATE, (
+        f"water-fill sustained advantage {ratio:.3f} below gate {RATIO_GATE}"
+    )
+    assert (
+        opt.summary["token_latency"]["p99"] <= uni.summary["token_latency"]["p99"]
+    ), "water-fill regressed p99 token latency vs uniform"
+    assert rerun.fingerprint == opt.fingerprint, "same-seed run not bit-identical"
+    assert churn.summary["dropped"] == 0, "churn lane dropped requests"
+    assert churn.counters["requeued"] > 0
+
+    wl = generate_requests(SIM_REQUESTS, **WORKLOAD)
+    record = {
+        "cluster": {
+            "fast_nodes": N_FAST, "slow_nodes": N_SLOW,
+            "alpha_fast": FAST_ALPHA, "alpha_slow": SLOW_ALPHA,
+            "intercept": INTERCEPT, "slots": SLOTS,
+        },
+        "offered_req_s": wl.offered_load,
+        "requests": SIM_REQUESTS,
+        "optperf": _summ(opt),
+        "uniform": _summ(uni),
+        "sustained_ratio": ratio,
+        "goodput_ratio": goodput_ratio,
+        "ratio_gate": RATIO_GATE,
+        "fingerprint": opt.fingerprint,
+        "bit_identical": True,
+        "churn": {
+            **_summ(churn),
+            "leaves": churn.counters["leaves"],
+            "joins": churn.counters["joins"],
+        },
+        "sim_wall_s": sim_s,
+    }
+    rows.append(Row(
+        f"serving/sim_optperf/n{N_FAST + N_SLOW}xb{SLOTS}",
+        sim_s / 4 * 1e6,
+        f"sustained={opt.sustained_req_s:.2f}req/s;"
+        f"ratio={ratio:.3f};p99={opt.summary['token_latency']['p99'] * 1e3:.0f}ms",
+    ))
+    rows.append(Row(
+        f"serving/sim_uniform/n{N_FAST + N_SLOW}xb{SLOTS}",
+        sim_s / 4 * 1e6,
+        f"sustained={uni.sustained_req_s:.2f}req/s;"
+        f"p99={uni.summary['token_latency']['p99'] * 1e3:.0f}ms",
+    ))
+    rows.append(Row(
+        f"serving/sim_churn/n{N_FAST + N_SLOW}xb{SLOTS}",
+        sim_s / 4 * 1e6,
+        f"dropped={churn.summary['dropped']};requeued={churn.counters['requeued']}",
+    ))
+    return record
+
+
+def _run_real_lane(rows, n_requests):
+    import jax
+
+    from repro.configs import get_api
+    from repro.serving import RealServingEngine
+
+    api = get_api("olmo-1b", reduced=True)
+    assert api.supports_prefill(), "dense family must expose fused prefill"
+    params = api.init(jax.random.PRNGKey(0))
+    coeffs = {0: (0.01, 0.01), 1: (0.01, 0.01)}
+
+    def run(n, engine, seed):
+        wl = generate_requests(
+            n, seed=seed, rate=50.0, prompt_min=16, prompt_max=16,
+            gen_min=2, gen_max=8, gen_mean=4, token_budget=10.0,
+        )
+        rt = ServingRuntime(
+            engine,
+            ServingAllocator(dict(coeffs), total_slots=4),
+            wl, nodes=[0, 1],
+            config=ServingConfig(total_slots=4),
+        )
+        return rt.run()
+
+    engine = RealServingEngine(api, params, max_len=32)
+    run(4, engine, seed=99)  # warm: compile prefill(ctx=16) + decode
+    t0 = time.perf_counter()
+    rep = run(n_requests, engine, seed=5)
+    wall = time.perf_counter() - t0
+
+    p99 = rep.summary["token_latency"]["p99"]
+    assert rep.summary["dropped"] == 0, "real lane dropped requests"
+    assert rep.sustained_req_s >= REAL_FLOOR_REQ_S, (
+        f"real sustained {rep.sustained_req_s:.2f} req/s below floor "
+        f"{REAL_FLOOR_REQ_S}"
+    )
+    assert p99 <= REAL_P99_BOUND_S, (
+        f"real p99 token latency {p99:.3f}s above bound {REAL_P99_BOUND_S}s"
+    )
+
+    record = {
+        "arch": "olmo-1b (reduced)",
+        "prefill": "fused",
+        "requests": n_requests,
+        "offered_req_s": 50.0,
+        "sustained_req_s": rep.sustained_req_s,
+        "floor_req_s": REAL_FLOOR_REQ_S,
+        "p99_token_s": p99,
+        "p99_bound_s": REAL_P99_BOUND_S,
+        "dropped": rep.summary["dropped"],
+        "wall_s": wall,
+    }
+    rows.append(Row(
+        f"serving/real_olmo/r{n_requests}",
+        wall * 1e6,
+        f"sustained={rep.sustained_req_s:.2f}req/s;p99={p99 * 1e3:.1f}ms",
+    ))
+    return record
+
+
+def run(smoke: bool = False):
+    rows = []
+    record = _run_sim_lanes(rows)
+    record["real"] = _run_real_lane(
+        rows, REAL_REQUESTS // 2 if smoke else REAL_REQUESTS
+    )
+
+    sweep_path = os.path.join(ARTIFACTS, "bench", "sweep.json")
+    payload = {}
+    if os.path.exists(sweep_path):
+        try:
+            with open(sweep_path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload["serving"] = record
+    save_json("sweep", payload)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="halve the real-engine request count")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,12 @@
 zoo's serving-relevant families (dense ring-cache, MLA latent cache, RWKV
 O(1) state).
 
+Prompt ingestion uses the fused full-sequence prefill where the family
+supports it (``api.prefill``: one forward pass fills the KV cache) and the
+stepped single-token decode loop otherwise — the same
+:func:`repro.serving.engines.prefill_cache` helper the serving runtime's
+real engine uses.
+
     python examples/serve_batched.py
 """
 import time
@@ -12,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_api
+from repro.serving.engines import prefill_cache
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 24, gen: int = 12):
@@ -23,12 +30,9 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 24, gen: int = 12):
     decode = jax.jit(api.decode_step)
     cache = api.init_cache(batch, prompt_len + gen)
 
-    # Prefill by stepping the decoder over the prompt (teacher-forced); a
-    # production server would run the fused full-sequence prefill instead.
     t0 = time.perf_counter()
-    logits = None
-    for pos in range(prompt_len):
-        logits, cache = decode(params, cache, prompts[:, pos : pos + 1], jnp.int32(pos))
+    logits, cache = prefill_cache(api, params, cache, prompts, decode_fn=decode)
+    t_prefill = time.perf_counter() - t0
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     out = [tok]
     for i in range(gen - 1):
@@ -38,7 +42,9 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 24, gen: int = 12):
     dt = time.perf_counter() - t0
     toks = jnp.concatenate(out, axis=1)
     cache_desc = {k: tuple(v.shape) for k, v in cache.items() if hasattr(v, "shape") and v.ndim > 0}
+    mode = "fused" if api.supports_prefill() else "stepped"
     print(f"{arch:18s} batch={batch} gen={gen}  {dt*1e3:7.1f}ms total  "
+          f"(prefill {mode} {t_prefill*1e3:.1f}ms)  "
           f"first row: {list(map(int, toks[0]))[:8]}")
     for k, s in list(cache_desc.items())[:3]:
         print(f"{'':20s}cache[{k}] {s}")

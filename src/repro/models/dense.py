@@ -25,7 +25,15 @@ import jax.numpy as jnp
 from repro.models import common
 from repro.models.common import Param
 
-__all__ = ["DenseConfig", "schema", "init", "forward", "init_cache", "decode_step"]
+__all__ = [
+    "DenseConfig",
+    "schema",
+    "init",
+    "forward",
+    "init_cache",
+    "decode_step",
+    "prefill",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,6 +202,65 @@ def init_cache(cfg: DenseConfig, batch: int, seq_len: int, dtype=None):
     return common.make_kv_cache(
         cfg.n_layers, batch, cache_length(cfg, seq_len), cfg.n_kv_heads, cfg.head_dim, dtype
     )
+
+
+def prefill(
+    params: Dict[str, Any],
+    cfg: DenseConfig,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Fused full-sequence prefill: one forward pass over tokens (B, S) that
+    also fills the KV cache at positions [0, S).
+
+    Replaces the S-step single-token decode loop for prompt ingestion: the
+    whole prompt goes through the batched attention path (one scan over
+    layers instead of S of them).  Returns ``(logits (B, S, vocab), cache)``
+    with ``cache["pos"] = S`` so ``decode_step`` continues at position S.
+
+    Requires an *empty* full cache of length >= S (start-of-sequence
+    semantics; ring caches must use the stepped loop — their physical layout
+    depends on the write order).  Numerics: the chunked online-softmax
+    prefill attention matches the stepped decode path to float tolerance,
+    not bit-exactly.
+    """
+    b, s = tokens.shape
+    length = cache["k"].shape[2]
+    if cfg.decode_window is not None and length == cfg.decode_window and length < s:
+        raise ValueError(
+            "fused prefill needs a full-length cache; ring caches "
+            f"(length {length} < prompt {s}) must use the stepped decode loop"
+        )
+    if length < s:
+        raise ValueError(f"cache length {length} shorter than prompt {s}")
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    positions = jnp.arange(s)
+
+    def body(x, layer):
+        lp, k_cache, v_cache = layer
+        h = _norm(x, lp.get("attn_norm"), cfg)
+        q, k, v = _qkv(lp["attn"], h, positions, cfg)
+        # K/V enter the cache post-RoPE, exactly as decode_step writes them.
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, 0, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, 0, axis=1)
+        if cfg.window is not None:
+            attn = common.local_window_attention(q, k, v, window=cfg.window)
+        else:
+            attn = common.full_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["attn"]["wo"])
+        h = _norm(x, lp.get("mlp_norm"), cfg)
+        x = x + _mlp(lp["mlp"], h, cfg)
+        return x, (k_cache, v_cache)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = _norm(x, params.get("final_norm"), cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.compute_dtype)).astype(
+        jnp.float32
+    )
+    return logits, {"k": new_k, "v": new_v, "pos": jnp.int32(s)}
 
 
 def decode_step(

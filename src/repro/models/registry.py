@@ -129,6 +129,20 @@ class ModelApi:
     def decode_step(self, params, cache, tokens, pos):
         return self._module.decode_step(params, self.cfg, cache, tokens, pos)
 
+    def supports_prefill(self) -> bool:
+        """True if the family has a fused full-sequence prefill (one forward
+        pass fills the KV cache); otherwise callers step the decode loop."""
+        return hasattr(self._module, "prefill")
+
+    def prefill(self, params, cache, tokens):
+        """Fused prompt ingestion: (logits (B, S, V), cache at pos=S)."""
+        if not self.supports_prefill():
+            raise NotImplementedError(
+                f"{self.arch_id} ({self.family}) has no fused prefill; "
+                "use the stepped decode_step loop"
+            )
+        return self._module.prefill(params, self.cfg, cache, tokens)
+
     def supports_long_context(self) -> bool:
         """True if decode over 500k positions is sub-quadratic / bounded-cache."""
         if self.family in ("ssm", "hybrid"):

@@ -1,0 +1,592 @@
+"""Serving subsystem tests: load generator, scheduler lifecycle (including
+randomized-interleaving property tests), allocator water-fill, metrics,
+pipeline streaming, and the sim-engine acceptance gates (optperf >= 1.15x
+uniform at equal-or-better p99; zero drops under churn; same-seed
+bit-identity).  JAX-compiling prefill/real-engine tests are `slow`-marked.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+from _hypothesis_compat import hypothesis, st
+
+from repro.data.pipeline import BoundedStream, SyntheticLM
+from repro.runtime.events import NodeJoin, NodeLeave
+from repro.serving import (
+    BatchScheduler,
+    NodeTickFitter,
+    SchedulingError,
+    ServingAllocator,
+    ServingConfig,
+    ServingMetrics,
+    ServingRuntime,
+    SimServingEngine,
+    generate_requests,
+    percentiles,
+    prompts_from_stream,
+    serving_node_model,
+    uniform_split,
+)
+from repro.serving.request import Request
+
+# ---------------------------------------------------------------------------
+# request / load generator
+# ---------------------------------------------------------------------------
+
+
+def test_workload_same_seed_identical():
+    a = generate_requests(50, seed=9, arrival="poisson")
+    b = generate_requests(50, seed=9, arrival="poisson")
+    assert tuple(a) == tuple(b)
+    c = generate_requests(50, seed=10, arrival="poisson")
+    assert tuple(a) != tuple(c)
+
+
+def test_workload_laws_and_bounds():
+    wl = generate_requests(
+        200, seed=1, arrival="bursty", prompt_min=4, prompt_max=32,
+        gen_min=2, gen_max=16, ttft_slack=1.0, token_budget=0.25,
+    )
+    arr = [r.arrival for r in wl]
+    assert arr == sorted(arr) and arr[0] > 0
+    for r in wl:
+        assert 4 <= r.prompt_len <= 32
+        assert 2 <= r.gen_len <= 16
+        assert r.deadline == pytest.approx(r.arrival + 1.0 + r.gen_len * 0.25)
+    assert wl.offered_load > 0
+
+
+def test_workload_rejects_unknown_law():
+    with pytest.raises(ValueError):
+        generate_requests(1, arrival="adversarial")
+
+
+def test_prompt_tokens_deterministic_and_bounded():
+    r = Request(rid=3, arrival=0.0, prompt_len=16, gen_len=2, deadline=1.0, seed=5)
+    t1, t2 = r.prompt_tokens(512), r.prompt_tokens(512)
+    assert np.array_equal(t1, t2)
+    assert t1.shape == (16,) and t1.dtype == np.int32
+    assert t1.min() >= 0 and t1.max() < 512
+
+
+# ---------------------------------------------------------------------------
+# scheduler lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, gen_len=4):
+    return Request(rid=rid, arrival=float(rid), prompt_len=4,
+                   gen_len=gen_len, deadline=1e9)
+
+
+def test_scheduler_admit_complete_cycle():
+    s = BatchScheduler({0: 2, 1: 1})
+    for rid in range(4):
+        s.enqueue(_req(rid))
+    a0 = s.admit(0, now=0.0)
+    assert [ar.rid for ar in a0] == [0, 1]
+    a1 = s.admit(1, now=0.0)
+    assert [ar.rid for ar in a1] == [2]
+    assert s.queue_depth() == 1 and s.in_flight() == 3
+    s.complete(a0[0])
+    assert s.free_slots(0) == 1
+    assert [ar.rid for ar in s.admit(0, now=1.0)] == [3]
+    s.check_invariants()
+
+
+def test_scheduler_rejects_double_enqueue_and_unknown_node():
+    s = BatchScheduler({0: 1})
+    s.enqueue(_req(0))
+    with pytest.raises(SchedulingError):
+        s.enqueue(_req(0))
+    with pytest.raises(SchedulingError):
+        s.admit(7, now=0.0)
+    with pytest.raises(SchedulingError):
+        s.drain_node(7)
+
+
+def test_scheduler_drain_requeues_in_arrival_order():
+    s = BatchScheduler({0: 3, 1: 3})
+    for rid in range(5):
+        s.enqueue(_req(rid))
+    s.admit(0, now=0.0)  # rids 0,1,2
+    victims = s.drain_node(0)
+    assert [ar.rid for ar in victims] == [0, 1, 2]
+    assert 0 not in s.nodes()
+    # Requeues go to the queue FRONT, oldest first.
+    admitted = s.admit(1, now=1.0)
+    assert [ar.rid for ar in admitted] == [0, 1, 2]
+    assert all(ar.requeues == 1 for ar in admitted)
+    s.check_invariants()
+
+
+def test_scheduler_shrink_evicts_newest_keeps_tokens():
+    s = BatchScheduler({0: 3})
+    for rid in range(3):
+        s.enqueue(_req(rid))
+    actives = s.admit(0, now=0.0)
+    actives[2].tokens.extend([7, 8])  # progress that must survive eviction
+    evicted = s.set_allocations({0: 1})
+    assert [ar.rid for ar in evicted] == [2, 1]
+    assert s.active_count(0) == 1 and s.queue_depth() == 2
+    assert evicted[0].tokens == [7, 8]
+    s.check_invariants()
+    with pytest.raises(SchedulingError):
+        s.set_allocations({5: 1})
+
+
+def _drive_random_interleaving(seed: int) -> None:
+    """Random legal op sequences never drop, double-schedule, or overfill —
+    `check_invariants` sweeps the full state map after every transition, and
+    every request completes once the cluster quiesces."""
+    rng = np.random.default_rng(seed)
+    sched = BatchScheduler({0: 3, 1: 2, 2: 4})
+    parked = []  # nodes currently out of the cluster
+    next_rid = 0
+    for _ in range(250):
+        nodes = sched.nodes()
+        busy = [n for n in nodes if sched.active_count(n)]
+        ops = ["arrive"]
+        if nodes:
+            ops += ["admit", "shrink"]
+        if busy:
+            ops.append("complete")
+        if len(nodes) > 1:
+            ops.append("drain")
+        if parked:
+            ops.append("join")
+        op = ops[rng.integers(len(ops))]
+        if op == "arrive":
+            sched.enqueue(_req(next_rid))
+            next_rid += 1
+        elif op == "admit":
+            sched.admit(int(rng.choice(nodes)), now=0.0)
+        elif op == "complete":
+            node = int(rng.choice(busy))
+            active = sched.active(node)
+            sched.complete(active[rng.integers(len(active))])
+        elif op == "drain":
+            node = int(rng.choice(nodes))
+            parked.append(node)
+            sched.drain_node(node)
+        elif op == "join":
+            sched.join_node(parked.pop(), cap=int(rng.integers(0, 5)))
+        elif op == "shrink":
+            sched.set_allocations(
+                {n: int(rng.integers(0, 5)) for n in nodes}
+            )
+        sched.check_invariants()
+    # Quiesce: restore capacity and run every remaining request down.
+    for node in parked:
+        sched.join_node(node, cap=0)
+    sched.set_allocations({n: 4 for n in sched.nodes()})
+    while sched.pending():
+        for node in sched.nodes():
+            sched.admit(node, now=0.0)
+            for ar in sched.active(node):
+                sched.complete(ar)
+        sched.check_invariants()
+    assert sched.counters["completed"] == sched.counters["enqueued"] == next_rid
+
+
+def test_scheduler_random_interleavings_deterministic_sweep():
+    for seed in range(8):
+        _drive_random_interleaving(seed)
+
+
+@hypothesis.given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_scheduler_random_interleavings_property(seed):
+    _drive_random_interleaving(seed)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+def test_serving_node_model_validates():
+    m = serving_node_model(0.01, 0.05)
+    assert m.q == m.k == pytest.approx(0.005)
+    assert m.s == m.m == pytest.approx(0.025)
+    with pytest.raises(ValueError):
+        serving_node_model(0.0, 0.05)
+
+
+def test_uniform_split_deterministic_remainder():
+    assert uniform_split(10, [2, 0, 1]) == {0: 4, 1: 3, 2: 3}
+    with pytest.raises(ValueError):
+        uniform_split(4, [])
+
+
+def test_waterfill_favors_fast_nodes_and_conserves_total():
+    coeffs = {0: (0.004, 0.03), 1: (0.032, 0.03)}
+    alloc = ServingAllocator(coeffs, total_slots=10).solve([0, 1])
+    assert sum(alloc.values()) == 10
+    assert alloc[0] > alloc[1]
+    uni = ServingAllocator(coeffs, total_slots=10, mode="uniform").solve([0, 1])
+    assert uni == {0: 5, 1: 5}
+
+
+def test_min_slots_floor_taken_from_largest():
+    coeffs = {0: (0.001, 0.05), 1: (0.05, 0.05), 2: (0.05, 0.05)}
+    alloc = ServingAllocator(coeffs, total_slots=12, min_slots=1).solve([0, 1, 2])
+    assert sum(alloc.values()) == 12
+    assert min(alloc.values()) >= 1
+
+
+def test_tick_fitter_recovers_linear_law():
+    f = NodeTickFitter()
+    for b in (1, 2, 4, 8):
+        f.observe(b, 0.01 * b + 0.2)
+    alpha, c = f.fit()
+    assert alpha == pytest.approx(0.01, rel=1e-6)
+    assert c == pytest.approx(0.2, rel=1e-6)
+    # Non-physical fits (negative slope) are rejected.
+    g = NodeTickFitter()
+    g.observe(1, 1.0)
+    g.observe(2, 0.5)
+    assert g.fit() is None
+    # One distinct batch size carries no slope information.
+    h = NodeTickFitter()
+    h.observe(4, 0.1)
+    h.observe(4, 0.1)
+    assert not h.can_fit()
+
+
+def test_allocator_refit_updates_coefficients():
+    alloc = ServingAllocator({0: (0.001, 0.0), 1: (0.001, 0.0)}, total_slots=8)
+    for b in (1, 2, 4):
+        alloc.observe(0, b, 0.05 * b + 0.1)
+    assert alloc.refit() == 1
+    a, c = alloc.coeffs(0)
+    assert a == pytest.approx(0.05, rel=1e-6)
+    assert alloc.predicted_tick(1, 4) == pytest.approx(0.004)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_percentiles_and_empty():
+    p = percentiles([1.0, 2.0, 3.0, 4.0])
+    assert p["p50"] == pytest.approx(2.5)
+    assert np.isnan(percentiles([])["p99"])
+
+
+def test_metrics_lifecycle_and_fingerprint():
+    m = ServingMetrics()
+    m.on_arrival(0, 0.0, 10.0, 4, 2)
+    m.on_admit(0, 0.5)
+    m.on_token(0, 1.0)
+    m.on_token(0, 1.5)
+    m.on_complete(0, 1.5, node=2, requeues=0)
+    with pytest.raises(ValueError):
+        m.on_complete(0, 2.0, node=2, requeues=0)
+    with pytest.raises(ValueError):
+        m.on_arrival(0, 0.0, 1.0, 1, 1)
+    s = m.summary()
+    assert s["completed"] == 1 and s["deadline_misses"] == 0
+    assert s["token_latency"]["p50"] == pytest.approx(0.5)
+    m2 = ServingMetrics()
+    m2.on_arrival(0, 0.0, 10.0, 4, 2)
+    assert m.fingerprint() != m2.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# sim runtime: the acceptance gates
+# ---------------------------------------------------------------------------
+
+# 2-speed-class cluster: 3 fast nodes, 5 nodes 8x slower, shared intercept
+# (per-tick dispatch overhead is host-side and speed-independent).
+TWO_CLASS = {i: (0.004, 0.03) for i in range(3)}
+TWO_CLASS.update({i: (0.032, 0.03) for i in range(3, 8)})
+GATE_WORKLOAD = dict(seed=7, rate=56.0, gen_mean=8, gen_max=64,
+                     token_budget=0.12, ttft_slack=1.0)
+
+
+def _run_two_class(mode, n=400, post=(), **cfg_kw):
+    wl = generate_requests(n, **GATE_WORKLOAD)
+    engine = SimServingEngine(dict(TWO_CLASS))
+    alloc = ServingAllocator(dict(TWO_CLASS), total_slots=32, mode=mode)
+    cfg = ServingConfig(total_slots=32, resolve_every=1.0, **cfg_kw)
+    rt = ServingRuntime(engine, alloc, wl, nodes=list(range(8)), config=cfg)
+    for ev in post:
+        rt.post(ev)
+    return rt.run()
+
+
+def test_optperf_beats_uniform_by_15_percent_at_better_p99():
+    opt = _run_two_class("optperf")
+    uni = _run_two_class("uniform")
+    assert opt.summary["dropped"] == 0 and uni.summary["dropped"] == 0
+    assert opt.sustained_req_s >= 1.15 * uni.sustained_req_s
+    assert opt.goodput_req_s >= 1.15 * uni.goodput_req_s
+    assert (
+        opt.summary["token_latency"]["p99"]
+        <= uni.summary["token_latency"]["p99"]
+    )
+
+
+def test_same_seed_serving_runs_bit_identical():
+    a = _run_two_class("optperf")
+    b = _run_two_class("optperf")
+    assert a.fingerprint == b.fingerprint
+    assert a.summary == b.summary
+    c = _run_two_class("uniform")
+    assert a.fingerprint != c.fingerprint
+
+
+def test_node_leave_mid_stream_zero_drops():
+    rep = _run_two_class(
+        "optperf",
+        post=[NodeLeave(time=2.0, nodes=(0, 4)), NodeJoin(time=5.0, nodes=(0,))],
+    )
+    assert rep.summary["dropped"] == 0
+    assert rep.summary["completed"] == rep.summary["requests"]
+    assert rep.counters["leaves"] == 2 and rep.counters["joins"] == 1
+    assert rep.counters["requeued"] > 0
+    assert 4 not in rep.allocations  # never came back
+
+
+def test_runtime_rejects_foreign_events():
+    wl = generate_requests(2, seed=0)
+    rt = ServingRuntime(
+        SimServingEngine({0: (0.01, 0.01)}),
+        ServingAllocator({0: (0.01, 0.01)}, total_slots=2),
+        wl, nodes=[0],
+    )
+    with pytest.raises(TypeError):
+        rt.post(object())
+
+
+def test_batch_never_exceeds_allocation_during_run():
+    class AssertingEngine(SimServingEngine):
+        scheduler = None
+
+        def decode(self, node, actives):
+            cap = self.scheduler.allocation(node)
+            assert len(actives) <= cap, (node, len(actives), cap)
+            return super().decode(node, actives)
+
+    wl = generate_requests(150, **GATE_WORKLOAD)
+    engine = AssertingEngine(dict(TWO_CLASS))
+    alloc = ServingAllocator(dict(TWO_CLASS), total_slots=32, mode="optperf")
+    rt = ServingRuntime(
+        engine, alloc, wl, nodes=list(range(8)),
+        config=ServingConfig(total_slots=32, resolve_every=0.5),
+    )
+    engine.scheduler = rt.scheduler
+    rt.post(NodeLeave(time=1.0, nodes=(2,)))
+    rt.post(NodeJoin(time=2.5, nodes=(2,)))
+    rep = rt.run()
+    assert rep.summary["dropped"] == 0
+
+
+def test_refit_tracks_capacity_drift():
+    """Bootstrap lies (node 0 listed fast, actually 8x slower): telemetry
+    refits recover the true law and the re-solve strips its slots."""
+    boot = {i: (0.004, 0.03) for i in range(4)}
+    truth = dict(boot)
+    truth[0] = (0.032, 0.03)
+    wl = generate_requests(200, seed=11, rate=30.0, gen_mean=8, gen_max=64)
+    alloc = ServingAllocator(dict(boot), total_slots=16, mode="optperf")
+    before = alloc.solve([0, 1, 2, 3])
+    rt = ServingRuntime(
+        SimServingEngine(truth), alloc, wl, nodes=[0, 1, 2, 3],
+        config=ServingConfig(total_slots=16, resolve_every=0.5),
+    )
+    rep = rt.run()
+    assert rep.summary["dropped"] == 0
+    fitted_alpha, _ = alloc.coeffs(0)
+    assert fitted_alpha == pytest.approx(0.032, rel=1e-3)
+    assert rep.allocations[0] < before[0]
+
+
+def test_quarantine_requeues_and_recovers():
+    """A node whose ticks blow past factor*predicted gets quarantined
+    (in-flight requeued) and rejoins later; nothing is dropped."""
+    coeffs = {0: (0.01, 0.01), 1: (0.01, 0.01)}
+    truth = dict(coeffs)
+    truth[1] = (0.2, 0.2)  # 20x slower than the model claims
+    wl = generate_requests(60, seed=3, rate=20.0, gen_mean=6, gen_max=32)
+    rt = ServingRuntime(
+        SimServingEngine(truth),
+        ServingAllocator(dict(coeffs), total_slots=8, mode="uniform"),
+        wl, nodes=[0, 1],
+        config=ServingConfig(
+            total_slots=8, quarantine_factor=3.0,
+            quarantine_patience=2, rejoin_after=2.0,
+        ),
+    )
+    rep = rt.run()
+    assert rep.counters["quarantines"] >= 1
+    assert rep.summary["dropped"] == 0
+    assert rep.summary["completed"] == rep.summary["requests"]
+
+
+def test_all_nodes_lost_strands_remainder_as_dropped():
+    wl = generate_requests(40, seed=2, rate=50.0, gen_mean=8)
+    rt = ServingRuntime(
+        SimServingEngine({0: (0.01, 0.01)}),
+        ServingAllocator({0: (0.01, 0.01)}, total_slots=4),
+        wl, nodes=[0],
+    )
+    rt.post(NodeLeave(time=0.3, nodes=(0,)))
+    rep = rt.run()
+    assert rep.summary["dropped"] > 0
+    assert rep.summary["completed"] + rep.summary["dropped"] == 40
+
+
+# ---------------------------------------------------------------------------
+# pipeline streaming (satellite: training path must be byte-identical)
+# ---------------------------------------------------------------------------
+
+# sha256 of SyntheticLM(vocab=512, seq_len=32, seed=3).batch(0, 8) — pins the
+# training-path bytes the streaming refactor must not disturb.
+_GOLDEN_BATCH0 = "af916a40aec843ca49b65724eaf41e4677626d127c32aac62a1f7442d931ba57"
+
+
+def test_training_batch_bytes_unchanged():
+    b = SyntheticLM(vocab=512, seq_len=32, seed=3).batch(0, 8)
+    digest = hashlib.sha256(b["tokens"].tobytes() + b["labels"].tobytes())
+    assert digest.hexdigest() == _GOLDEN_BATCH0
+
+
+@pytest.mark.parametrize("threaded", [False, True])
+def test_stream_matches_stepwise_batches(threaded):
+    src = SyntheticLM(vocab=512, seq_len=32, seed=3)
+    got = list(src.stream(8, steps=5, threaded=threaded, depth=2))
+    assert len(got) == 5
+    for step, b in enumerate(got):
+        ref = src.batch(step, 8)
+        assert np.array_equal(b["tokens"], ref["tokens"])
+        assert np.array_equal(b["labels"], ref["labels"])
+
+
+def test_stream_start_offset_and_close():
+    src = SyntheticLM(vocab=64, seq_len=8, seed=1)
+    with src.stream(4, start=10, steps=3, threaded=True, depth=1) as s:
+        first = next(s)
+        assert np.array_equal(first["tokens"], src.batch(10, 4)["tokens"])
+    # closed: iteration ends
+    assert list(s) == []
+
+
+def test_stream_propagates_source_errors():
+    def boom(step):
+        raise RuntimeError("bad shard")
+
+    s = BoundedStream(boom, steps=2, threaded=True)
+    with pytest.raises(RuntimeError, match="bad shard"):
+        next(s)
+
+
+def test_prompts_from_stream_covers_all_requests():
+    src = SyntheticLM(vocab=512, seq_len=16, seed=3)
+    wl = generate_requests(25, seed=4, prompt_min=4, prompt_max=48)
+    prompts = prompts_from_stream(src.stream(8, steps=100), wl.requests)
+    assert set(prompts) == {r.rid for r in wl.requests}
+    for r in wl.requests:
+        assert prompts[r.rid].shape == (r.prompt_len,)
+        assert prompts[r.rid].dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# fused prefill + real engine (JAX-compiling: slow lane)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def olmo_api():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_api
+
+    api = get_api("olmo-1b", reduced=True)
+    params = api.init(jax.random.PRNGKey(0))
+    return api, params
+
+
+@pytest.mark.slow
+def test_fused_prefill_matches_stepped_loop(olmo_api):
+    import jax
+    import jax.numpy as jnp
+
+    api, params = olmo_api
+    B, S, T = 2, 12, 32
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (B, S), 0, api.cfg.vocab, jnp.int32
+    )
+    assert api.supports_prefill()
+    fused_logits, fused = api.prefill(params, api.init_cache(B, T), toks)
+    stepped = api.init_cache(B, T)
+    rows = []
+    for p in range(S):
+        lg, stepped = api.decode_step(
+            params, stepped, toks[:, p : p + 1], jnp.int32(p)
+        )
+        rows.append(lg)
+    stepped_logits = jnp.concatenate(rows, axis=1)
+    assert int(fused["pos"]) == int(stepped["pos"]) == S
+    np.testing.assert_allclose(
+        np.asarray(fused_logits), np.asarray(stepped_logits), atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(fused["k"][:, :, :S]), np.asarray(stepped["k"][:, :, :S]),
+        atol=2e-5,
+    )
+    # Continuation from either cache produces matching next-token logits.
+    n1, _ = api.decode_step(params, fused, toks[:, :1], jnp.int32(S))
+    n2, _ = api.decode_step(params, stepped, toks[:, :1], jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(n2), atol=2e-4)
+
+
+@pytest.mark.slow
+def test_prefill_unsupported_family_raises():
+    pytest.importorskip("jax")
+    from repro.configs import get_api
+
+    api = get_api("rwkv6-7b", reduced=True)
+    assert not api.supports_prefill()
+    with pytest.raises(NotImplementedError):
+        api.prefill(None, None, None)
+
+
+@pytest.mark.slow
+def test_prefill_rejects_undersized_cache(olmo_api):
+    import jax
+    import jax.numpy as jnp
+
+    api, params = olmo_api
+    toks = jnp.zeros((1, 16), jnp.int32)
+    with pytest.raises(ValueError):
+        api.prefill(params, api.init_cache(1, 8), toks)
+    del jax
+
+
+@pytest.mark.slow
+def test_real_engine_serves_with_churn_zero_drops(olmo_api):
+    from repro.serving import RealServingEngine
+
+    api, params = olmo_api
+    wl = generate_requests(
+        8, seed=5, rate=50.0, prompt_min=8, prompt_max=8,
+        gen_min=2, gen_max=6, gen_mean=4, token_budget=10.0,
+    )
+    coeffs = {0: (0.01, 0.01), 1: (0.01, 0.01)}
+    engine = RealServingEngine(api, params, max_len=32)
+    rt = ServingRuntime(
+        engine,
+        ServingAllocator(dict(coeffs), total_slots=4),
+        wl, nodes=[0, 1],
+        config=ServingConfig(total_slots=4),
+    )
+    rt.post(NodeLeave(time=wl.requests[2].arrival, nodes=(1,)))
+    rep = rt.run()
+    assert rep.summary["dropped"] == 0
+    assert rep.summary["completed"] == 8
+    assert rep.counters["leaves"] == 1
+    # Generated token streams are model outputs, bounded by the vocab.
+    for rec in rt.metrics.records():
+        assert len(rec.token_times) >= rec.gen_len
