@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -30,11 +30,22 @@ from repro.core.batch_policy import (
     BatchBounds,
     BatchSizePolicy,
     PolicyTelemetry,
+    lr_scale_for,
     make_batch_policy,
 )
 from repro.core.gns import GNSState, estimate_gns, gns_update, gns_weights
-from repro.core.goodput import BatchSizeSelector, adascale_gain, sqrt_lr_scale
-from repro.core.optperf import OptPerfSolution, round_batches, solve_optperf
+from repro.core.goodput import (
+    BatchSizeSelector,
+    adascale_gain,
+    sqrt_lr_scale,
+    statistical_efficiency,
+)
+from repro.core.optperf import (
+    OptPerfSolution,
+    round_batches,
+    solve_optperf,
+    solve_optperf_batch,
+)
 from repro.core.perf_model import (
     ClusterPerfModel,
     CommModel,
@@ -45,7 +56,19 @@ from repro.core.perf_model import (
 )
 from repro.core.simulator import StepMeasurement
 
-__all__ = ["CannikinController", "EpochPlan", "ControllerStats"]
+__all__ = [
+    "CannikinController",
+    "EpochPlan",
+    "ControllerStats",
+    "FusedSweepContext",
+    "FusedProposal",
+    "FUSED_CERT_TOL",
+]
+
+# Relative tolerance for certifying an on-device (float32) fused-epoch plan
+# against the host float64 two-program oracle — same bar the jax sweep
+# engine's own certification uses.
+FUSED_CERT_TOL = 1e-5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,8 +83,42 @@ class EpochPlan:
     phase: str                             # "bootstrap" | "optperf"
     solution: Optional[OptPerfSolution] = None
     # Provenance: which BatchSizePolicy proposed this total batch (None for
-    # bootstrap plans — no policy is consulted before a model exists).
+    # bootstrap plans — no policy is consulted before a model exists;
+    # "<policy>+fused" when the plan consumed an on-device fused proposal).
     batch_policy: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSweepContext:
+    """Everything a fused backend epoch needs to run the goodput sweep on
+    device: the refit model's prefetched device coefficients, the candidate
+    grid (device + host views), the water-fill lower bracket, and the
+    reference batch for Eq. (6) efficiency.  ``model`` pins the exact host
+    model the certification oracle must re-solve against."""
+
+    model: ClusterPerfModel
+    coeffs: Any                 # optperf_jax.DeviceCoeffs
+    candidates: Any             # (C,) device array, coeffs dtype
+    candidates_np: np.ndarray   # (C,) float64 host view
+    lo0: float
+    ref_batch: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedProposal:
+    """What the fused device program proposed for the next epoch: the
+    goodput-argmax candidate, its water-filled partition, and the full
+    sweep telemetry the host certification checks against the float64
+    oracle."""
+
+    best_index: int
+    total_batch: float
+    batches: np.ndarray         # (n,) real-valued water-fill partition
+    t_star: float               # winner's cluster time
+    t_stars: np.ndarray         # (C,) per-candidate cluster times
+    goodputs: np.ndarray        # (C,) device goodput landscape
+    b_noise: float              # epoch-final on-device GNS estimate
+    sweep_iters: int
 
 
 @dataclasses.dataclass
@@ -75,6 +132,14 @@ class ControllerStats:
     # (cold = first sweep, membership change, or coefficient-regime change).
     warm_sweeps: int = 0
     cold_sweeps: int = 0
+    # Fused-mode observability: plans consumed from on-device proposals,
+    # host-float64 certifications run (off the critical path), certification
+    # failures (any failure permanently falls back to the two-program path),
+    # and the worst relative deviation a certification ever measured.
+    fused_plans: int = 0
+    fused_certifications: int = 0
+    fused_cert_failures: int = 0
+    fused_max_rel_err: float = 0.0
 
     def overhead_fraction(self, training_seconds: float) -> float:
         if training_seconds <= 0:
@@ -157,6 +222,9 @@ class CannikinController:
         self._last_plan: Optional[EpochPlan] = None
         self._model: Optional[ClusterPerfModel] = None
         self._last_loss = float("nan")
+        self._fused_ctx: Optional[FusedSweepContext] = None
+        self._fused_pending: Optional[Tuple[FusedSweepContext, FusedProposal]] = None
+        self._fused_disabled = False
         if batch_policy is None or isinstance(batch_policy, str):
             if not adaptive:
                 chosen = "fixed"
@@ -348,7 +416,7 @@ class CannikinController:
             idx += 1
         return [int(x) for x in b]
 
-    def plan_epoch(self) -> EpochPlan:
+    def plan_epoch(self, *, prefer_fused: bool = False) -> EpochPlan:
         """Produce the next epoch's configuration.
 
         The total-batch decision is delegated to ``self.policy`` (the
@@ -359,6 +427,12 @@ class CannikinController:
         batch and LR scale.  Splitting the total across nodes stays the
         controller's job: OptPerf solve (reusing the policy's solution if
         it already ran the sweep), Eq.-(9) rounding, local-bound clamping.
+
+        ``prefer_fused=True`` consumes a staged on-device fused proposal
+        (see :meth:`stage_fused_proposal`) instead of asking the policy —
+        identical plan structure, zero host solve on the critical path.
+        With nothing staged (first fused epoch, bootstrap, certification
+        fallback) the normal path runs.
         """
         t0 = time.perf_counter()
         epoch = self._epoch
@@ -387,8 +461,15 @@ class CannikinController:
                 # epochs' measurements instead of killing the job.
                 model = None
         if model is None:
+            # Any staged fused proposal was built by a model that no longer
+            # exists for planning purposes; drop it rather than serve it
+            # after a bootstrap interlude.
+            self._fused_pending = None
             plan = self._bootstrap_plan(epoch)
-        else:
+            self._finish_plan(plan, t0)
+            return plan
+        plan = self._fused_plan(epoch) if prefer_fused else None
+        if plan is None:
             proposal = self.policy.propose(model, self.batch_bounds)
             best_b = int(proposal.total_batch)
             sol = proposal.solution
@@ -407,13 +488,157 @@ class CannikinController:
                 solution=sol,
                 batch_policy=self.policy.name,
             )
+        self._finish_plan(plan, t0)
+        return plan
+
+    def _finish_plan(self, plan: EpochPlan, t0: float) -> None:
         self.stats.overhead_seconds += time.perf_counter() - t0
         self.stats.full_sweeps = self.selector.full_sweeps
         self.stats.incremental_updates = self.selector.incremental_updates
         self.stats.warm_sweeps = self.selector.warm_sweeps
         self.stats.cold_sweeps = self.selector.cold_sweeps
         self._last_plan = plan
-        return plan
+
+    # ------------------------------------------------------------------
+    # fused on-device planning (sweep-in-jit)
+    # ------------------------------------------------------------------
+
+    def fused_context(self) -> Optional[FusedSweepContext]:
+        """The device-side sweep inputs for a fused backend epoch, or None
+        whenever fused mode cannot run (bootstrap, non-adaptive, a policy
+        other than cannikin-gns, jax missing, or a past certification
+        failure) — callers then take the two-program path unchanged."""
+        if not self.adaptive or self._fused_disabled:
+            return None
+        if getattr(self.policy, "name", "") != "cannikin-gns":
+            return None
+        model = self._model
+        if model is None:
+            return None
+        if self._fused_ctx is not None and self._fused_ctx.model is model:
+            return self._fused_ctx
+        try:
+            from repro.core import optperf_jax
+        except ImportError:  # pragma: no cover - jax present in CI image
+            return None
+        if not optperf_jax.HAS_JAX:
+            return None
+        import jax.numpy as jnp
+
+        from repro.core.optperf import _problem_from_model  # noqa: SLF001
+
+        coeffs = optperf_jax.device_coeffs(model)
+        _, lo0 = _problem_from_model(model)
+        cand_np = np.asarray(self.selector.candidates, np.float64)
+        ctx = FusedSweepContext(
+            model=model,
+            coeffs=coeffs,
+            candidates=jnp.asarray(cand_np, coeffs.alphas.dtype),
+            candidates_np=cand_np,
+            lo0=float(lo0),
+            ref_batch=float(self.ref_batch),
+        )
+        self._fused_ctx = ctx
+        return ctx
+
+    def stage_fused_proposal(
+        self, ctx: FusedSweepContext, proposal: FusedProposal
+    ) -> None:
+        """Certify an on-device proposal against the host float64 oracle
+        and stage it for the next ``plan_epoch(prefer_fused=True)``.
+
+        Runs *after* the epoch that produced the proposal — never between
+        plan and execute, which is the whole point of fused mode.  A
+        certification failure permanently disables fused planning (the
+        two-program fallback is bit-compatible, so this is safe, and a
+        float32 disagreement is systemic rather than transient)."""
+        if self._fused_disabled:
+            return
+        self._certify_fused(ctx, proposal)
+        if not self._fused_disabled:
+            self._fused_pending = (ctx, proposal)
+
+    def _certify_fused(self, ctx: FusedSweepContext, prop: FusedProposal) -> None:
+        """Host float64 re-solve of the exact sweep the device ran: same
+        model, same candidates, same (device-estimated) noise scale."""
+        t0 = time.perf_counter()
+        cands = ctx.candidates_np
+        sols = solve_optperf_batch(ctx.model, [float(b) for b in cands])
+        opt_perfs = np.asarray(sols.opt_perfs, np.float64)
+        eff = statistical_efficiency(prop.b_noise, cands, ctx.ref_batch)
+        goodputs = cands / opt_perfs * eff
+        host_best = int(np.argmax(goodputs))
+        rel = float(
+            np.max(
+                np.abs(np.asarray(prop.t_stars) - opt_perfs)
+                / np.maximum(opt_perfs, 1e-12)
+            )
+        )
+        ok = rel <= FUSED_CERT_TOL
+        if ok and host_best != prop.best_index:
+            # A genuine goodput near-tie may flip the argmax in float32;
+            # only a materially better host winner is a failure.
+            gap = abs(goodputs[host_best] - goodputs[prop.best_index])
+            ok = gap <= FUSED_CERT_TOL * max(goodputs[host_best], 1e-12)
+        if ok:
+            host_batches = np.asarray(sols.batches[prop.best_index], np.float64)
+            total = float(cands[prop.best_index])
+            rel_b = float(
+                np.max(np.abs(np.asarray(prop.batches) - host_batches))
+                / max(total, 1e-12)
+            )
+            ok = rel_b <= FUSED_CERT_TOL
+            rel = max(rel, rel_b)
+        self.stats.fused_certifications += 1
+        self.stats.fused_max_rel_err = max(self.stats.fused_max_rel_err, rel)
+        if not ok:
+            self.stats.fused_cert_failures += 1
+            self._fused_disabled = True
+            self._fused_pending = None
+        self.stats.overhead_seconds += time.perf_counter() - t0
+
+    def _fused_plan(self, epoch: int) -> Optional[EpochPlan]:
+        """Turn the staged (certified) device proposal into an EpochPlan:
+        integer rounding, local-bound clamping, and the policy's LR rule
+        evaluated at the device-estimated noise scale."""
+        pending, self._fused_pending = self._fused_pending, None
+        if pending is None:
+            return None
+        ctx, prop = pending
+        total = int(round(prop.total_batch))
+        batches = self._apply_bounds(
+            round_batches([float(b) for b in prop.batches], total), total
+        )
+        lr = lr_scale_for(
+            self.lr_rule,
+            batch=total,
+            ref_batch=self.ref_batch,
+            b_noise=prop.b_noise,
+        )
+        states = tuple(
+            "compute" if c else "comm"
+            for c in ctx.model.compute_bottleneck_mask(
+                np.asarray(prop.batches, np.float64)
+            )
+        )
+        sol = OptPerfSolution(
+            total_batch=float(prop.total_batch),
+            opt_perf=float(prop.t_star),
+            batches=tuple(float(b) for b in prop.batches),
+            bottleneck=states,
+            method="waterfill/fused-device",
+        )
+        self.stats.fused_plans += 1
+        return EpochPlan(
+            epoch=epoch,
+            total_batch=total,
+            batches=tuple(batches),
+            lr_scale=float(lr),
+            predicted_batch_time=float(prop.t_star),
+            phase="optperf",
+            solution=sol,
+            batch_policy=f"{self.policy.name}+fused",
+        )
 
     def _bootstrap_plan(self, epoch: int) -> EpochPlan:
         total = self.ref_batch
@@ -468,6 +693,7 @@ class CannikinController:
         self.fitters = {new: self.fitters[old] for new, old in enumerate(keep)}
         self.n = len(keep)
         self._evict_device_export()
+        self._drop_fused_state()
         self._model = None
         # Cluster membership changed: cached solutions AND the warm-start
         # bracket state are both stale.
@@ -484,9 +710,17 @@ class CannikinController:
             self.fitters[i] = OnlineNodeFitter()
         self.n += count
         self._evict_device_export()
+        self._drop_fused_state()
         self._model = None
         self.selector.invalidate()
         self._invalidate_policy()
+
+    def _drop_fused_state(self) -> None:
+        """Membership changed: the staged proposal and cached context refer
+        to a cluster that no longer exists.  ``_fused_disabled`` survives —
+        a float32 certification failure is systemic, not shape-specific."""
+        self._fused_pending = None
+        self._fused_ctx = None
 
     def _invalidate_policy(self) -> None:
         """Tell the policy its cached cluster view is stale (cannikin-gns

@@ -27,6 +27,7 @@ from repro.core.optperf import (
     BatchedOptPerfSolution,
     OptPerfSolution,
     solve_optperf,
+    solve_optperf_algorithm1_batch,
     solve_optperf_batch,
 )
 from repro.core.perf_model import ClusterPerfModel
@@ -268,6 +269,17 @@ class BatchSizeSelector:
                 self.warm_sweeps += 1
             self._warm_t_stars = np.asarray(batch_sol.t_stars, dtype=np.float64)
             self._warm_signature = self._model_signature(model)
+            return
+        if self.solver == "algorithm1":
+            # Batched boundary checks: Check 1/Check 2 vectorized across the
+            # whole candidate vector, bit-equal per row to the scalar loop
+            # below (which stays the oracle; see
+            # :func:`repro.core.optperf.solve_optperf_algorithm1_batch`).
+            for b, sol in zip(
+                ordered, solve_optperf_algorithm1_batch(model, ordered)
+            ):
+                self._optperf_cache[b] = sol
+                self._state_cache[b] = sol.bottleneck
             return
         hint: Optional[int] = None
         for b in ordered:

@@ -71,6 +71,7 @@ __all__ = [
     "OptPerfSolution",
     "BatchedOptPerfSolution",
     "solve_optperf_algorithm1",
+    "solve_optperf_algorithm1_batch",
     "solve_optperf_waterfill",
     "solve_optperf_waterfill_subset",
     "solve_optperf_waterfill_subsets",
@@ -324,6 +325,90 @@ def solve_optperf_algorithm1(
     # No consistent partition (can happen when the unconstrained solve drives
     # some b_i < 0): fall back to the clamped water-fill oracle.
     return solve_optperf_waterfill(model, total_batch)
+
+
+def solve_optperf_algorithm1_batch(
+    model: ClusterPerfModel,
+    total_batches: Sequence[float],
+    *,
+    boundary_hint: Optional[int] = None,
+) -> List[OptPerfSolution]:
+    """Algorithm 1 over a whole candidate vector, closed forms vectorized.
+
+    The batched ``boundary_hint`` analogue: Check 1 and Check 2 — the two
+    closed-form boundary checks that resolve the overwhelming majority of a
+    goodput sweep's candidates — are evaluated for *all* candidates in one
+    array pass (the per-candidate scalar arithmetic is reproduced exactly:
+    the reduction constants ``K = sum(offset/slope)`` and ``S = sum(1/slope)``
+    are computed once and each candidate's ``mu = (B + K)/S`` and
+    ``b = (mu - offset)/slope`` use the identical float operations, so every
+    row is bit-equal to :func:`solve_optperf_algorithm1` on that candidate).
+    Only the candidates both checks reject fall back to the scalar mixed-case
+    search, chained through §4.5 boundary hints exactly like the scalar
+    sweep: each candidate (closed-form or mixed) updates the hint for the
+    next with its compute-node count.
+
+    The scalar path stays the bit-exactness oracle — a seeded equivalence
+    test pins ``solution_batch[i] == solution_scalar[i]`` field-for-field.
+    """
+    totals = [float(b) for b in total_batches]
+    if any(b <= 0 for b in totals):
+        raise ValueError("total batch must be positive")
+    model.validate()
+    n = model.n
+    c = model.coeffs
+    t_u = model.comm.t_u
+    t_comm = model.comm.t_comm
+    totals_arr = np.asarray(totals, dtype=np.float64)
+
+    # Check 1 for every candidate: the scalar path computes
+    # mu = (B + (cs*inv).sum()) / inv.sum() with inv = 1/alphas; hoisting the
+    # two reductions out of the candidate loop leaves per-candidate work at
+    # exactly one add, one divide, and one (mu - cs)*inv row — the same float
+    # ops, now broadcast.
+    inv_c = 1.0 / c.alphas
+    k_c = (c.cs * inv_c).sum()
+    s_c = inv_c.sum()
+    mus_c = (totals_arr + k_c) / s_c
+    batches_c = (mus_c[:, None] - c.cs) * inv_c
+    mask_c = model.compute_bottleneck_mask(batches_c)
+    ok_c = (batches_c.min(axis=1) >= 0) & mask_c.all(axis=1)
+
+    # Check 2, identically vectorized.
+    inv_s = 1.0 / c.betas
+    k_s = (c.ds * inv_s).sum()
+    s_s = inv_s.sum()
+    mus_s = (totals_arr + k_s) / s_s
+    batches_s = (mus_s[:, None] - c.ds) * inv_s
+    mask_s = model.compute_bottleneck_mask(batches_s)
+    ok_s = (batches_s.min(axis=1) >= 0) & (~mask_s.any(axis=1))
+
+    solutions: List[OptPerfSolution] = []
+    hint = boundary_hint
+    for j, total in enumerate(totals):
+        if ok_c[j]:
+            sol = OptPerfSolution(
+                total_batch=total,
+                opt_perf=float(mus_c[j]) + t_u,
+                batches=tuple(float(b) for b in batches_c[j]),
+                bottleneck=("compute",) * n,
+                method="algorithm1/check1",
+            )
+        elif ok_s[j]:
+            sol = OptPerfSolution(
+                total_batch=total,
+                opt_perf=float(mus_s[j]) + t_comm,
+                batches=tuple(float(b) for b in batches_s[j]),
+                bottleneck=("comm",) * n,
+                method="algorithm1/check2",
+            )
+        else:
+            sol = solve_optperf_algorithm1(model, total, boundary_hint=hint)
+        solutions.append(sol)
+        # §4.5 hint chaining, identical to the scalar sweep: every candidate
+        # (closed-form rows included) reseeds the next mixed search.
+        hint = sum(1 for s in sol.bottleneck if s == "compute")
+    return solutions
 
 
 # ---------------------------------------------------------------------------

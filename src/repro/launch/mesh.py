@@ -16,8 +16,10 @@ from repro.sharding.rules import MeshRules
 __all__ = [
     "enter_mesh",
     "make_production_mesh",
+    "make_node_mesh",
     "make_rules",
     "mesh_axis_sizes",
+    "node_shard_count",
     "FSDP_ARCHS",
     "TRAIN_MICROBATCHES",
 ]
@@ -79,6 +81,39 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def node_shard_count(n_nodes: int, device_count: Optional[int] = None) -> int:
+    """Shard count for the RealBackend node axis: the largest divisor of
+    ``n_nodes`` that fits the available local devices.
+
+    Divisibility (rather than padding to the device count) is deliberate:
+    padded zero-mask node rows would drag the nanmedian inside
+    ``guard_weights`` toward zero and flag every real node as an outlier,
+    so the node axis is never padded — shards just get n/D nodes each.
+    """
+    if n_nodes <= 0:
+        raise ValueError("n_nodes must be positive")
+    if device_count is None:
+        device_count = jax.local_device_count()
+    d = max(1, min(n_nodes, device_count))
+    while n_nodes % d:
+        d -= 1
+    return d
+
+
+def make_node_mesh(n_nodes: int, devices=None):
+    """1-D ``("nodes",)`` mesh over local devices for the sharded RealBackend.
+
+    Uses the first ``node_shard_count(n_nodes)`` local devices so the padded
+    ``(n, b_max)`` node axis splits evenly across shards.
+    """
+    import numpy as np
+
+    if devices is None:
+        devices = jax.local_devices()
+    d = node_shard_count(n_nodes, len(devices))
+    return jax.sharding.Mesh(np.asarray(devices[:d]), ("nodes",))
 
 
 def make_rules(

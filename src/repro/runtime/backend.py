@@ -49,10 +49,16 @@ from typing import (
 import numpy as np
 
 from repro.core.aggregation import ratios
-from repro.core.controller import CannikinController, EpochPlan
+from repro.core.controller import (
+    CannikinController,
+    EpochPlan,
+    FusedProposal,
+    FusedSweepContext,
+)
 from repro.core.gns import GNSState, estimate_gns, gns_update
 from repro.core.scheduler import JobSpec
 from repro.core.simulator import NodeProfile, SimulatedCluster, StepMeasurement
+from repro.runtime.transfers import TransferCounter
 
 __all__ = [
     "GradObservation",
@@ -295,6 +301,7 @@ class RealBackend:
         gns_decay: float = 0.9,
         injector: Any = None,            # Optional[FaultInjector]
         outlier_factor: Optional[float] = None,
+        sharded: bool = False,
     ) -> None:
         import jax
 
@@ -317,7 +324,14 @@ class RealBackend:
         self.sim_time = 0.0
         self.steps_done = 0
         self.anomalous_steps = 0       # steps with >= 1 excluded node (lifetime)
+        self.sharded = bool(sharded)
+        self.transfers = TransferCounter()
         self._step_cache: Dict[int, Callable] = {}
+        self._sharded_cache: Dict[Tuple[int, int], Callable] = {}
+        self._fused_cache: Dict[Tuple[int, int], Callable] = {}
+        self._meshes: Dict[int, Any] = {}        # shard count -> Mesh
+        self._mesh_rules: Dict[int, Any] = {}    # shard count -> MeshRules
+        self._mesh: Any = None                   # mesh for the configured node set
         self._job: Optional[str] = None
         self._node_ids: Tuple[int, ...] = ()
 
@@ -331,6 +345,48 @@ class RealBackend:
         )
         self._job = spec.name
         self._node_ids = tuple(int(n) for n in node_ids)
+        if self.sharded and self._node_ids:
+            # Rebuild the node mesh on node-set changes; compiled sharded
+            # steps are keyed by (n, shard count) so a changed shard count
+            # naturally re-traces while same-width reconfigurations reuse
+            # the cached programs.
+            self._mesh, _ = self._mesh_for(len(self._node_ids))
+
+    def _mesh_for(self, n: int) -> Tuple[Any, Any]:
+        """(Mesh, MeshRules) for an n-node sharded step, cached by shard
+        count (the largest divisor of n that fits the local devices)."""
+        from repro.launch.mesh import (
+            make_node_mesh,
+            mesh_axis_sizes,
+            node_shard_count,
+        )
+        from repro.sharding.rules import MeshRules
+
+        d = node_shard_count(n)
+        mesh = self._meshes.get(d)
+        if mesh is None:
+            mesh = make_node_mesh(n)
+            self._meshes[d] = mesh
+            self._mesh_rules[d] = MeshRules(
+                mesh_axes=mesh_axis_sizes(mesh), node_axis="nodes"
+            )
+        return mesh, self._mesh_rules[d]
+
+    def _node_placer(self, n: int, *, stacked: bool = False) -> Callable:
+        """device_put with the node-axis NamedSharding — the explicit h2d
+        seam for sharded execution.  ``stacked`` handles the fused layout
+        with a leading (steps,) scan dim before the node dim."""
+        import jax
+        from jax.sharding import NamedSharding
+
+        mesh, rules = self._mesh_for(n)
+        lead: List[Optional[str]] = [None] if stacked else []
+
+        def place(arr: np.ndarray):
+            axes = lead + ["nodes"] + [None] * (arr.ndim - len(lead) - 1)
+            return jax.device_put(arr, NamedSharding(mesh, rules.spec(axes)))
+
+        return place
 
     # -- gradient engine -------------------------------------------------
 
@@ -348,6 +404,16 @@ class RealBackend:
         zero and the update a no-op."""
         if b_max in self._step_cache:
             return self._step_cache[b_max]
+        import jax
+
+        fn = jax.jit(self._build_step_body())
+        self._step_cache[b_max] = fn
+        return fn
+
+    def _build_step_body(self) -> Callable:
+        """The un-jitted single-device step (vmapped per-node backward).
+        Shared verbatim between :meth:`_node_grad_fn` (jitted directly) and
+        the fused epoch program (scanned inside one jit)."""
         import jax
         import jax.numpy as jnp
 
@@ -401,8 +467,123 @@ class RealBackend:
             new_params, new_opt = optimizer.update(agg, opt_state, params, lr_scale)
             return new_params, new_opt, loss, sq_i, sq_g, valid
 
-        fn = jax.jit(step)
-        self._step_cache[b_max] = fn
+        return step
+
+    def _build_sharded_step_body(self, n: int) -> Callable:
+        """The un-jitted multi-device step: the node axis split over the
+        ``("nodes",)`` mesh via ``shard_map``, Eq. (9) aggregation as an
+        on-device ``psum``.
+
+        Each shard backprops its n/D nodes locally (the same vmapped
+        per-node backward), all-gathers the (n,) gradient square-norms so
+        every shard evaluates the *global* anomaly guard identically, then
+        psums its weighted local partials into the replicated Eq. (9)
+        aggregate.  The optimizer update runs outside shard_map on the
+        replicated aggregate.  The global loss is composed from per-node
+        means by their token-weight sums — algebraically equal to the vmap
+        path's full-batch forward (see models.registry._token_loss), to
+        float32 roundoff."""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.aggregation import guard_weights
+        from repro.optim.optimizers import global_norm
+        from repro.train.step import node_step_specs
+
+        mesh, rules = self._mesh_for(n)
+        shard = n // int(mesh.devices.size)
+        specs = node_step_specs(rules)
+        api, optimizer = self.api, self.optimizer
+        outlier_factor = self.outlier_factor
+
+        def node_loss(params, tokens, labels, mask):
+            loss, _ = api.loss(
+                params,
+                {"tokens": tokens, "labels": labels, "weights": mask},
+            )
+            return loss
+
+        val_grad = jax.value_and_grad(node_loss)
+
+        def shard_body(params, tokens, labels, mask, r, poison):
+            # Local shapes: tokens/labels (n/D, b_max, S); mask (n/D, b_max);
+            # params/r/poison replicated.
+            losses, grads = jax.vmap(val_grad, in_axes=(None, 0, 0, 0))(
+                params, tokens, labels, mask
+            )
+            lo = jax.lax.axis_index("nodes") * shard
+            poison_local = jax.lax.dynamic_slice(poison, (lo,), (shard,))
+            grads = jax.tree_util.tree_map(
+                lambda g: g
+                * poison_local.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype),
+                grads,
+            )
+            sq_local = jax.vmap(lambda g: global_norm(g) ** 2)(grads)
+            sq_i = jax.lax.all_gather(sq_local, "nodes", tiled=True)  # (n,)
+            w, valid = guard_weights(sq_i, r, outlier_factor=outlier_factor)
+            w_local = jax.lax.dynamic_slice(w, (lo,), (shard,))
+            valid_local = jax.lax.dynamic_slice(valid, (lo,), (shard,))
+            agg = jax.tree_util.tree_map(
+                lambda g: jax.lax.psum(
+                    jnp.tensordot(
+                        w_local.astype(jnp.float32),
+                        jnp.where(
+                            valid_local.reshape((-1,) + (1,) * (g.ndim - 1)), g, 0
+                        ).astype(jnp.float32),
+                        axes=1,
+                    ),
+                    "nodes",
+                ).astype(g.dtype),
+                grads,
+            )
+            sq_g = global_norm(agg) ** 2
+            # Global mean loss from per-node means: node i's token-weight
+            # sum is mask_i.sum() * S (registry._token_loss broadcasts the
+            # per-sample mask over the sequence dim), and loss_i * w_sum_i
+            # recovers its loss summand; all-padding nodes contribute 0.
+            w_sum = mask.sum(axis=1) * jnp.float32(tokens.shape[-1])
+            loss_num = jax.lax.psum((losses * w_sum).sum(), "nodes")
+            loss_den = jax.lax.psum(w_sum.sum(), "nodes")
+            loss = loss_num / jnp.maximum(loss_den, 1e-9)
+            return agg, loss, sq_i, sq_g, valid
+
+        smapped = shard_map(
+            shard_body,
+            mesh=mesh,
+            in_specs=(
+                P(),
+                specs["tokens"],
+                specs["labels"],
+                specs["mask"],
+                specs["replicated"],
+                specs["replicated"],
+            ),
+            out_specs=(P(), P(), P(), P(), P()),
+            check_rep=False,
+        )
+
+        def step(params, opt_state, tokens, labels, mask, r, lr_scale, poison):
+            agg, loss, sq_i, sq_g, valid = smapped(
+                params, tokens, labels, mask, r, poison
+            )
+            new_params, new_opt = optimizer.update(agg, opt_state, params, lr_scale)
+            return new_params, new_opt, loss, sq_i, sq_g, valid
+
+        return step
+
+    def _node_grad_fn_sharded(self, n: int) -> Callable:
+        """Jitted sharded step, cached by (n, shard count); padded-width
+        shape changes retrace inside the cached jit wrapper as usual."""
+        mesh, _ = self._mesh_for(n)
+        key = (n, int(mesh.devices.size))
+        if key in self._sharded_cache:
+            return self._sharded_cache[key]
+        import jax
+
+        fn = jax.jit(self._build_sharded_step_body(n))
+        self._sharded_cache[key] = fn
         return fn
 
     def execute(
@@ -419,7 +600,14 @@ class RealBackend:
         b_max = _quantize(int(b_arr.max()))
         n = len(batches)
         r = jnp.asarray(ratios(batches), jnp.float32)
-        step_fn = self._node_grad_fn(b_max)
+        use_sharded = self.sharded and n > 0
+        if use_sharded:
+            step_fn = self._node_grad_fn_sharded(n)
+            place = self._node_placer(n)
+        else:
+            step_fn = self._node_grad_fn(b_max)
+            place = jnp.asarray
+        self.transfers.count_h2d(2)  # r + poison, shipped once per epoch
 
         node_ids = self._node_ids if len(self._node_ids) == n else tuple(range(n))
         if self.injector is not None:
@@ -443,12 +631,16 @@ class RealBackend:
             tok[:, :w], lab[:, :w] = padded["tokens"], padded["labels"]
             for i, b in enumerate(batches):
                 msk[i, :b] = 1.0
+            # 4 h2d per step (tok/lab/msk + lr scalar), 4 d2h pulls below —
+            # the per-step host round-trips the fused path collapses.
+            self.transfers.count_h2d(4)
+            self.transfers.count_d2h(4)
             self.params, self.opt_state, loss, sq_i, sq_g, valid = step_fn(
                 self.params,
                 self.opt_state,
-                jnp.asarray(tok),
-                jnp.asarray(lab),
-                jnp.asarray(msk),
+                place(tok),
+                place(lab),
+                place(msk),
                 r,
                 jnp.float32(lr_scale),
                 poison,
@@ -487,6 +679,238 @@ class RealBackend:
             grad_anomalies=tuple(int(c) for c in anomaly_counts),
         )
 
+    # -- fused on-device epoch -------------------------------------------
+
+    def _fused_epoch_fn(self, n: int) -> Callable:
+        """One jitted program for a whole adaptive epoch: lax.scan over the
+        train steps (the same step body as the two-program path), an
+        on-device Theorem-4.1 GNS EMA, and the OptPerf goodput sweep +
+        Eq. (6) argmax + water-fill partition on the final state.  The host
+        touches the device exactly twice per epoch: one stacked-batch
+        shipment in, one telemetry-bundle pull out."""
+        use_sharded = self.sharded and n > 0
+        if use_sharded:
+            mesh, _ = self._mesh_for(n)
+            key = (n, int(mesh.devices.size))
+        else:
+            key = (n, 0)
+        if key in self._fused_cache:
+            return self._fused_cache[key]
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import optperf_jax
+        from repro.core.gns import local_estimates
+
+        step_body = (
+            self._build_sharded_step_body(n) if use_sharded
+            else self._build_step_body()
+        )
+        decay = float(self.gns_decay)
+
+        def epoch_fn(
+            params, opt_state, toks, labs, msks, r, lr_scale, poison,
+            b_vec, gns0, dc, cand, lo0, b0,
+        ):
+            total = b_vec.sum()
+
+            def body(carry, xs):
+                params, opt_state, (eg, es, cnt) = carry
+                tok, lab, msk = xs
+                params, opt_state, loss, sq_i, sq_g, valid = step_body(
+                    params, opt_state, tok, lab, msk, r, lr_scale, poison
+                )
+                if n >= 2:
+                    g_i, s_i = local_estimates(sq_i, sq_g, b_vec, total)
+                    # Theorem 4.1 minimum-variance weights, corrected
+                    # closed form (same as gns.estimate_gns): the host
+                    # tracker skips guarded/degenerate steps, so gate the
+                    # EMA on all-valid + finite estimates.
+                    w = (total - b_vec) / ((n - 1) * total)
+                    g_est = (w * g_i).sum()
+                    s_est = (w * s_i).sum()
+                    ok = valid.all() & jnp.isfinite(g_est) & jnp.isfinite(s_est)
+                else:
+                    g_est = jnp.float32(0.0)
+                    s_est = jnp.float32(0.0)
+                    ok = jnp.bool_(False)
+                eg = jnp.where(ok, decay * eg + (1.0 - decay) * g_est, eg)
+                es = jnp.where(ok, decay * es + (1.0 - decay) * s_est, es)
+                cnt = jnp.where(ok, cnt + 1, cnt)
+                return (params, opt_state, (eg, es, cnt)), (loss, sq_i, sq_g, valid)
+
+            (params, opt_state, (eg, es, cnt)), ys = jax.lax.scan(
+                body, (params, opt_state, gns0), (toks, labs, msks)
+            )
+            losses, sq_is, sq_gs, valids = ys
+            b_noise = jnp.where(
+                (cnt > 0) & (eg > 0.0),
+                jnp.maximum(es / jnp.where(eg > 0.0, eg, 1.0), 0.0),
+                jnp.inf,
+            )
+            t_stars, sweep_iters = optperf_jax.solve_optperf_sweep_device(
+                dc, cand, lo0
+            )
+            # Realized per-candidate OptPerf: finalize each partition and
+            # take the max node time — at small totals a clamped node's
+            # fixed floor sits above the bisected water level, and the host
+            # oracle's goodput uses the realized time.
+            parts = optperf_jax.device_partition(dc, t_stars[:, None], cand)
+            opt_perfs = optperf_jax.device_node_times(dc, parts).max(-1)
+            bn = jnp.maximum(b_noise, 0.0)
+            eff = jnp.where(jnp.isfinite(b_noise), (bn + b0) / (bn + cand), 1.0)
+            goodputs = (cand / opt_perfs) * eff
+            best = jnp.argmax(goodputs)
+            telemetry = (
+                losses, sq_is, sq_gs, valids, eg, es, cnt, b_noise,
+                opt_perfs, goodputs, best, parts[best], sweep_iters,
+            )
+            return params, opt_state, telemetry
+
+        fn = jax.jit(epoch_fn)
+        self._fused_cache[key] = fn
+        return fn
+
+    def execute_fused(
+        self,
+        batches: Sequence[int],
+        steps: int,
+        *,
+        lr_scale: float = 1.0,
+        ctx: FusedSweepContext,
+    ) -> Tuple[ExecutionResult, FusedProposal]:
+        """Run one adaptive epoch as a single fused device program and
+        return the on-device batch proposal for the *next* epoch alongside
+        the usual :class:`ExecutionResult`.
+
+        Exactly the same statistical semantics as :meth:`execute` (same
+        step body scanned, same guard, same GNS gating — the EMA runs in
+        float32 on device instead of float64 on host), plus the goodput
+        sweep over ``ctx.candidates`` evaluated against the epoch-final
+        noise scale.  The caller certifies the proposal off the critical
+        path via :meth:`CannikinController.stage_fused_proposal`.
+        """
+        if self.cluster is None:
+            raise RuntimeError("RealBackend not configured with a cluster")
+        import jax
+        import jax.numpy as jnp
+
+        from repro.data.pipeline import HeteroBatchPartitioner
+
+        batches = [int(b) for b in batches]
+        b_arr = np.asarray(batches, np.int64)
+        b_max = _quantize(int(b_arr.max()))
+        n = len(batches)
+        use_sharded = self.sharded and n > 0
+
+        node_ids = self._node_ids if len(self._node_ids) == n else tuple(range(n))
+        if self.injector is not None:
+            poison_np = self.injector.poison_factors(node_ids)
+        else:
+            poison_np = np.ones(n, np.float32)
+
+        # Stage the whole epoch's data host-side, ship it once.
+        toks = labs = msks = None
+        for s in range(steps):
+            raw = self.data.batch(self.steps_done, int(b_arr.sum()))
+            self.steps_done += 1
+            padded, _ = HeteroBatchPartitioner.padded(raw, batches)
+            seq = padded["tokens"].shape[-1]
+            if toks is None:
+                toks = np.zeros((steps, n, b_max, seq), np.int32)
+                labs = np.zeros((steps, n, b_max, seq), np.int32)
+                msks = np.zeros((steps, n, b_max), np.float32)
+                for i, b in enumerate(batches):
+                    msks[:, i, :b] = 1.0
+            w = padded["tokens"].shape[1]
+            toks[s, :, :w], labs[s, :, :w] = padded["tokens"], padded["labels"]
+
+        if use_sharded:
+            place = self._node_placer(n, stacked=True)
+            toks_d, labs_d, msks_d = place(toks), place(labs), place(msks)
+        else:
+            toks_d, labs_d, msks_d = (
+                jnp.asarray(toks), jnp.asarray(labs), jnp.asarray(msks)
+            )
+        gns0 = (
+            jnp.float32(self.gns.ema_g),
+            jnp.float32(self.gns.ema_s),
+            jnp.int32(self.gns.count),
+        )
+        # 3 stacked arrays + r/poison/lr/b_vec + 3 GNS carry scalars +
+        # lo0/b0 — every host value entering the program this epoch.
+        self.transfers.count_h2d(12)
+
+        fused_fn = self._fused_epoch_fn(n)
+        self.params, self.opt_state, telemetry = fused_fn(
+            self.params,
+            self.opt_state,
+            toks_d,
+            labs_d,
+            msks_d,
+            jnp.asarray(ratios(batches), jnp.float32),
+            jnp.float32(lr_scale),
+            jnp.asarray(poison_np, jnp.float32),
+            jnp.asarray(b_arr, jnp.float32),
+            gns0,
+            ctx.coeffs,
+            ctx.candidates,
+            float(ctx.lo0),
+            float(ctx.ref_batch),
+        )
+        pulled = jax.device_get(telemetry)
+        self.transfers.count_d2h(len(jax.tree_util.tree_leaves(telemetry)))
+        (
+            losses_a, sq_is, sq_gs, valids, eg, es, cnt, b_noise_dev,
+            t_stars, goodputs, best, best_batches, sweep_iters,
+        ) = pulled
+
+        self.gns = GNSState(ema_g=float(eg), ema_s=float(es), count=int(cnt))
+        anomaly_counts = (~np.asarray(valids, bool)).sum(axis=0)
+        losses: List[float] = [float(x) for x in np.asarray(losses_a)]
+        grad_obs: List[GradObservation] = []
+        for s in range(steps):
+            valid_np = np.asarray(valids[s], bool)
+            self.anomalous_steps += int(not valid_np.all())
+            grad_obs.append(
+                GradObservation(
+                    local_sqnorms=tuple(float(x) for x in np.asarray(sq_is[s])),
+                    global_sqnorm=float(sq_gs[s]),
+                    batches=tuple(batches),
+                    valid=tuple(bool(v) for v in valid_np),
+                )
+            )
+
+        epoch_seconds, measurements = self.cluster.run_epoch(batches, steps)
+        measurements = list(measurements)
+        if self.injector is not None:
+            epoch_seconds, measurements = self.injector.perturb(
+                self._job or "?", node_ids, epoch_seconds, measurements
+            )
+        self.sim_time += epoch_seconds
+
+        result = ExecutionResult(
+            epoch_seconds=epoch_seconds,
+            measurements=tuple(measurements),
+            losses=tuple(losses),
+            grad_observations=tuple(grad_obs),
+            b_noise=self.gns.b_noise,
+            grad_anomalies=tuple(int(c) for c in anomaly_counts),
+        )
+        best_i = int(best)
+        cand_np = np.asarray(ctx.candidates_np, np.float64)
+        proposal = FusedProposal(
+            best_index=best_i,
+            total_batch=float(cand_np[best_i]),
+            batches=np.asarray(best_batches, np.float64),
+            t_star=float(np.asarray(t_stars)[best_i]),
+            t_stars=np.asarray(t_stars, np.float64),
+            goodputs=np.asarray(goodputs, np.float64),
+            b_noise=float(b_noise_dev),
+            sweep_iters=int(sweep_iters),
+        )
+        return result, proposal
+
     def _track_gns(self, obs: GradObservation) -> None:
         """Theorem-4.1 tracker (same guarded update the controller uses).
 
@@ -506,10 +930,22 @@ class RealBackend:
 
     def snapshot(self) -> Dict[str, Any]:
         """The checkpointable pytree: everything that must survive
-        preemption (params, opt-state, GNS state, stream counters)."""
+        preemption (params, opt-state, GNS state, stream counters).
+
+        Sharded mode gathers params/opt-state to host numpy first, so the
+        snapshot (and the PR-7 checkpoint generations built from it) is
+        byte-identical to the single-device layout and restores onto any
+        later mesh."""
+        params, opt_state = self.params, self.opt_state
+        if self.sharded:
+            import jax
+
+            gather = lambda leaf: np.asarray(jax.device_get(leaf))  # noqa: E731
+            params = jax.tree_util.tree_map(gather, params)
+            opt_state = jax.tree_util.tree_map(gather, opt_state)
         return {
-            "params": self.params,
-            "opt_state": self.opt_state,
+            "params": params,
+            "opt_state": opt_state,
             "gns": {
                 "ema_g": np.float64(self.gns.ema_g),
                 "ema_s": np.float64(self.gns.ema_s),
@@ -558,6 +994,7 @@ class RealBackendConfig:
     seq_len: int = 32
     lr: float = 0.3
     gns_decay: float = 0.9
+    sharded: bool = False
 
     def build(
         self, *, noise: float = 0.0, seed: int = 0, injector: Any = None
@@ -576,6 +1013,7 @@ class RealBackendConfig:
             seed=seed,
             gns_decay=self.gns_decay,
             injector=injector,
+            sharded=self.sharded,
         )
 
 
@@ -613,6 +1051,7 @@ def run_backend_epoch(
     epoch_index: int = 0,
     last_measurement: Optional[StepMeasurement] = None,
     fixed_total: Optional[int] = None,
+    fused: bool = False,
 ) -> Tuple[EpochRecord, ExecutionResult]:
     """One plan → execute → observe cycle over any backend.
 
@@ -621,9 +1060,16 @@ def run_backend_epoch(
     (``partition(total, epoch, last_measurement)``).  Returns the unified
     :class:`EpochRecord` plus the raw :class:`ExecutionResult` (callers that
     loop feed ``result.measurements[-1]`` back as ``last_measurement``).
+
+    ``fused=True`` (CannikinController + a backend with ``execute_fused``)
+    runs the epoch as one fused device program: the plan consumes the
+    proposal the *previous* fused epoch staged on device, and this epoch's
+    program stages the next one.  Whenever the controller cannot supply a
+    fused context (bootstrap, jax missing, certification failure) the cycle
+    is exactly the two-program path — bit-compatible fallback.
     """
     if isinstance(policy, CannikinController):
-        plan = policy.plan_epoch()
+        plan = policy.plan_epoch(prefer_fused=fused)
         epoch = plan.epoch
         batches = list(plan.batches)
         total = plan.total_batch
@@ -636,9 +1082,23 @@ def run_backend_epoch(
         total = getattr(policy, "total_batch", None) or fixed_total or 64
         batches = policy.partition(total, epoch, last_measurement)
         lr_scale, predicted, phase = 1.0, None, policy.name
-    result = backend.execute(batches, steps, lr_scale=lr_scale)
+    fused_ctx = None
+    if (
+        fused
+        and isinstance(policy, CannikinController)
+        and hasattr(backend, "execute_fused")
+    ):
+        fused_ctx = policy.fused_context()
+    if fused_ctx is not None:
+        result, proposal = backend.execute_fused(
+            batches, steps, lr_scale=lr_scale, ctx=fused_ctx
+        )
+    else:
+        result, proposal = backend.execute(batches, steps, lr_scale=lr_scale), None
     if isinstance(policy, CannikinController):
         policy.observe_execution(result)
+        if fused_ctx is not None and proposal is not None:
+            policy.stage_fused_proposal(fused_ctx, proposal)
         b_noise = policy.gns.b_noise
     else:
         b_noise = result.b_noise
@@ -672,11 +1132,13 @@ class EpochLoop:
         *,
         steps_per_epoch: int = 8,
         fixed_total: Optional[int] = None,
+        fused: bool = False,
     ) -> None:
         self.policy = policy
         self.backend = backend
         self.steps_per_epoch = steps_per_epoch
         self.fixed_total = fixed_total
+        self.fused = fused
         self.epoch = 0
         self.history: List[EpochRecord] = []
         self._last_measurement: Optional[StepMeasurement] = None
@@ -693,6 +1155,7 @@ class EpochLoop:
             epoch_index=self.epoch,
             last_measurement=self._last_measurement,
             fixed_total=self.fixed_total,
+            fused=self.fused,
         )
         self.epoch += 1
         if result.measurements:

@@ -17,6 +17,7 @@ Logical axes:
   experts    — MoE expert dim                  -> None (experts 2D-sharded via embed/ff)
   cache_seq  — KV-cache sequence dim in decode -> "model" (+ "data" for B=1 long ctx)
   seq        — activation sequence dim         -> None (no sequence parallelism v0)
+  nodes      — heterogeneous-cluster node dim  -> node_axis (RealBackend shard_map)
   None       — replicated
 """
 from __future__ import annotations
@@ -54,6 +55,7 @@ class MeshRules:
     fsdp_axis: Optional[str] = None           # "data" to enable FSDP/ZeRO-3
     cache_seq_axes: Tuple[str, ...] = ("model",)
     experts_axis: Optional[str] = None        # "model" for expert parallelism
+    node_axis: Optional[str] = None           # "nodes" on the RealBackend node mesh
     fallbacks: List[Fallback] = dataclasses.field(default_factory=list)
 
     def _assignment(self, logical: Optional[str]) -> AxisAssignment:
@@ -70,6 +72,7 @@ class MeshRules:
             "cache_seq": self.cache_seq_axes,
             "seq": None,
             "ssm_inner": self.model_axis,
+            "nodes": self.node_axis,
         }
         if logical not in table:
             raise KeyError(f"unknown logical axis {logical!r}")

@@ -23,7 +23,29 @@ from repro.optim.optimizers import Optimizer, global_norm
 
 PyTree = Any
 
-__all__ = ["build_train_step", "build_serve_step", "build_prefill_step"]
+__all__ = [
+    "build_train_step",
+    "build_serve_step",
+    "build_prefill_step",
+    "node_step_specs",
+]
+
+
+def node_step_specs(rules) -> Dict[str, Any]:
+    """PartitionSpecs for the RealBackend's padded per-node batch layout.
+
+    The sharded per-node step lays data out as (n, b_max, seq) with the
+    leading node dim split over the ``nodes`` mesh axis; params and the
+    per-node ratio/validity vectors that feed ``guard_weights`` stay
+    replicated (the guard needs the full (n,) view on every shard).
+    """
+    return {
+        "tokens": rules.spec(["nodes", None, None]),
+        "labels": rules.spec(["nodes", None, None]),
+        "mask": rules.spec(["nodes", None]),
+        "node_vec": rules.spec(["nodes"]),
+        "replicated": rules.spec([]),
+    }
 
 
 def _global_denom(batch: Dict[str, jax.Array]) -> jax.Array:

@@ -196,3 +196,40 @@ def test_waterfill_subset_validates_only_the_subset():
         solve_optperf_waterfill_subset(model, (0, 1), 64)
     with pytest.raises(ValueError):
         solve_optperf_waterfill_subset(model, (), 64)
+
+
+def test_algorithm1_batch_bit_equal_to_scalar_sweep():
+    """The vectorized closed-form boundary checks reproduce the scalar
+    Algorithm 1 sweep bit-for-bit: over seeded random clusters and candidate
+    vectors, every batched row equals the scalar solution (with §4.5 hint
+    chaining) field-for-field -- the scalar path is the exactness oracle."""
+    from repro.core.optperf import solve_optperf_algorithm1_batch
+
+    methods = set()
+    for seed in range(40):
+        rng = np.random.default_rng(31_000 + seed)
+        n = int(rng.integers(2, 12))
+        model = make_model(
+            qs=rng.uniform(1e-4, 8e-3, n),
+            ss=rng.uniform(0.0, 0.02, n),
+            ks=rng.uniform(1e-4, 8e-3, n),
+            ms=rng.uniform(0.0, 0.02, n),
+            t_o=float(10.0 ** rng.uniform(-4, -1)),
+            t_u=float(rng.uniform(0.0, 0.02)),
+            gamma=float(rng.uniform(0.02, 0.6)),
+        )
+        cands = np.unique(np.round(rng.uniform(8, 8192, size=6)))
+        batch = solve_optperf_algorithm1_batch(model, cands)
+        hint = None
+        for j, b in enumerate(cands):
+            ref = solve_optperf_algorithm1(model, float(b), boundary_hint=hint)
+            hint = sum(1 for s in ref.bottleneck if s == "compute")
+            got = batch[j]
+            assert got.total_batch == ref.total_batch
+            assert got.opt_perf == ref.opt_perf          # bit-exact
+            assert got.batches == ref.batches            # bit-exact tuples
+            assert got.bottleneck == ref.bottleneck
+            assert got.method == ref.method
+            methods.add(got.method)
+    # The seeded sweep must actually exercise the vectorized closed forms.
+    assert any(m.startswith("algorithm1/check") for m in methods)

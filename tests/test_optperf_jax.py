@@ -148,3 +148,54 @@ def test_degenerate_beta_node_on_device():
     jx = solve_optperf_batch_jax(model, cands)
     ref = solve_optperf_batch(model, cands)
     np.testing.assert_allclose(jx.opt_perfs, ref.opt_perfs, rtol=1e-5)
+
+
+def test_inplace_refresh_trips_model_stamp():
+    """Regression (stale-cache fix): a model whose node coefficients were
+    refitted in place -- bypassing the frozen-dataclass contract, as an
+    online refit over persistent node objects does -- must not be served
+    the device export recorded before the refresh, even when
+    ``evict_device_coeffs`` was forgotten.  The content stamp recorded at
+    export time is re-checked on every solve and trips the rebuild."""
+    rng = np.random.default_rng(11)
+    model = random_model(rng, 5)
+    cands = np.asarray([64.0, 256.0, 1024.0])
+    before = solve_optperf_batch_jax(model, cands)
+    stale = device_coeffs(model)
+
+    # In-place refit: every node 2x slower.  The refit refreshes the
+    # memoized host views (pops the cached slots) but "forgets" to
+    # invalidate the device export.
+    for node in model.nodes:
+        object.__setattr__(node, "q", node.q * 2.0)
+        object.__setattr__(node, "k", node.k * 2.0)
+    for slot in ("coeffs", "_optperf_problem", "_validated"):
+        model.__dict__.pop(slot, None)
+
+    after = solve_optperf_batch_jax(model, cands)
+    assert device_coeffs(model) is not stale   # stamp forced a re-export
+    oracle = solve_optperf_batch(model, cands)
+    np.testing.assert_allclose(after.opt_perfs, oracle.opt_perfs, rtol=1e-5)
+    # The refresh really changed the answers (a stale export would not).
+    assert float(np.min(after.opt_perfs / before.opt_perfs)) > 1.3
+
+
+def test_warm_sweep_no_recompile_across_epochs():
+    """The donated-bracket warm sweep compiles once, then re-drives the same
+    executable for 10 drifting-model epochs at fixed (C, n) shapes with zero
+    jit cache misses -- the controller's epoch-over-epoch resolve (and the
+    fused epoch program built on the same kernels) relies on this."""
+    from repro.core import optperf_jax
+
+    optperf_jax._device_sweep.cache_clear()
+    cands = np.linspace(64.0, 2048.0, 8)
+    t_seed = solve_optperf_batch_jax(
+        random_model(np.random.default_rng(500), 6), cands
+    ).t_stars
+    fn = optperf_jax._device_sweep(64, True)
+    assert fn._cache_size() == 0
+    for epoch in range(10):
+        model = random_model(np.random.default_rng(501 + epoch), 6)
+        sol = solve_optperf_batch_jax(model, cands, warm_start=t_seed)
+        t_seed = sol.t_stars
+    assert fn._cache_size() == 1  # one trace, ten warm epochs

@@ -168,3 +168,36 @@ def test_jax_scheduler_incremental_matches_full():
     assert inc.assignment == full.assignment
     for name in full.goodputs:
         assert inc.goodputs[name] == pytest.approx(full.goodputs[name], rel=1e-12)
+
+
+def test_inplace_refresh_without_invalidate_trips_stack_stamp():
+    """Regression (stale-cache fix): an in-place coefficient refresh that
+    forgets ``invalidate_device_cache()`` must no longer serve stale device
+    coefficients -- the content stamp recorded at export time is re-checked
+    on every solve."""
+    rng = np.random.default_rng(83)
+    _, stack, totals = ragged_stack(rng, rows=4)
+    mutable = {
+        name: np.array(getattr(stack, name))
+        for name in ("alphas", "cs", "betas", "ds", "ks", "ms")
+    }
+    refreshed = StackedClusterModel(
+        t_o=stack.t_o, t_u=stack.t_u, gamma=stack.gamma, mask=stack.mask,
+        **mutable,
+    )
+    before = solve_optperf_stacked_jax(refreshed, totals)
+    stale = stacked_device_coeffs(refreshed)
+    for name in ("alphas", "cs", "betas", "ds"):
+        mutable[name] *= 2.0
+    # NO invalidate_device_cache() here -- the stamp must catch it.
+    after = solve_optperf_stacked_jax(refreshed, totals)
+    assert stacked_device_coeffs(refreshed) is not stale
+    fresh = solve_optperf_stacked_jax(
+        StackedClusterModel(
+            t_o=stack.t_o, t_u=stack.t_u, gamma=stack.gamma, mask=stack.mask,
+            **{k: np.array(v) for k, v in mutable.items()},
+        ),
+        totals,
+    )
+    np.testing.assert_allclose(after.opt_perfs, fresh.opt_perfs, rtol=1e-6)
+    assert float(np.min(after.opt_perfs / before.opt_perfs)) > 1.5
